@@ -1,0 +1,47 @@
+"""Paper Table 3 ablation: interval 𝒩 ∈ {3..7} and order 𝒟 ∈ {0,1,2}.
+
+Expected directions (verified on the reduced pipeline): fidelity decreases
+with 𝒩; 𝒟=1 ≥ 𝒟=0 (first-order forecasting beats plain reuse); 𝒟=2 adds
+little or regresses (the paper's 'limits of simulation' finding)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import psnr
+from repro.configs.registry import get_smoke
+from repro.core.engine import EngineConfig
+from repro.core.masks import MaskConfig
+from repro.diffusion.pipeline import SamplerConfig, sample
+from repro.models import dit
+
+
+def _ecfg(interval, order):
+    return EngineConfig(mask=MaskConfig(
+        tau_q=0.5, tau_kv=0.15, interval=interval, order=order, degrade=0.0,
+        block_q=16, block_kv=16, pool=32, warmup_steps=2),
+        cache_dtype=jnp.float32)
+
+
+def run(csv: list, *, steps: int = 14, nv: int = 96):
+    cfg = get_smoke("flux-mmdit")
+    params = dit.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+    x0 = jax.random.normal(key, (1, nv, cfg.patch_dim))
+    text = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, cfg.n_text_tokens, cfg.d_model))
+    scfg = SamplerConfig(num_steps=steps)
+    dense = sample(params, cfg, _ecfg(4, 1), text_emb=text, x0=x0, scfg=scfg,
+                   force_dense=True)
+
+    for interval in [3, 4, 5, 6, 7]:
+        out = sample(params, cfg, _ecfg(interval, 1), text_emb=text, x0=x0,
+                     scfg=scfg)
+        csv.append({"name": f"table3_N{interval}_D1", "us_per_call": 0.0,
+                    "derived": f"psnr={psnr(out, dense):.2f}"})
+    for order in [0, 1, 2]:
+        out = sample(params, cfg, _ecfg(5, order), text_emb=text, x0=x0,
+                     scfg=scfg)
+        csv.append({"name": f"table3_N5_D{order}", "us_per_call": 0.0,
+                    "derived": f"psnr={psnr(out, dense):.2f}"})

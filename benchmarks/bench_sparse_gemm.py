@@ -1,0 +1,59 @@
+"""Paper Fig. 6 (left) / Fig. 11: GEMM-Q and GEMM-O speedup vs sparsity.
+
+GEMM-Q sparsity lives on the spatial axis (skip cached row blocks);
+GEMM-O on the reduction axis (cached heads arrive via the bias).  Measured
+on the structural XLA paths; theory = 1/(1−s) for GEMM-Q and for a single
+GEMM-O invocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import flops_of, time_fn
+from repro.core.sparse_gemm import gemm_o_sparse, gemm_q_sparse
+
+
+def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128):
+    t = n // block
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (1, n, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, f), jnp.float32)
+
+    dense_q = jax.jit(lambda x, w: jnp.einsum("bnd,df->bnf", x, w))
+    t_dense = time_fn(dense_q, x, w)
+
+    for s in [0.25, 0.5, 0.75]:
+        keep = max(1, round(t * (1 - s)))
+        mask = jnp.zeros((1, t), bool).at[:, :keep].set(True)
+        fn = jax.jit(lambda x, w, m: gemm_q_sparse(x, w, m, block=block, cap=keep))
+        t_s = time_fn(fn, x, w, mask)
+        s_real = 1 - keep / t
+        csv.append({"name": f"fig6_gemm_q_s{s}", "us_per_call": t_s * 1e6,
+                    "derived": (f"sparsity={s_real:.3f}"
+                                f" speedup_time={t_dense / t_s:.2f}"
+                                f" theory={1 / max(1 - s_real, 1e-9):.2f}")})
+
+    # GEMM-O: reduction-axis (head) sparsity + spatial sparsity of dead rows.
+    dh = d // h
+    oh = jax.random.normal(ks[2], (1, n, h, dh), jnp.float32)
+    wh = jax.random.normal(ks[3], (h, dh, f), jnp.float32)
+    bias = jax.random.normal(ks[4], (1, n, f), jnp.float32)
+    dense_o = jax.jit(lambda o, w: jnp.einsum("bnhd,hdf->bnf", o, w))
+    t_dense_o = time_fn(dense_o, oh, wh)
+    for s in [0.25, 0.5, 0.75]:
+        keep_rows = max(1, round(t * (1 - s)))
+        m_ch = jnp.zeros((1, t, h), bool).at[:, :keep_rows, :].set(True)
+        fn = jax.jit(lambda o, w, m, b: gemm_o_sparse(o, w, m, b, block=block,
+                                                      cap=keep_rows))
+        t_s = time_fn(fn, oh, wh, m_ch, bias)
+        s_real = 1 - keep_rows / t
+        csv.append({"name": f"fig6_gemm_o_s{s}", "us_per_call": t_s * 1e6,
+                    "derived": (f"sparsity={s_real:.3f}"
+                                f" speedup_time={t_dense_o / t_s:.2f}"
+                                f" theory={1 / max(1 - s_real, 1e-9):.2f}")})
+    csv.append({"name": "fig6_gemm_dense_baselines",
+                "us_per_call": t_dense * 1e6,
+                "derived": f"gemm_o_dense_us={t_dense_o * 1e6:.1f}"})

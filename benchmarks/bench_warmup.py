@@ -1,0 +1,41 @@
+"""Paper Fig. 9 (A.1.3): fidelity vs warmup-step count.  FlashOmni's claim:
+it degrades gracefully at low warmup where cache-everything (TaylorSeer)
+collapses."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import psnr
+from repro.configs.registry import get_smoke
+from repro.core.engine import EngineConfig
+from repro.core.masks import MaskConfig
+from repro.diffusion.pipeline import SamplerConfig, sample
+from repro.models import dit
+
+
+def _ecfg(warmup, tau_q):
+    return EngineConfig(mask=MaskConfig(
+        tau_q=tau_q, tau_kv=0.1, interval=4, order=1, degrade=0.0,
+        block_q=16, block_kv=16, pool=32, warmup_steps=warmup),
+        cache_dtype=jnp.float32)
+
+
+def run(csv: list, *, steps: int = 12, nv: int = 96):
+    cfg = get_smoke("flux-mmdit")
+    params = dit.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(13)
+    x0 = jax.random.normal(key, (1, nv, cfg.patch_dim))
+    text = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, cfg.n_text_tokens, cfg.d_model))
+    scfg = SamplerConfig(num_steps=steps)
+    dense = sample(params, cfg, _ecfg(2, 0.5), text_emb=text, x0=x0, scfg=scfg,
+                   force_dense=True)
+    for warmup in [1, 2, 3, 4]:
+        for name, tq in [("flashomni", 0.5), ("taylorseer", 1.0)]:
+            out = sample(params, cfg, _ecfg(warmup, tq), text_emb=text, x0=x0,
+                         scfg=scfg)
+            csv.append({"name": f"fig9_warmup{warmup}_{name}",
+                        "us_per_call": 0.0,
+                        "derived": f"psnr={psnr(out, dense):.2f}"})

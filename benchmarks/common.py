@@ -1,0 +1,46 @@
+"""Benchmark utilities: wall-clock timing of jitted callables + FLOP
+accounting helpers shared across the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["time_fn", "psnr", "flops_of", "GEMM_O_THEORY"]
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds of a jitted fn (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def psnr(a, b) -> float:
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    mse = float(np.mean((a - b) ** 2))
+    rng = float(np.max(np.abs(b))) or 1.0
+    return 10 * np.log10(rng * rng / max(mse, 1e-12))
+
+
+def flops_of(fn, *args) -> float:
+    """Per-device HLO FLOPs of a jitted callable (cost analysis)."""
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    return float(c.get("flops", 0.0))
+
+
+def GEMM_O_THEORY(n_interval: int, s: float) -> float:
+    """Paper A.1.2: window speedup = 𝒩 / (1 + (𝒩−1)(1−s))."""
+    return n_interval / (1.0 + (n_interval - 1) * (1.0 - s))

@@ -1,0 +1,130 @@
+"""Roofline analysis over the dry-run artifacts (task spec §Roofline).
+
+    compute    = HLO_FLOPs_per_device / 197e12           [s]   (bf16 MXU)
+    memory     = HLO_bytes_per_device / 819e9            [s]   (HBM)
+    collective = collective_bytes_per_device / 50e9      [s]   (ICI, per link)
+
+The SPMD module is per-device, so cost_analysis FLOPs/bytes and the parsed
+collective operand bytes are already per-chip.  MODEL_FLOPS = 6·N·D for
+dense training (N params, D tokens), 6·N_active·D for MoE, 2·N·D for
+forward-only serving.  ``roofline_fraction`` = time the chip would need for
+the pure model math / time the dominant term actually binds — the §Perf
+score.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.roofline [--dir artifacts/dryrun]
+writes artifacts/roofline.md + returns rows for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link
+
+COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+def model_flops_per_device(rec: dict) -> float:
+    n_act = rec["n_active_params"]
+    chips = rec["n_devices"]
+    if rec["entry"] == "train_step":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 6.0 * n_act * tokens / chips
+    if rec["entry"] == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 2.0 * n_act * tokens / chips
+    if rec["entry"].startswith("denoise"):
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 2.0 * n_act * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_act * rec["global_batch"] / chips
+
+
+def analyse(rec: dict) -> dict:
+    flops = rec["flops_per_device"] or 0.0
+    byts = rec["bytes_per_device"] or 0.0
+    coll = sum(rec["collective_bytes"].get(k, 0) for k in COLL_KINDS)
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    # The cell's own roofline lower bound: the chip must at least do the
+    # model math AND stream every live argument/output through HBM once.
+    mem = rec.get("memory_analysis", {})
+    min_bytes = (mem.get("argument_size_in_bytes") or 0) + \
+        (mem.get("output_size_in_bytes") or 0)
+    ideal = max(mf / PEAK_FLOPS, min_bytes / HBM_BW)
+    dom_t = max(terms.values()) or 1e-30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "entry": rec["entry"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "ideal_s": ideal,
+        "roofline_fraction": ideal / dom_t,
+        "step_time_bound_s": dom_t,
+        "arg_bytes": mem.get("argument_size_in_bytes"),
+    }
+
+
+def load_all(d: Path, mesh: str = "pod16x16", *, unrolled_only: bool = True
+             ) -> list[dict]:
+    """Prefer the unrolled (exact-cost) artifact for each cell."""
+    recs: dict = {}
+    for p in sorted(d.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec["mesh"] != mesh or "__update" in p.stem:
+            continue
+        key = (rec["arch"], rec["shape"])
+        if rec.get("unrolled") or key not in recs:
+            if unrolled_only and not rec.get("unrolled") and key in recs:
+                continue
+            recs[key] = rec
+    return [analyse(r) for r in recs.values()]
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | dom | compute s | memory s | collective s | "
+           "MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['dominant'][:4]} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    rows = load_all(Path(args.dir), args.mesh)
+    print(fmt_table(rows))
+    worst = sorted((r for r in rows if r["roofline_fraction"] > 0),
+                   key=lambda r: r["roofline_fraction"])[:5]
+    coll = sorted(rows, key=lambda r: -r["t_collective_s"])[:5]
+    print("\nWorst roofline fraction:")
+    for r in worst:
+        print(f"  {r['arch']} {r['shape']}: {r['roofline_fraction']:.3f} "
+              f"(dom {r['dominant']})")
+    print("Most collective-bound:")
+    for r in coll:
+        print(f"  {r['arch']} {r['shape']}: collective {r['t_collective_s']:.2e}s "
+              f"vs dom {r['dominant']}")
+    Path("artifacts/roofline.md").write_text(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (task spec)."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation, bench_attention_sparsity,
+                            bench_density, bench_e2e_quality,
+                            bench_e2e_speedup, bench_gemm_o_interval,
+                            bench_sparse_gemm, bench_warmup)
+
+    suites = [
+        ("fig6/fig10 attention", bench_attention_sparsity.run),
+        ("fig6/fig11 sparse GEMMs", bench_sparse_gemm.run),
+        ("fig8/A.1.2 GEMM-O interval", bench_gemm_o_interval.run),
+        ("table1/2 e2e quality", bench_e2e_quality.run),
+        ("table3 ablation", bench_ablation.run),
+        ("fig7 density", bench_density.run),
+        ("fig1 e2e speedup", bench_e2e_speedup.run),
+        ("fig9 warmup", bench_warmup.run),
+    ]
+    csv: list[dict] = []
+    print("name,us_per_call,derived")
+    for label, fn in suites:
+        t0 = time.time()
+        start = len(csv)
+        fn(csv)
+        for row in csv[start:]:
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        print(f"# suite [{label}] done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Baseline sparsity strategies (paper §4.1 comparison set), all expressed
+through the SAME engine config space — the unification claim in practice:
+
+  FORA          — cache everything, plain reuse (𝒟=0), refresh every 𝒩
+  TaylorSeer    — cache everything, order-𝒟 forecast
+  ToCa-like     — token-importance caching (column-mass metric only)
+  SpargeAttn    — block-sparse skipping only (no caching)
+  DiTFastAttnV2 — static sliding-window S_s only
+  FlashOmni     — C∧G caching + BSS + sparse GEMMs (the paper's engine)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.engine import EngineConfig
+from repro.core.masks import MaskConfig
+
+__all__ = ["strategy_configs"]
+
+_BASE = dict(interval=4, block_q=16, block_kv=16, pool=16, warmup_steps=2,
+             degrade=0.0)
+
+
+def strategy_configs(interval: int = 4, order: int = 1) -> dict[str, EngineConfig]:
+    base = dict(_BASE, interval=interval)
+    # capacity fracs 1.0: let each strategy's OWN selection rule set the
+    # sparsity level (the static-capacity clamp is a deployment knob, not
+    # part of the algorithm comparison).
+    mk = lambda **kw: EngineConfig(
+        mask=MaskConfig(**{**base, **kw}), cache_dtype=jnp.float32,
+        cap_q_frac=1.0, cap_kv_frac=1.0)
+    return {
+        # cache-everything family: tau_q=1 selects all blocks by mass rule
+        "FORA": mk(tau_q=1.0, tau_kv=0.0, order=0),
+        "TaylorSeer": mk(tau_q=1.0, tau_kv=0.0, order=order),
+        "ToCa-like": mk(tau_q=0.6, tau_kv=0.0, order=0),
+        "SpargeAttn-like": mk(tau_q=0.0, tau_kv=0.2, order=0),
+        "FlashOmni": mk(tau_q=0.5, tau_kv=0.15, order=order),
+        "FlashOmni-aggressive": mk(tau_q=0.7, tau_kv=0.25, order=order),
+    }

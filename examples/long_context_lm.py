@@ -1,0 +1,53 @@
+"""Example: long-context LM decode with FlashOmni block-sparse KV selection.
+
+Shows the LM-serving adaptation of the paper's ``S_s`` symbol: the decode
+step gathers only the most-relevant KV-cache blocks (by pooled-key scoring
+against the current query), matching full attention closely at a fraction
+of the cache reads — the mechanism behind the ``long_500k`` grid cells.
+
+Usage:  PYTHONPATH=src python examples/long_context_lm.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import sparse_decode_attention
+from repro.core.masks import pool_tokens
+from repro.core.symbols import active_indices, clamp_mask_topk
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    B, H, S, dh = 2, 4, 8192, 64
+    block = 64
+    t = S // block
+    ks = jax.random.split(key, 4)
+    k_cache = jax.random.normal(ks[0], (B * H, S, dh))
+    v_cache = jax.random.normal(ks[1], (B * H, S, dh))
+    q = jax.random.normal(ks[2], (B * H, 1, dh))
+    # Plant realistic structure: trained attention concentrates on a few
+    # regions; make ~12% of blocks strongly query-aligned.
+    hot = jax.random.bernoulli(ks[3], 0.12, (B * H, S // block))
+    hot_tok = jnp.repeat(hot, block, axis=-1)[..., None]
+    k_cache = jnp.where(hot_tok, k_cache * 0.3 + q * 1.2, k_cache * 0.3)
+
+    # score KV blocks by pooled-key affinity to the current query
+    kp = pool_tokens(k_cache, block)                       # (BH, T, dh)
+    scores = jnp.einsum("bnd,btd->bt", q[:, 0:1], kp)      # (BH, T)
+    keep_frac = 0.25
+    cap = max(int(t * keep_frac), 1)
+    keep = clamp_mask_topk(jnp.ones_like(scores, bool), scores, cap)
+    kv_ids, kv_cnt = active_indices(keep, cap)
+
+    sparse = sparse_decode_attention(q, k_cache, v_cache, kv_ids, kv_cnt, block)
+    s = jnp.einsum("bnd,bsd->bns", q, k_cache) * dh ** -0.5
+    dense = jnp.einsum("bns,bsd->bnd", jax.nn.softmax(s, -1), v_cache)
+    rel = float(jnp.linalg.norm(sparse - dense) / jnp.linalg.norm(dense))
+    print(f"context {S} tokens, reading {keep_frac:.0%} of KV blocks")
+    print(f"relative error vs full attention: {rel:.4f}")
+    print(f"cache reads reduced {1 / keep_frac:.0f}x "
+          f"(decode is HBM-bound -> ~{1 / keep_frac:.0f}x step speedup)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""FlashOmni quickstart: the Update–Dispatch engine on one attention layer.
+
+Runs on CPU in a few seconds:
+  1. builds an MMDiT-style joint attention layer (text + vision tokens);
+  2. Update step: full attention, sparse symbols refreshed from Q/K;
+  3. Dispatch step: sparse attention guided by the packed uint8 symbols;
+  4. shows the packed symbols, realized sparsity, and fidelity vs dense;
+  5. cross-checks the Pallas kernel (interpret mode) against the oracle.
+
+Usage:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AttnParams, EngineConfig, MaskConfig, dispatch_layer,
+                        init_layer_state, update_layer)
+from repro.core.symbols import unpack_bits
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    B, H, N, dm, dh, n_text = 1, 4, 512, 128, 32, 128
+    cfg = EngineConfig(
+        mask=MaskConfig(tau_q=0.5, tau_kv=0.05, interval=5, order=1,
+                        block_q=32, block_kv=32, pool=64, warmup_steps=1),
+        cache_dtype=jnp.float32)
+    ks = jax.random.split(key, 6)
+    params = AttnParams(
+        wq=jax.random.normal(ks[0], (dm, H * dh)) * dm ** -0.5,
+        wk=jax.random.normal(ks[1], (dm, H * dh)) * dm ** -0.5,
+        wv=jax.random.normal(ks[2], (dm, H * dh)) * dm ** -0.5,
+        wo=jax.random.normal(ks[3], (H * dh, dm)) * (H * dh) ** -0.5,
+        q_scale=jnp.ones(dh), k_scale=jnp.ones(dh))
+    x = jax.random.normal(ks[4], (B, N, dm))
+    state = init_layer_state(B, H, N, dm, dh, cfg)
+
+    # --- Update: full attention + symbol refresh (paper Fig. 4 left) ---
+    out_u, state = update_layer(params, x, state, cfg, n_text=n_text, heads=H)
+    t = cfg.mask.n_blocks(N)
+    m_c = unpack_bits(state.s_c, t)
+    print(f"S_c packed bytes (head 0): {state.s_c[0, 0].tolist()}")
+    print(f"caching mask (head 0)    : {m_c[0, 0].astype(int).tolist()} "
+          f"(1 = compute, 0 = cache-then-reuse)")
+    print(f"live fraction            : {float(m_c.mean()):.2f}")
+
+    # --- Dispatch: sparse execution guided by the frozen symbols ---
+    x2 = x + 0.02 * jax.random.normal(ks[5], x.shape)   # next denoising step
+    out_d, state = dispatch_layer(params, x2, state, cfg, n_text=n_text, heads=H)
+    ref, _ = update_layer(params, x2, init_layer_state(B, H, N, dm, dh, cfg),
+                          cfg, n_text=n_text, heads=H)
+    rel = float(jnp.linalg.norm(out_d - ref) / jnp.linalg.norm(ref))
+    print(f"dispatch vs full-attention relative error: {rel:.4f}")
+    print("  (random weights make attention near-uniform, the worst case for")
+    print("   sparsity; on trained DiTs the skipped mass is ~0 — see tests/)")
+
+    # --- Pallas kernel vs oracle (interpret mode on CPU) ---
+    from repro.kernels import ops, ref as kref
+    q = jax.random.normal(ks[0], (H, N, dh))
+    k = jax.random.normal(ks[1], (H, N, dh))
+    v = jax.random.normal(ks[2], (H, N, dh))
+    o_reuse = jnp.zeros((H, N, dh))
+    tq = N // 32
+    m_c_blk = jax.random.bernoulli(ks[3], 0.6, (H, tq))
+    m_s_blk = jax.random.bernoulli(ks[4], 0.8, (H, tq, tq)).at[..., 0].set(True)
+    got = ops.flashomni_attention(q, k, v, m_c_blk, m_s_blk, o_reuse,
+                                  block_q=32, block_kv=32)
+    want = kref.attention_ref(q, k, v, m_c_blk, m_s_blk, o_reuse,
+                              block_q=32, block_kv=32)
+    print(f"Pallas CSR kernel max |err| vs oracle: "
+          f"{float(jnp.max(jnp.abs(got - want))):.2e}")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

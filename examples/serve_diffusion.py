@@ -1,0 +1,23 @@
+"""Example: serve batched text-to-vision requests through the FlashOmni
+Update–Dispatch sampler (the paper's deployment scenario).
+
+Usage:  PYTHONPATH=src python examples/serve_diffusion.py [--steps 12]
+"""
+
+import argparse
+
+from repro.launch.serve import serve_diffusion
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hunyuan-video-dit")
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=2)
+    args = ap.parse_args()
+    serve_diffusion(args.arch, smoke=True, num_requests=args.requests,
+                    num_steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

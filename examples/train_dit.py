@@ -1,0 +1,77 @@
+"""Example: end-to-end training driver — train an MMDiT on the synthetic
+flow-matching task for a few hundred steps with the full production loop
+(AdamW + cosine schedule, async checkpointing, watchdog, restart-capable).
+
+The default config is ~100M params; on this CPU container use ``--dim 256
+--layers 8`` (~13M) for a quick run.  Loss should decrease visibly.
+
+Usage:
+  PYTHONPATH=src python examples/train_dit.py --steps 200 --dim 256 --layers 8
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.synthetic import DataConfig, make_batch
+from repro.models import dit
+from repro.optim.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.runtime.fault_tolerance import RestartableLoop, StepWatchdog
+
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dim", type=int, default=768)       # 768x12 ≈ 100M
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--n-vision", type=int, default=64)
+    ap.add_argument("--ckpt", default="artifacts/ckpt/train_dit")
+    args = ap.parse_args()
+
+    cfg = ArchConfig(name="dit-train", family="dit", n_layers=args.layers,
+                     d_model=args.dim, n_heads=max(args.dim // 64, 1),
+                     n_kv_heads=max(args.dim // 64, 1), d_ff=4 * args.dim,
+                     vocab=0, head_dim=64, n_text_tokens=16, patch_dim=16,
+                     remat=False)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda: dit.init_params(cfg, jax.random.PRNGKey(0)))))
+    print(f"[train_dit] {n_params/1e6:.1f}M params, {args.steps} steps")
+
+    params = dit.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+    opt_state = adamw_init(params)
+    dcfg = DataConfig(seed=0, batch=args.batch, seq_len=args.n_vision)
+
+    @jax.jit
+    def _step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: dit.train_loss(p, cfg, batch, dtype=jnp.float32))(params)
+        new_p, new_o, gnorm = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_p, new_o, loss, gnorm
+
+    def step_fn(state, step):
+        p, o = state
+        batch = make_batch(cfg, dcfg, step)
+        p, o, loss, gnorm = _step(p, o, batch)
+        if step % 20 == 0:
+            print(f"  step {step:4d}  loss {float(loss):.5f}  "
+                  f"gnorm {float(gnorm):.3f}")
+        return (p, o), {"loss": float(loss)}
+
+    loop = RestartableLoop(Checkpointer(args.ckpt, keep=2), ckpt_every=50)
+    state, result = loop.run((params, opt_state), step_fn, args.steps,
+                             watchdog=StepWatchdog())
+    losses = [m["loss"] for m in result.metrics]
+    print(f"[train_dit] loss {losses[0]:.5f} -> {losses[-1]:.5f} "
+          f"({result.final_step} steps, restarts={result.restarts})")
+    assert losses[-1] < losses[0], "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

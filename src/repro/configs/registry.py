@@ -1,0 +1,51 @@
+"""Config registry: ``--arch <id>`` resolution for launchers and tests."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke", "arch_shapes"]
+
+ARCH_IDS = [
+    "gemma3-1b", "granite-8b", "llama3-405b", "gemma3-12b", "mixtral-8x22b",
+    "granite-moe-3b-a800m", "mamba2-370m", "whisper-large-v3",
+    "llama-3.2-vision-11b", "recurrentgemma-2b",
+    # the paper's own archs
+    "flux-mmdit", "hunyuan-video-dit",
+]
+
+_MODULES = {
+    "gemma3-1b": "gemma3_1b", "granite-8b": "granite_8b",
+    "llama3-405b": "llama3_405b", "gemma3-12b": "gemma3_12b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mamba2-370m": "mamba2_370m", "whisper-large-v3": "whisper_large_v3",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "flux-mmdit": "flux_mmdit", "hunyuan-video-dit": "hunyuan_video",
+}
+
+
+def _module(arch: str):
+    key = arch if arch in _MODULES else arch.replace("_", "-")
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[key]}")
+
+
+def get_config(arch: str) -> ArchConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ArchConfig:
+    return _module(arch).SMOKE
+
+
+def arch_shapes(cfg: ArchConfig) -> list[ShapeSpec]:
+    """The shape-grid cells this arch runs (after DESIGN §4 skips)."""
+    if cfg.family == "dit":
+        return [ShapeSpec("dit_serve", cfg.n_text_tokens +
+                          (4096 if "flux" in cfg.name else 32768), 1, "dit")]
+    return [s for s in SHAPES.values() if s.name not in cfg.skip_shapes]

@@ -1,0 +1,27 @@
+"""FlashOmni core: unified sparse symbols, mask generation, TaylorSeer
+forecasting, sparse attention/GEMM (XLA structural paths) and the
+Update–Dispatch engine (the paper's primary contribution)."""
+
+from repro.core.masks import MaskConfig
+from repro.core.engine import (
+    AttnParams,
+    EngineConfig,
+    LayerState,
+    dispatch_layer,
+    init_layer_state,
+    is_update_step,
+    update_layer,
+)
+from repro.core.attention import SparseAttentionSpec
+
+__all__ = [
+    "MaskConfig",
+    "EngineConfig",
+    "AttnParams",
+    "LayerState",
+    "SparseAttentionSpec",
+    "init_layer_state",
+    "is_update_step",
+    "update_layer",
+    "dispatch_layer",
+]

@@ -1,0 +1,312 @@
+"""FlashOmni Update–Dispatch engine (paper §3.2, Fig. 4).
+
+The engine owns, per attention layer, the packed sparse symbols, the
+TaylorSeer cache state and the GEMM-O cache bias, and exposes two step
+functions over a generic attention module:
+
+  * :func:`update_layer`   — full attention; refresh ``S_c``/``S_s`` from the
+    fresh Q/K (mask generation of §3.3), refresh the TaylorSeer derivative
+    stack and the GEMM-O bias ``B_c`` (stage 1 of §3.5).
+  * :func:`dispatch_layer` — sparse execution guided by the frozen symbols:
+    GEMM-Q skips cached row blocks, attention runs the structural sparse
+    path (or the Pallas kernel on TPU), GEMM-O projects live heads and adds
+    the Taylor-forecast bias.
+
+Two cache modes (DESIGN §2.3/§2.4):
+  * ``"bias"``    — paper-optimized: cache B_c in output space; cached
+    blocks never touch the attention kernel (Eq. 4 makes this exact).
+  * ``"o_cache"`` — paper-base: cache per-head attention outputs Õ and let
+    the attention kernel's cache-then-reuse branch fill them.
+
+Symbols are stored at the *compressed* granularity (pool = n·b) exactly as
+in the paper (decode ``F(S_c, i) = (S_c >> i/n) & 1``), and expanded to
+kernel-block granularity on use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masklib
+from repro.core import sparse_gemm, taylorseer
+from repro.core.attention import SparseAttentionSpec, dense_attention, sparse_attention_xla
+from repro.core.masks import MaskConfig
+from repro.core.symbols import (
+    active_indices,
+    capacity_for,
+    clamp_mask_topk,
+    pack_bits,
+    packed_len,
+    unpack_bits,
+)
+
+__all__ = [
+    "EngineConfig",
+    "LayerState",
+    "AttnParams",
+    "init_layer_state",
+    "is_update_step",
+    "update_layer",
+    "dispatch_layer",
+    "rms_norm",
+    "apply_rope",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine configuration = paper tuple (τ_q, τ_kv, 𝒩, 𝒟, S_q) + statics."""
+
+    mask: MaskConfig = MaskConfig()
+    cache_mode: str = "bias"          # "bias" | "o_cache"
+    cap_q_frac: float = 0.75          # static live-Q capacity fraction
+    cap_kv_frac: float = 0.9          # static KV-union capacity fraction
+    use_gemm_q: bool = True
+    use_gemm_o: bool = True
+    cache_dtype: jnp.dtype = jnp.bfloat16
+
+    # Capacity bookkeeping.  The single source of truth is the COMPRESSED
+    # granularity capacity (symbols live there); block-granularity caps are
+    # exact multiples so no live block can overflow the attention gather.
+    def cap_q_cmp(self, n_tokens: int) -> int:
+        return capacity_for(self.mask.n_blocks(n_tokens), self.cap_q_frac, quantum=1)
+
+    def cap_kv_cmp(self, n_kv: int) -> int:
+        return capacity_for(self.mask.n_blocks(n_kv), self.cap_kv_frac, quantum=1)
+
+    def caps(self, n_tokens: int, n_kv: Optional[int] = None) -> SparseAttentionSpec:
+        n_kv = n_tokens if n_kv is None else n_kv
+        m = self.mask
+        t_q = -(-n_tokens // m.block_q)
+        t_kv = -(-n_kv // m.block_kv)
+        fq, fk = m.pool // m.block_q, m.pool // m.block_kv
+        return SparseAttentionSpec(
+            block_q=m.block_q,
+            block_kv=m.block_kv,
+            cap_q=min(self.cap_q_cmp(n_tokens) * fq, t_q),
+            cap_kv=min(self.cap_kv_cmp(n_kv) * fk, t_kv),
+        )
+
+
+class AttnParams(NamedTuple):
+    """Weights of one attention module (MMDiT joint-attention style)."""
+
+    wq: jax.Array            # (dm, H*dh)
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array            # (H*dh, dm)
+    q_scale: jax.Array       # (dh,) RMSNorm scales (token-local, Obs. 2)
+    k_scale: jax.Array
+
+
+class LayerState(NamedTuple):
+    """Per-layer engine state carried across denoising steps (a pytree)."""
+
+    s_c: jax.Array                 # (B, H, cmp_bytes) uint8 — caching symbol
+    s_s: jax.Array                 # (B, H, flat_bytes) uint8 — skipping symbol
+    taylor: taylorseer.TaylorState  # over B_c (bias mode) or Õ (o_cache mode)
+    k_since: jax.Array             # int32 — dispatch offset since last Update
+
+
+def init_layer_state(
+    batch: int, heads: int, n_tokens: int, d_model: int, head_dim: int, cfg: EngineConfig
+) -> LayerState:
+    t = cfg.mask.n_blocks(n_tokens)
+    cbytes = packed_len(t)
+    fbytes = packed_len(t * t)
+    if cfg.cache_mode == "bias":
+        feat = (batch, n_tokens, d_model)
+    else:
+        feat = (batch, heads, n_tokens, head_dim)
+    return LayerState(
+        s_c=jnp.full((batch, heads, cbytes), 255, jnp.uint8),
+        s_s=jnp.full((batch, heads, fbytes), 255, jnp.uint8),
+        taylor=taylorseer.init_state(feat, cfg.mask.order, cfg.cache_dtype),
+        k_since=jnp.zeros((), jnp.int32),
+    )
+
+
+def is_update_step(step: int, cfg: EngineConfig) -> bool:
+    """Python-level Update/Dispatch schedule (steps are separate jit calls)."""
+    m = cfg.mask
+    if step < m.warmup_steps:
+        return True
+    return (step - m.warmup_steps) % m.interval == 0
+
+
+# ---------------------------------------------------------------------------
+# Token-local pre-attention ops (Obs. 2: these commute with row skipping).
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def rope_freqs(n: int, dim: int, theta: float = 10000.0) -> jax.Array:
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    t = jnp.arange(n, dtype=jnp.float32)
+    return jnp.outer(t, inv)  # (n, dim//2)
+
+
+def apply_rope(x: jax.Array, freqs: jax.Array) -> jax.Array:
+    """x: (..., N, dh); freqs: (N, dh//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos, sin = jnp.cos(freqs), jnp.sin(freqs)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _project_heads(x: jax.Array, w: jax.Array, heads: int) -> jax.Array:
+    """(B, N, dm) @ (dm, H*dh) -> (B, H, N, dh)."""
+    y = jnp.einsum("bnd,df->bnf", x, w)
+    b, n = x.shape[:2]
+    return y.reshape(b, n, heads, -1).transpose(0, 2, 1, 3)
+
+
+def _qk(params: AttnParams, x: jax.Array, heads: int, freqs: Optional[jax.Array]):
+    q = rms_norm(_project_heads(x, params.wq, heads), params.q_scale)
+    k = rms_norm(_project_heads(x, params.wk, heads), params.k_scale)
+    if freqs is not None:
+        q, k = apply_rope(q, freqs), apply_rope(k, freqs)
+    return q, k
+
+
+def refresh_symbols(q: jax.Array, k: jax.Array, cfg: EngineConfig, n_text: int,
+                    n_tokens: int) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Generate and pack fresh symbols from Update-step Q/K.
+
+    Returns ``(s_c, s_s, m_c, m_s)`` — packed uint8 symbols plus the
+    unpacked compressed-granularity masks (True = compute).
+    """
+    m = cfg.mask
+    m_c = masklib.make_caching_mask(q, k, m, n_text)
+    m_c = masklib.apply_degradation(m_c, m.degrade)
+    # Static-capacity clamp on live blocks, ranked by total column mass.
+    p_map = masklib.compressed_attention_map(q, k, m.pool)
+    col_mass = jnp.sum(p_map, axis=-2)
+    m_c = clamp_mask_topk(m_c, col_mass, cfg.cap_q_cmp(n_tokens))
+    m_s = masklib.make_skip_mask(q, k, m, n_text)
+    # Clamp per-row KV keeps to the compressed KV capacity (rank by mass).
+    cap_kv = cfg.cap_kv_cmp(n_tokens)
+    if cap_kv < m_s.shape[-1]:
+        m_s = clamp_mask_topk(m_s, p_map, cap_kv)
+    s_c = pack_bits(m_c)
+    s_s = pack_bits(m_s.reshape(*m_s.shape[:-2], -1))
+    return s_c, s_s, m_c, m_s
+
+
+def _unpack(state: LayerState, cfg: EngineConfig, n_tokens: int):
+    t = cfg.mask.n_blocks(n_tokens)
+    m_c = unpack_bits(state.s_c, t)
+    m_s = unpack_bits(state.s_s, t * t).reshape(*state.s_s.shape[:-1], t, t)
+    return m_c, m_s
+
+
+# ---------------------------------------------------------------------------
+# Update / Dispatch step over one attention module.
+# ---------------------------------------------------------------------------
+
+def update_layer(
+    params: AttnParams,
+    x: jax.Array,
+    state: LayerState,
+    cfg: EngineConfig,
+    *,
+    n_text: int = 0,
+    heads: int,
+    freqs: Optional[jax.Array] = None,
+) -> tuple[jax.Array, LayerState]:
+    """Full attention + symbol/cache refresh (paper *Update* phase)."""
+    b, n, dm = x.shape
+    q, k = _qk(params, x, heads, freqs)
+    v = _project_heads(x, params.wv, heads)
+    o = dense_attention(q, k, v)                               # (B,H,N,dh)
+    s_c, s_s, m_c, m_s = refresh_symbols(q, k, cfg, n_text, n)
+
+    o_tok = o.transpose(0, 2, 1, 3)                            # (B,N,H,dh)
+    dh = o_tok.shape[-1]
+    wo_h = params.wo.reshape(heads, dh, dm)
+    out = jnp.einsum("bnhd,hdf->bnf", o_tok, wo_h)
+
+    m_ch = jnp.swapaxes(m_c, -1, -2)                           # (B, T, H)
+    if cfg.cache_mode == "bias":
+        bias = sparse_gemm.gemm_o_update_bias(o_tok, wo_h, m_ch, block=cfg.mask.pool)
+        taylor = taylorseer.update(state.taylor, bias.astype(cfg.cache_dtype))
+    else:
+        taylor = taylorseer.update(state.taylor, o.astype(cfg.cache_dtype))
+    new_state = LayerState(s_c=s_c, s_s=s_s, taylor=taylor,
+                           k_since=jnp.zeros((), jnp.int32))
+    return out, new_state
+
+
+def dispatch_layer(
+    params: AttnParams,
+    x: jax.Array,
+    state: LayerState,
+    cfg: EngineConfig,
+    *,
+    n_text: int = 0,
+    heads: int,
+    freqs: Optional[jax.Array] = None,
+) -> tuple[jax.Array, LayerState]:
+    """Sparse execution guided by frozen symbols (paper *Dispatch* phase)."""
+    b, n, dm = x.shape
+    m = cfg.mask
+    m_c, m_s = _unpack(state, cfg, n)                          # compressed granularity
+    k_since = state.k_since + 1
+
+    spec_c = cfg.caps(n)                                        # block granularity caps
+    factor = m.pool // m.block_q
+    t_q = -(-n // m.block_q)
+    m_c_blk = masklib.expand_block_mask(m_c, factor, t_q)
+    m_s_blk = jnp.repeat(jnp.repeat(m_s, factor, axis=-2), m.pool // m.block_kv, axis=-1)
+    m_s_blk = m_s_blk[..., :t_q, : (-(-n // m.block_kv))]
+
+    # --- GEMM-Q: skip row blocks cached in every head (Obs. 2). ---
+    row_live = jnp.any(m_c, axis=-2)                            # (B, T) live in any head
+    if cfg.use_gemm_q:
+        cap_rows = cfg.cap_q_cmp(n)
+        q_flat = sparse_gemm.gemm_q_sparse(x, params.wq, row_live,
+                                           block=m.pool, cap=cap_rows)
+    else:
+        q_flat = jnp.einsum("bnd,df->bnf", x, params.wq)
+    qh = q_flat.reshape(b, n, heads, -1).transpose(0, 2, 1, 3)
+    qh = rms_norm(qh, params.q_scale)
+    k_h = rms_norm(_project_heads(x, params.wk, heads), params.k_scale)
+    if freqs is not None:
+        qh, k_h = apply_rope(qh, freqs), apply_rope(k_h, freqs)
+    v_h = _project_heads(x, params.wv, heads)
+
+    # --- Attention: structural sparse path. ---
+    dh = qh.shape[-1]
+    if cfg.cache_mode == "bias":
+        o_reuse = jnp.zeros((b, heads, n, dh), qh.dtype)
+    else:
+        o_reuse = taylorseer.forecast(state.taylor, k_since, m.interval).astype(qh.dtype)
+    o = sparse_attention_xla(qh, k_h, v_h, m_c_blk, m_s_blk, o_reuse, spec_c)
+
+    # --- GEMM-O: live heads + forecast bias (Obs. 3, Eq. 4). ---
+    o_tok = o.transpose(0, 2, 1, 3)
+    wo_h = params.wo.reshape(heads, dh, dm)
+    m_ch = jnp.swapaxes(m_c, -1, -2)                            # (B,T,H)
+    if cfg.cache_mode == "bias":
+        bias_f = taylorseer.forecast(state.taylor, k_since, m.interval).astype(x.dtype)
+        if cfg.use_gemm_o:
+            cap_rows = cfg.cap_q_cmp(n)
+            out = sparse_gemm.gemm_o_sparse(o_tok, wo_h, m_ch, bias_f,
+                                            block=m.pool, cap=cap_rows)
+        else:
+            # Dense GEMM over (zero-filled) cached heads + forecast bias —
+            # numerically identical, no FLOP saving (fidelity fallback).
+            m_tok = jnp.repeat(m_ch, m.pool, axis=-2)[..., :n, :]
+            out = jnp.einsum("bnhd,hdf->bnf",
+                             jnp.where(m_tok[..., None], o_tok, 0), wo_h) + bias_f
+    else:
+        out = jnp.einsum("bnhd,hdf->bnf", o_tok, wo_h)
+    new_state = LayerState(s_c=state.s_c, s_s=state.s_s, taylor=state.taylor,
+                           k_since=k_since)
+    return out, new_state

@@ -1,0 +1,203 @@
+"""Logical mask generation for FlashOmni (paper §3.3, Observation 1, Eq. 1).
+
+Pipeline (all jit-safe, static shapes):
+
+  Q, K (per head, length N)
+    └─ mean-pool ``n·b`` consecutive tokens  ->  q̃, k̃       (token gathering)
+    └─ compressed map  P̃ = softmax(q̃ k̃ᵀ / √d)               (⌈N/nb_q⌉ × ⌈N/nb_k⌉)
+    ├─ caching:  C_{i,v→t} = Σ_j α_{j,i}   (α = P̃[:n_t, n_t:])
+    │            G_{i,t→v} = Σ_j β_{j,i}   (β = softmax(P̃[n_t:, :n_t]ᵀ))
+    │            cache block i  iff  CumSum↑(C) ≤ τ_q·ΣC  ∧  CumSum↑(G) ≤ τ_q·ΣG
+    └─ skipping: per compressed row, skip the smallest-mass KV blocks whose
+                 ascending cumulative mass ≤ τ_kv (SpargeAttn-style).
+
+Conventions: masks are boolean with **True = compute** (matches the paper's
+1 bits); caching masks never select text blocks (Observation 1 — text rows
+must refresh every step) and the skip mask optionally protects the
+text↔vision regions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "MaskConfig",
+    "pool_tokens",
+    "compressed_attention_map",
+    "caching_scores",
+    "select_by_cummass",
+    "make_caching_mask",
+    "make_skip_mask",
+    "apply_degradation",
+    "expand_block_mask",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskConfig:
+    """FlashOmni sparsity configuration ``(τ_q, τ_kv, 𝒩, 𝒟, S_q)`` (paper A.1.1).
+
+    ``pool`` is ``n·b`` — the token-gathering granularity used to build the
+    compressed attention map (paper pools ``n`` consecutive b-sized blocks).
+    ``block_q``/``block_kv`` are the attention kernel tile sizes ``b_q``/``b_k``.
+    """
+
+    tau_q: float = 0.5          # caching cumulative-mass threshold (τ_q)
+    tau_kv: float = 0.15        # skipping cumulative-mass threshold (τ_kv)
+    interval: int = 5           # 𝒩 — Update every `interval` steps
+    order: int = 1              # 𝒟 — TaylorSeer expansion order
+    degrade: float = 0.3        # S_q — full-cache degradation threshold
+    block_q: int = 64
+    block_kv: int = 64
+    pool: int = 128             # n·b_q == n·b_kv compressed granularity
+    protect_text: bool = True   # never skip t↔t / t↔v / v↔t regions in S_s
+    warmup_steps: int = 4       # full attention for the first steps (A.1.3)
+
+    def n_blocks(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.pool)
+
+
+def pool_tokens(x: jax.Array, pool: int) -> jax.Array:
+    """Mean-pool groups of ``pool`` consecutive tokens: (..., N, d) -> (..., ⌈N/pool⌉, d)."""
+    n = x.shape[-2]
+    pad = -(-n // pool) * pool - n
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)])
+        # Mean over the true tokens only: scale tail block by pool/(pool-pad).
+    xb = x.reshape(*x.shape[:-2], -1, pool, x.shape[-1])
+    out = jnp.mean(xb, axis=-2)
+    if pad:
+        scale = jnp.ones((out.shape[-2],), x.dtype).at[-1].set(pool / (pool - pad))
+        out = out * scale[:, None]
+    return out
+
+
+def compressed_attention_map(
+    q: jax.Array, k: jax.Array, pool: int, *, scale: Optional[float] = None
+) -> jax.Array:
+    """P̃ = softmax(q̃ k̃ᵀ / √d) over pooled tokens.  q,k: (..., N, d)."""
+    d = q.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    qc = pool_tokens(q.astype(jnp.float32), pool)
+    kc = pool_tokens(k.astype(jnp.float32), pool)
+    s = jnp.einsum("...id,...jd->...ij", qc, kc) * scale
+    return jax.nn.softmax(s, axis=-1)
+
+
+def caching_scores(p_map: jax.Array, n_text: int) -> tuple[jax.Array, jax.Array]:
+    """Vision-to-Text contribution C and Text-to-Vision guidance G.
+
+    ``p_map``: (..., T, T) compressed map with the first ``n_text`` blocks
+    being text.  Returns (C, G), each (..., T_vision).
+    """
+    alpha = p_map[..., :n_text, n_text:]                  # text rows -> vision cols
+    contrib = jnp.sum(alpha, axis=-2)                     # C_{i,v→t} = Σ_j α_{j,i}
+    beta_raw = jnp.swapaxes(p_map[..., n_text:, :n_text], -1, -2)  # (.., n_t, T_v)
+    beta = jax.nn.softmax(beta_raw, axis=-1)              # renormalise across vision
+    guidance = jnp.sum(beta, axis=-2)                     # G_{i,t→v} = Σ_j β_{j,i}
+    return contrib, guidance
+
+
+def select_by_cummass(scores: jax.Array, tau: float) -> jax.Array:
+    """Eq. 1 selector: True where the block is SPARSIFIED.
+
+    Sort ascending, mark blocks while the cumulative sum stays ≤ τ·total.
+    Returns a boolean mask in the original block order.
+    """
+    order = jnp.argsort(scores, axis=-1)
+    sorted_scores = jnp.take_along_axis(scores, order, axis=-1)
+    cum = jnp.cumsum(sorted_scores, axis=-1)
+    total = jnp.sum(scores, axis=-1, keepdims=True)
+    picked_sorted = cum <= tau * total
+    # Scatter back through the argsort permutation.
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(picked_sorted, inv, axis=-1)
+
+
+def make_caching_mask(
+    q: jax.Array,
+    k: jax.Array,
+    cfg: MaskConfig,
+    n_text_tokens: int,
+    *,
+    tau_q: Optional[float] = None,
+) -> jax.Array:
+    """Per-head caching mask M_c at compressed granularity (True = compute).
+
+    q, k: (..., N, d).  Output: (..., T) with T = ⌈N/pool⌉.  Text blocks are
+    always computed (Observation 1).  Vision blocks are cached when selected
+    by BOTH the C and G ascending-cummass rules (Eq. 1 conjunction).
+    """
+    tau = cfg.tau_q if tau_q is None else tau_q
+    p_map = compressed_attention_map(q, k, cfg.pool)
+    n_t = -(-n_text_tokens // cfg.pool) if n_text_tokens else 0
+    t_total = p_map.shape[-1]
+    if n_t == 0:
+        # Pure-vision DiT (no text stream through this attention): rank by
+        # total incoming attention mass per block (column mass).
+        col_mass = jnp.sum(p_map, axis=-2)
+        cached = select_by_cummass(col_mass, tau)
+        return ~cached
+    contrib, guidance = caching_scores(p_map, n_t)
+    cached_v = select_by_cummass(contrib, tau) & select_by_cummass(guidance, tau)
+    text_keep = jnp.ones((*cached_v.shape[:-1], n_t), dtype=jnp.bool_)
+    compute_v = ~cached_v
+    return jnp.concatenate([text_keep, compute_v], axis=-1)[..., :t_total]
+
+
+def make_skip_mask(
+    q: jax.Array,
+    k: jax.Array,
+    cfg: MaskConfig,
+    n_text_tokens: int,
+    *,
+    tau_kv: Optional[float] = None,
+    static_window: Optional[int] = None,
+) -> jax.Array:
+    """Per-head skip mask M_s at compressed granularity (True = compute).
+
+    SpargeAttn-style: for each query row of the compressed map, skip the
+    smallest-probability KV blocks whose ascending cumulative mass ≤ τ_kv.
+    ``static_window`` (in blocks) additionally ANDs a sliding-window static
+    pattern — this is how classic local/SWA attention is expressed as an
+    ``S_s`` symbol (DESIGN §4: symbol generality).
+    """
+    tau = cfg.tau_kv if tau_kv is None else tau_kv
+    p_map = compressed_attention_map(q, k, cfg.pool)
+    skipped = select_by_cummass(p_map, tau)               # rowwise over KV axis
+    compute = ~skipped
+    t = p_map.shape[-1]
+    if cfg.protect_text and n_text_tokens:
+        n_t = -(-n_text_tokens // cfg.pool)
+        idx = jnp.arange(t)
+        is_text_row = (idx < n_t)[:, None]
+        is_text_col = (idx < n_t)[None, :]
+        compute = compute | is_text_row | is_text_col     # only v↔v may skip
+    if static_window is not None:
+        idx = jnp.arange(t)
+        win = jnp.abs(idx[:, None] - idx[None, :]) < static_window
+        compute = compute & win
+    return compute
+
+
+def apply_degradation(m_c: jax.Array, degrade: float) -> jax.Array:
+    """Paper A.1.1 ``S_q``: if the fraction of blocks requiring computation
+    drops below ``degrade``, the whole layer degenerates to full feature
+    caching (all-cached) for maximal efficiency."""
+    frac = jnp.mean(m_c.astype(jnp.float32), axis=-1, keepdims=True)
+    return jnp.where(frac < degrade, jnp.zeros_like(m_c), m_c)
+
+
+def expand_block_mask(mask: jax.Array, factor: int, n_total: int) -> jax.Array:
+    """Broadcast a compressed-granularity mask to kernel-block granularity.
+
+    Each compressed block covers ``factor = pool // block`` kernel blocks;
+    the result is truncated to ``n_total = ⌈N/block⌉`` entries.
+    """
+    out = jnp.repeat(mask, factor, axis=-1)
+    return out[..., :n_total]

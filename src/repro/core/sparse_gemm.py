@@ -1,0 +1,125 @@
+"""FlashOmni sparse GEMMs — XLA structural path (paper §3.5, Obs. 2/3, Eq. 3-4).
+
+GEMM-Q (query projection, spatial-axis sparsity)
+    RMSNorm and RoPE are token-local, so if block ``i``'s attention output
+    is cached for every head, its query projection row-block is dead code.
+    The structural path gathers the live row blocks (capacity padded),
+    projects only those, and scatters into a zero output.
+
+GEMM-O (output projection, reduction-axis sparsity)
+    ``Out_i = Σ_h O_i^h W_h``; heads cached for block ``i`` contribute the
+    pre-computed bias  B_c[i] = Σ_{h∉H_i} Õ_i^h W_h  (refreshed at Update).
+    Because OP_reuse is element-wise linear (TaylorSeer), forecasting
+    commutes with the projection (Eq. 4), so at Dispatch the bias is simply
+    Taylor-forecast in *output* space and added to the live-head partial
+    GEMM.  Rows whose heads are ALL cached skip the GEMM entirely
+    (spatial gather, as in GEMM-Q); intra-row head sparsity is masked in
+    this XLA path and structurally skipped in the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import scatter_blocks
+from repro.core.symbols import active_indices
+
+__all__ = [
+    "gemm_q_sparse",
+    "gemm_o_update_bias",
+    "gemm_o_sparse",
+    "rows_any_head_live",
+]
+
+
+def _gather_rows(xb: jax.Array, ids: jax.Array) -> jax.Array:
+    idx = jnp.broadcast_to(ids[..., None, None], (*ids.shape, *xb.shape[-2:]))
+    return jnp.take_along_axis(xb, idx, axis=-3)
+
+
+def gemm_q_sparse(
+    x: jax.Array,
+    w: jax.Array,
+    m_rows: jax.Array,
+    *,
+    block: int,
+    cap: int,
+    bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Row-block-sparse ``x @ w``.
+
+    x: (..., N, d_in); w: (d_in, d_out); m_rows: (..., T) with T = N//block,
+    True = row block is live.  Cached row blocks produce zeros (their Q is
+    never consumed — their attention output comes from cache).
+    """
+    n, d_in = x.shape[-2], x.shape[-1]
+    t = n // block
+    ids, cnt = active_indices(m_rows, cap)
+    xb = x.reshape(*x.shape[:-2], t, block, d_in)
+    xg = _gather_rows(xb, ids)                                  # (..., cap, block, d_in)
+    yg = jnp.einsum("...cbd,df->...cbf", xg, w)
+    if bias is not None:
+        yg = yg + bias
+    outb = jnp.zeros((*x.shape[:-2], t, block, w.shape[-1]), yg.dtype)
+    outb = scatter_blocks(outb, ids, cnt, yg)
+    return outb.reshape(*x.shape[:-1], w.shape[-1])
+
+
+def rows_any_head_live(m_ch: jax.Array) -> jax.Array:
+    """(..., T, H) per-(block, head) compute mask -> (..., T) block-live mask."""
+    return jnp.any(m_ch, axis=-1)
+
+
+def gemm_o_update_bias(
+    o_heads: jax.Array,
+    w: jax.Array,
+    m_ch: jax.Array,
+    *,
+    block: int,
+) -> jax.Array:
+    """Update-step stage 1: cache bias ``B_c = Σ_{h∉H_i} O_i^h W_h``.
+
+    o_heads: (..., N, H, dh); w: (H, dh, d_out); m_ch: (..., T, H).
+    Returns (..., N, d_out) — zero on rows whose every head is live.
+    """
+    n = o_heads.shape[-3]
+    t = n // block
+    cached = ~m_ch                                              # heads NOT recomputed
+    per_tok = jnp.repeat(cached, block, axis=-2)[..., :n, :]    # (..., N, H)
+    contrib = jnp.einsum("...nhd,hdf->...nhf", o_heads, w)
+    return jnp.sum(jnp.where(per_tok[..., None], contrib, 0), axis=-2)
+
+
+def gemm_o_sparse(
+    o_heads: jax.Array,
+    w: jax.Array,
+    m_ch: jax.Array,
+    bias_forecast: jax.Array,
+    *,
+    block: int,
+    cap: int,
+) -> jax.Array:
+    """Dispatch-step GEMM-O: live heads projected + forecast bias added.
+
+    o_heads: (..., N, H, dh); w: (H, dh, d_out); m_ch: (..., T, H);
+    bias_forecast = OP_reuse(B_c): (..., N, d_out).
+    Fully cached row blocks cost zero GEMM FLOPs (spatial gather).
+    """
+    n, h, dh = o_heads.shape[-3], o_heads.shape[-2], o_heads.shape[-1]
+    t = n // block
+    d_out = w.shape[-1]
+    live_rows = rows_any_head_live(m_ch)                        # (..., T)
+    ids, cnt = active_indices(live_rows, cap)
+    ob = o_heads.reshape(*o_heads.shape[:-3], t, block, h, dh)
+    idx = jnp.broadcast_to(ids[..., None, None, None], (*ids.shape, block, h, dh))
+    og = jnp.take_along_axis(ob, idx, axis=-4)                  # (..., cap, block, H, dh)
+    mh = jnp.take_along_axis(m_ch, ids[..., None], axis=-2)     # (..., cap, H)
+    og = jnp.where(mh[..., None, :, None], og, 0)               # mask cached heads
+    yg = jnp.einsum("...cbhd,hdf->...cbf", og, w)
+    outb = jnp.zeros((*o_heads.shape[:-3], t, block, d_out), yg.dtype)
+    outb = scatter_blocks(outb, ids, cnt, yg)
+    out = outb.reshape(*o_heads.shape[:-3], n, d_out)
+    return out + bias_forecast

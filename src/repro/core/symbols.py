@@ -1,0 +1,144 @@
+"""FlashOmni unified sparse symbols (paper §3.3).
+
+Logical block-sparse masks are packed into compact uint8 "sparse symbols"
+with big-endian bit alignment (paper Fig. 5: mask [1,1,1,0,0] -> 0b11100000
+-> uint8 224).  Two symbols exist per attention layer:
+
+  * ``S_c`` — feature-caching symbol, one bit per (head, q-block).
+    Bit == 0 -> the block output is cached/forecast (cache-then-reuse);
+    bit == 1 -> the block is computed (compute-on-demand).
+  * ``S_s`` — block-sparse-skipping symbol, one bit per
+    (head, q-block, kv-block).  Bit == 0 -> the `Q_i K_j^T` / `P_ij V_j`
+    tile pair is skipped; bit == 1 -> computed.
+
+Decoders follow the paper:
+
+  F(S_c, i)    = (S_c[i // 8] >> (7 - i % 8)) & 1          (spatial axis)
+  J(S_s, i, j) = F(S_s_flat, i * T_kv + j)                 (reduction axis)
+
+Everything here is pure ``jnp`` and jit-safe; the Pallas kernels consume
+either the packed symbols directly (fidelity path) or the derived
+capacity-padded index lists (structural-skip path, see ``active_indices``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "pack_bits",
+    "unpack_bits",
+    "decode_spatial",
+    "decode_reduction",
+    "packed_len",
+    "active_indices",
+    "capacity_for",
+    "clamp_mask_topk",
+]
+
+# Big-endian bit weights within a byte: bit for in-byte position p sits at
+# (7 - p), so weights are [128, 64, 32, 16, 8, 4, 2, 1].
+_BIT_WEIGHTS = np.array([128, 64, 32, 16, 8, 4, 2, 1], dtype=np.uint8)
+
+
+def packed_len(n_bits: int) -> int:
+    """Number of uint8 bytes needed to store ``n_bits`` big-endian bits."""
+    return -(-n_bits // 8)
+
+
+def pack_bits(mask: jax.Array) -> jax.Array:
+    """Pack a boolean/0-1 mask of shape (..., T) into uint8 (..., ceil(T/8)).
+
+    Big-endian within each byte, zero padded at the tail (paper Fig. 5).
+    """
+    mask = jnp.asarray(mask)
+    t = mask.shape[-1]
+    pad = packed_len(t) * 8 - t
+    if pad:
+        mask = jnp.pad(
+            mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)], constant_values=0
+        )
+    bits = mask.reshape(*mask.shape[:-1], -1, 8).astype(jnp.uint8)
+    return jnp.einsum(
+        "...tb,b->...t", bits, jnp.asarray(_BIT_WEIGHTS), preferred_element_type=jnp.uint8
+    ).astype(jnp.uint8)
+
+
+def unpack_bits(sym: jax.Array, n_bits: int) -> jax.Array:
+    """Inverse of :func:`pack_bits` -> bool mask of shape (..., n_bits)."""
+    sym = jnp.asarray(sym, dtype=jnp.uint8)
+    shifts = jnp.arange(7, -1, -1, dtype=jnp.uint8)  # big-endian
+    bits = (sym[..., :, None] >> shifts) & jnp.uint8(1)
+    bits = bits.reshape(*sym.shape[:-1], -1)
+    return bits[..., :n_bits].astype(jnp.bool_)
+
+
+def decode_spatial(sym: jax.Array, i: jax.Array) -> jax.Array:
+    """Paper's spatial decoder ``F(S_c, i)`` -> 0/1 (int32).
+
+    ``sym`` is the packed symbol array whose last dim indexes bytes; ``i``
+    is a (q-)block index along the unpacked axis.
+    """
+    i = jnp.asarray(i, dtype=jnp.int32)
+    byte = jnp.take(sym, i // 8, axis=-1).astype(jnp.int32)
+    return (byte >> (7 - (i % 8))) & 1
+
+
+def decode_reduction(sym_flat: jax.Array, i: jax.Array, j: jax.Array, t_kv: int) -> jax.Array:
+    """Paper's reduction decoder ``J(S_s, i, j)`` over a row-major packed
+    (T_q x T_kv) bit matrix flattened along the last axis."""
+    flat = jnp.asarray(i, jnp.int32) * t_kv + jnp.asarray(j, jnp.int32)
+    return decode_spatial(sym_flat, flat)
+
+
+def capacity_for(t: int, fraction: float, quantum: int = 8) -> int:
+    """Static capacity (padded active-count) for a sparsity fraction.
+
+    TPU adaptation (DESIGN §2.5): the number of *computed* blocks implied by
+    the cumulative-mass thresholds is data dependent; we bound it by a
+    static capacity rounded up to ``quantum`` so the compiled kernel shape
+    is stable across steps.
+    """
+    keep = int(np.ceil(t * float(fraction)))
+    keep = max(min(keep, t), 1)
+    return int(min(-(-keep // quantum) * quantum, t))
+
+
+def clamp_mask_topk(mask: jax.Array, score: jax.Array, cap: int) -> jax.Array:
+    """Bound the True-count of ``mask`` (last axis) by ``cap``, keeping the
+    highest-``score`` entries (TPU static-capacity adaptation, DESIGN §2.5)."""
+    t = mask.shape[-1]
+    if cap >= t:
+        return mask
+    s = jnp.where(mask, score.astype(jnp.float32), -jnp.inf)
+    _, ids = jax.lax.top_k(s, cap)
+    keep = jnp.zeros(mask.shape, jnp.bool_)
+    keep = jnp.put_along_axis(keep, ids, jnp.ones_like(ids, jnp.bool_), axis=-1,
+                              inplace=False)
+    return mask & keep
+
+
+def active_indices(mask: jax.Array, capacity: int) -> tuple[jax.Array, jax.Array]:
+    """Compacted index list of ``True`` positions, capacity-padded.
+
+    Returns ``(ids, count)`` where ``ids`` has shape (..., capacity) int32.
+    Positions beyond ``count`` repeat the last valid id (safe gather) — the
+    kernels mask them out with ``@pl.when``.  Selection keeps ascending
+    order so gathers stay quasi-sequential in HBM (DMA friendliness).
+    """
+    mask = jnp.asarray(mask)
+    t = mask.shape[-1]
+    # Stable "sort by (not active, index)": active positions first, in order.
+    key = jnp.where(mask, 0, 1) * t + jnp.arange(t, dtype=jnp.int32)
+    order = jnp.argsort(key, axis=-1)[..., :capacity].astype(jnp.int32)
+    count = jnp.sum(mask, axis=-1).astype(jnp.int32)
+    count = jnp.minimum(count, capacity)
+    # Clamp padding slots to the last active id (or 0 when none active).
+    slot = jnp.arange(capacity, dtype=jnp.int32)
+    last_valid = jnp.take_along_axis(
+        order, jnp.maximum(count - 1, 0)[..., None], axis=-1
+    )
+    ids = jnp.where(slot < count[..., None], order, last_valid)
+    return ids, count

@@ -1,0 +1,98 @@
+"""TaylorSeer feature forecasting (Liu et al. 2025b), used by FlashOmni for
+the cache-then-reuse path (paper §3.3: "For cached blocks, FlashOmni employs
+TaylorSeer to forecast future features via Taylor series expansion using
+stored features and their derivatives").
+
+At every *Update* step (interval 𝒩) the engine stores the fresh feature and
+refreshes backward finite differences up to order 𝒟:
+
+    Δ⁰y_t = y_t,   Δⁱy_t = Δ^{i-1}y_t − Δ^{i-1}y_{t−𝒩}
+
+At a *Dispatch* step ``k ∈ [1, 𝒩−1]`` after the last update, the forecast is
+
+    ŷ(t+k) = Σ_{i=0}^{𝒟}  Δⁱy_t · kⁱ / (i! · 𝒩ⁱ)
+
+𝒟 = 0 degenerates to plain reuse (FORA-style); 𝒟 = 1 is linear
+extrapolation (the paper's best-quality setting, Table 3).  Orders that do
+not yet have enough history are masked to zero, so warmup behaviour is
+exact plain-reuse until 𝒟+1 updates have been observed.
+
+Everything is a pytree-of-arrays ``TaylorState`` so it can live inside
+jitted step functions and be carried through ``lax`` control flow.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TaylorState", "init_state", "update", "forecast", "reuse_coefficients"]
+
+# NOTE (beyond-paper): the cited TaylorSeer coefficients ``kⁱ/(i!·𝒩ⁱ)``
+# treat Δⁱ/𝒩ⁱ as an unbiased iᵗʰ-derivative estimate, which is exact only
+# for polynomials of degree ≤ 1.  Newton's backward-difference form
+# ``c_i = Π_{j<i}(x+j)/i!`` (x = k/𝒩) is exact for degree ≤ 𝒟 at zero extra
+# cost.  ``mode="newton"`` enables it; tests cover both.
+
+
+class TaylorState(NamedTuple):
+    """Finite-difference stack: ``derivs[i] = Δⁱ y`` at the last update."""
+
+    derivs: jax.Array      # (order+1, *feature_shape)
+    n_updates: jax.Array   # scalar int32 — number of updates absorbed
+
+
+def init_state(feature_shape: tuple[int, ...], order: int, dtype=jnp.float32) -> TaylorState:
+    return TaylorState(
+        derivs=jnp.zeros((order + 1, *feature_shape), dtype=dtype),
+        n_updates=jnp.zeros((), jnp.int32),
+    )
+
+
+def update(state: TaylorState, y: jax.Array) -> TaylorState:
+    """Absorb a freshly computed feature at an *Update* step."""
+    order = state.derivs.shape[0] - 1
+    prev = state.derivs
+    new = [y.astype(prev.dtype)]
+    for i in range(1, order + 1):
+        new.append(new[i - 1] - prev[i - 1])
+    derivs = jnp.stack(new, axis=0)
+    # Order-i difference is meaningful only once i+1 samples exist; zero
+    # the rest so forecasts degrade to lower order during warmup.
+    n = state.n_updates + 1
+    valid = (jnp.arange(order + 1, dtype=jnp.int32) < n)
+    derivs = jnp.where(valid.reshape(-1, *([1] * y.ndim)), derivs, 0)
+    return TaylorState(derivs=derivs, n_updates=n)
+
+
+def reuse_coefficients(order: int, k: jax.Array, interval: int,
+                       mode: str = "taylor") -> jax.Array:
+    """Reuse coefficients ``c_i`` for offset ``k`` -> f32 vector (order+1,).
+
+    ``"taylor"`` (paper-faithful): ``c_i = kⁱ / (i!·𝒩ⁱ)``.
+    ``"newton"`` (beyond-paper): Newton backward-difference extrapolation
+    ``c_i = x(x+1)…(x+i−1)/i!`` with ``x = k/𝒩`` — exact for degree ≤ order.
+    """
+    x = jnp.asarray(k, jnp.float32) / float(interval)
+    coeffs = []
+    c = jnp.asarray(1.0, jnp.float32)
+    for i in range(order + 1):
+        coeffs.append(c)
+        if mode == "taylor":
+            c = c * x / (i + 1)
+        elif mode == "newton":
+            c = c * (x + i) / (i + 1)
+        else:
+            raise ValueError(f"unknown reuse mode: {mode}")
+    return jnp.stack(coeffs)
+
+
+def forecast(state: TaylorState, k: jax.Array, interval: int,
+             mode: str = "taylor") -> jax.Array:
+    """Forecast the feature ``k`` steps after the last update (OP_reuse)."""
+    order = state.derivs.shape[0] - 1
+    coef = reuse_coefficients(order, k, interval, mode)
+    return jnp.tensordot(coef, state.derivs, axes=(0, 0))

@@ -1,0 +1,101 @@
+"""Gradient compression for data-parallel all-reduce at 1000+ nodes.
+
+Two schemes, both with ERROR FEEDBACK (the residual of the compression is
+carried to the next step so the compressed optimizer converges to the same
+point — Karimireddy et al. 2019):
+
+  * ``int8``  — per-tensor symmetric quantization: 4× DP traffic reduction,
+    unbiased within rounding.
+  * ``topk``  — magnitude top-k sparsification (k = fraction of entries):
+    10–100× reduction for gradient-sparse regimes.
+
+Usage inside a train step (before the psum that DP inserts):
+    comp, state = compress_tree(grads, state, scheme)
+    grads = decompress_tree(comp)        # local decompress after all-reduce
+
+The compress→allreduce→decompress pipeline is exercised in tests by
+simulating N workers; on a real mesh the all-reduce happens on the
+compressed payload via ``shard_map``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_state", "compress_int8", "decompress_int8",
+           "compress_topk", "decompress_topk", "compress_tree",
+           "decompress_tree"]
+
+
+def init_error_state(tree: Any) -> Any:
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), tree)
+
+
+class Int8Grad(NamedTuple):
+    q: jax.Array          # int8 payload
+    scale: jax.Array      # () f32
+
+
+def compress_int8(g: jax.Array, err: jax.Array) -> tuple[Int8Grad, jax.Array]:
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return Int8Grad(q=q, scale=scale), new_err
+
+
+def decompress_int8(c: Int8Grad) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+class TopKGrad(NamedTuple):
+    values: jax.Array     # (k,) f32
+    indices: jax.Array    # (k,) int32
+    shape: tuple          # static
+
+
+def compress_topk(g: jax.Array, err: jax.Array, frac: float = 0.05
+                  ) -> tuple[TopKGrad, jax.Array]:
+    gf = (g.astype(jnp.float32) + err).reshape(-1)
+    k = max(1, int(gf.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(gf), k)
+    picked = gf[idx]
+    new_err = gf.at[idx].set(0.0).reshape(g.shape)
+    return TopKGrad(values=picked, indices=idx.astype(jnp.int32),
+                    shape=tuple(g.shape)), new_err
+
+
+def decompress_topk(c: TopKGrad) -> jax.Array:
+    n = 1
+    for d in c.shape:
+        n *= d
+    out = jnp.zeros((n,), jnp.float32).at[c.indices].set(c.values)
+    return out.reshape(c.shape)
+
+
+def compress_tree(grads: Any, err_state: Any, scheme: str = "int8",
+                  **kw) -> tuple[Any, Any]:
+    """Compress every leaf; returns (compressed_tree, new_error_state)."""
+    fn = {"int8": compress_int8,
+          "topk": functools.partial(compress_topk, **kw)}[scheme]
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    out = [fn(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = tdef.unflatten([o[0] for o in out])
+    new_err = tdef.unflatten([o[1] for o in out])
+    return comp, new_err
+
+
+def decompress_tree(comp: Any) -> Any:
+    def dec(c):
+        if isinstance(c, Int8Grad):
+            return decompress_int8(c)
+        if isinstance(c, TopKGrad):
+            return decompress_topk(c)
+        raise TypeError(type(c))
+    return jax.tree.map(dec, comp,
+                        is_leaf=lambda x: isinstance(x, (Int8Grad, TopKGrad)))

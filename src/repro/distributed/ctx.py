@@ -1,0 +1,44 @@
+"""Activation-sharding hint context (§Perf iteration A2).
+
+``with_sharding_constraint`` is the only reliable way to pin GSPMD's
+propagation through loop/reshape boundaries — critically, the constraint
+also transposes onto the BACKWARD cotangents, which is where the chunked
+attention lost its batch sharding (replicated f32[global_batch, ...] temps
+in ``transpose(jvp())``).
+
+Model code calls ``constrain(x, "dp", None, ..., "tp")`` with LOGICAL axis
+names; the step builders install the active rules here.  Outside a rules
+context (unit tests, single-device runs) it is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+
+from repro.distributed.sharding import ShardingRules, logical_to_physical
+
+_RULES: contextvars.ContextVar[Optional[ShardingRules]] = \
+    contextvars.ContextVar("sharding_rules", default=None)
+
+__all__ = ["activation_rules", "constrain"]
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Optional[ShardingRules]):
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = logical_to_physical(logical, rules)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,78 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Model code annotates parameters and activations with LOGICAL axis names;
+this module maps them onto the physical mesh axes of
+``repro.launch.mesh.make_production_mesh``:
+
+  single-pod: (data=16, model=16)          multi-pod: (pod=2, data=16, model=16)
+
+Logical axes:
+  * ``dp``    — data parallel (batch dim of activations)
+  * ``fsdp``  — weight/optimizer-state sharding (ZeRO-3 over the data axis;
+                for ≥100B params the pod axis joins, see configs)
+  * ``tp``    — tensor parallel (heads / ff / vocab)
+  * ``sp``    — sequence parallel (long-context KV caches, batch=1 cells)
+  * ``ep``    — expert parallel (MoE expert dim; only when divisible)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "logical_to_physical", "tree_logical_to_physical",
+           "named_sharding_tree", "DEFAULT_RULES", "MULTIPOD_RULES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis name to a tuple of physical mesh axes."""
+
+    dp: tuple[str, ...] = ("data",)
+    fsdp: tuple[str, ...] = ("data",)
+    tp: tuple[str, ...] = ("model",)
+    sp: tuple[str, ...] = ()
+    ep: tuple[str, ...] = ()
+
+    def physical(self, logical: Optional[str]) -> Any:
+        if logical is None:
+            return None
+        axes: tuple[str, ...] = ()
+        for part in logical.split("+"):          # e.g. "dp+sp"
+            axes = axes + tuple(getattr(self, part))
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+
+DEFAULT_RULES = ShardingRules()
+MULTIPOD_RULES = ShardingRules(dp=("pod", "data"), fsdp=("data",))
+# ZeRO across pods too — used by ≥100B configs (llama3-405b):
+MULTIPOD_ZERO_RULES = ShardingRules(dp=("pod", "data"), fsdp=("pod", "data"))
+SEQ_RULES = dataclasses.replace(DEFAULT_RULES, sp=("data",))
+MULTIPOD_SEQ_RULES = dataclasses.replace(MULTIPOD_RULES, sp=("data",), dp=("pod",))
+
+
+def logical_to_physical(logical_spec: Sequence[Optional[str]],
+                        rules: ShardingRules) -> P:
+    """("fsdp", "tp") -> PartitionSpec(("data",), ("model",)) etc."""
+    return P(*(rules.physical(ax) for ax in logical_spec))
+
+
+def tree_logical_to_physical(spec_tree: Any, rules: ShardingRules) -> Any:
+    """Map a pytree of logical tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda spec: logical_to_physical(spec, rules),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def named_sharding_tree(spec_tree: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        tree_logical_to_physical(spec_tree, rules),
+                        is_leaf=lambda x: isinstance(x, P))

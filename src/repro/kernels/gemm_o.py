@@ -1,0 +1,101 @@
+"""FlashOmni GEMM-O — reduction-axis sparse output projection (paper §3.5,
+Obs. 3, Eq. 3/4).
+
+``Out_i = Σ_{h∈H_i} O_i^h W_h + OP_reuse(B_c)_i``: per live row block, only
+the live heads are reduced; the cached heads' contribution arrives through
+the Taylor-forecast bias ``B_c``.  The paper relaunches the kernel for its
+two stages on GPU; on TPU both collapse into ONE kernel because the bias is
+simply the accumulator's initial value (DESIGN §2.4).
+
+Structure: grid ``(Cr, F_tiles, Hc)``, with per-row live-head CSR lists in
+scalar memory.  The bias tensor is aliased to the output, so row blocks that
+are never visited (fully cached rows) keep their forecast value — Eq. 4's
+"cache-then-reuse branch terminates immediately" for free.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gemm_o_sparse_kernel"]
+
+
+def _kernel(row_ids_ref, head_ids_ref, head_cnt_ref,
+            o_ref, w_ref, bias_ref, out_ref, acc_ref, *, hc: int):
+    c, hh = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(hh == 0)
+    def _init():
+        acc_ref[...] = bias_ref[...].astype(jnp.float32)    # B_c as accumulator init
+
+    @pl.when(hh < head_cnt_ref[c])
+    def _accum():
+        acc_ref[...] += jax.lax.dot(
+            o_ref[0].astype(jnp.float32),
+            w_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(hh == hc - 1)
+    def _done():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def gemm_o_sparse_kernel(
+    o_heads: jax.Array,    # (H, N, dh) attention outputs, head-major
+    w: jax.Array,          # (H, dh, F) output projection, per-head
+    bias: jax.Array,       # (N, F) OP_reuse(B_c) — aliased to the output
+    row_ids: jax.Array,    # (Cr,) live row-block ids
+    head_ids: jax.Array,   # (Cr, Hc) live head ids per row block
+    head_cnt: jax.Array,   # (Cr,)
+    *,
+    block_rows: int,
+    block_f: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    h, n, dh = o_heads.shape
+    f = w.shape[-1]
+    assert n % block_rows == 0
+    block_f = min(block_f, f)
+    assert f % block_f == 0
+    cr, hc = head_ids.shape
+    grid = (cr, f // block_f, hc)
+    flat_heads = head_ids.reshape(-1)
+
+    def o_map(c, fi, hh, rids, hids, hcnt):
+        hh_c = jnp.maximum(jnp.minimum(hh, hcnt[c] - 1), 0)
+        return (hids[c * hc + hh_c], rids[c], 0)
+
+    def w_map(c, fi, hh, rids, hids, hcnt):
+        hh_c = jnp.maximum(jnp.minimum(hh, hcnt[c] - 1), 0)
+        return (hids[c * hc + hh_c], 0, fi)
+
+    def bias_map(c, fi, hh, rids, hids, hcnt):
+        return (rids[c], fi)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, hc=hc),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_rows, dh), o_map),
+                pl.BlockSpec((1, dh, block_f), w_map),
+                pl.BlockSpec((block_rows, block_f), bias_map),
+            ],
+            out_specs=pl.BlockSpec((block_rows, block_f), bias_map),
+            scratch_shapes=[pltpu.VMEM((block_rows, block_f), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct(bias.shape, bias.dtype),
+        input_output_aliases={5: 0},                         # bias -> out
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(row_ids, flat_heads, head_cnt, o_heads, w, bias)

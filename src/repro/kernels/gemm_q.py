@@ -1,0 +1,86 @@
+"""FlashOmni GEMM-Q — spatial-axis sparse projection (paper §3.5, Obs. 2).
+
+At *Dispatch* steps, row blocks whose attention output is fully cached never
+need their query projection.  The GPU kernel decodes ``S_c`` per CTA and
+early-exits; the TPU adaptation gathers the LIVE row blocks through a
+scalar-prefetched index map, so dead rows cost neither MXU cycles nor DMA
+(DESIGN §2.4).
+
+The output is **compact** ``(Cr·bm, F)`` — live blocks in slot order.  The
+FlashOmni attention CSR kernel consumes Q by live-slot index, so the compact
+layout chains into attention without a scatter (layout fusion).  Use
+:func:`repro.kernels.ops.scatter_rows` when the full-shape tensor is needed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gemm_q_sparse_kernel"]
+
+
+def _kernel(row_ids_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm_q_sparse_kernel(
+    x: jax.Array,          # (N, K)
+    w: jax.Array,          # (K, F)
+    row_ids: jax.Array,    # (Cr,) int32 live row-block ids
+    *,
+    block_rows: int,       # bm — MUST equal the symbol granularity divisor
+    block_k: int = 512,
+    block_f: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    n, kdim = x.shape
+    f = w.shape[1]
+    assert n % block_rows == 0
+    block_k = min(block_k, kdim)
+    block_f = min(block_f, f)
+    assert kdim % block_k == 0 and f % block_f == 0
+    cr = row_ids.shape[0]
+    n_k = kdim // block_k
+    grid = (cr, f // block_f, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_rows, block_k),
+                             lambda c, fi, ki, ids: (ids[c], ki)),
+                pl.BlockSpec((block_k, block_f),
+                             lambda c, fi, ki, ids: (ki, fi)),
+            ],
+            out_specs=pl.BlockSpec((block_rows, block_f),
+                                   lambda c, fi, ki, ids: (c, fi)),
+            scratch_shapes=[pltpu.VMEM((block_rows, block_f), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((cr * block_rows, f), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(row_ids, x, w)

@@ -1,0 +1,164 @@
+"""Jit'd wrappers for the FlashOmni Pallas kernels.
+
+These translate the engine's logical masks into the scalar-prefetch index
+lists the kernels consume, pick interpret mode automatically off-TPU, and
+guard the degenerate all-cached case (paper A.1.1 ``S_q`` degradation) where
+the kernels would have no live work.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.symbols import active_indices
+from repro.kernels.flashomni_attention import (
+    flashomni_attention_csr,
+    flashomni_attention_symbols,
+)
+from repro.kernels.gemm_o import gemm_o_sparse_kernel
+from repro.kernels.gemm_q import gemm_q_sparse_kernel
+from repro.kernels.taylor_reuse import taylor_reuse_kernel
+
+__all__ = [
+    "on_tpu",
+    "flashomni_attention",
+    "gemm_q",
+    "gemm_o",
+    "taylor_reuse",
+    "scatter_rows",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def scatter_rows(compact: jax.Array, row_ids: jax.Array, row_cnt: jax.Array,
+                 base: jax.Array, block: int) -> jax.Array:
+    """Scatter a compact (Cr·block, F) result back into ``base`` (N, F)."""
+    cr = row_ids.shape[0]
+    t = base.shape[0] // block
+    vals = compact.reshape(cr, block, -1)
+    slot = jnp.arange(cr, dtype=jnp.int32)
+    sid = jnp.where(slot < row_cnt, row_ids, t)
+    padded = jnp.concatenate(
+        [base.reshape(t, block, -1), jnp.zeros((1, block, base.shape[-1]), base.dtype)], 0)
+    padded = padded.at[sid].set(vals.astype(base.dtype))
+    return padded[:t].reshape(base.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "variant",
+                                             "cap_q", "cap_kv", "interpret"))
+def flashomni_attention(
+    q: jax.Array,            # (BH, N, d)
+    k: jax.Array,
+    v: jax.Array,
+    m_c: jax.Array,          # (BH, T_q) bool, True = compute
+    m_s: jax.Array,          # (BH, T_q, T_kv) bool
+    o_reuse: jax.Array,      # (BH, N, d)
+    *,
+    block_q: int,
+    block_kv: int,
+    variant: str = "csr",
+    cap_q: Optional[int] = None,
+    cap_kv: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Unified sparse attention entry (kernel side of paper Fig. 4)."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    t_q, t_kv = m_c.shape[-1], m_s.shape[-1]
+    if variant == "symbols":
+        from repro.core.symbols import pack_bits
+        s_c = pack_bits(m_c)
+        s_s = pack_bits(m_s.reshape(m_s.shape[0], -1))
+        return flashomni_attention_symbols(
+            q, k, v, o_reuse, s_c, s_s,
+            block_q=block_q, block_kv=block_kv, interpret=interpret)
+    cap_q = t_q if cap_q is None else cap_q
+    cap_kv = t_kv if cap_kv is None else cap_kv
+    q_ids, q_cnt = active_indices(m_c, cap_q)
+    rows = jnp.take_along_axis(m_s, q_ids[..., None], axis=-2)       # (BH, Cq, Tkv)
+    kv_ids, kv_cnt = active_indices(rows, cap_kv)
+    out = flashomni_attention_csr(
+        q, k, v, o_reuse, q_ids, kv_ids, kv_cnt,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)
+    # Degenerate all-cached guard: the kernel writes garbage into the
+    # duplicated slot-0 block when q_cnt == 0; select the pure-reuse tensor.
+    any_live = (q_cnt > 0)[:, None, None]
+    return jnp.where(any_live, out, o_reuse)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "cap", "compact", "interpret"))
+def gemm_q(
+    x: jax.Array,            # (N, K)
+    w: jax.Array,            # (K, F)
+    row_mask: jax.Array,     # (T,) bool, T = N // block_rows
+    *,
+    block_rows: int,
+    cap: Optional[int] = None,
+    compact: bool = True,
+    interpret: Optional[bool] = None,
+):
+    """GEMM-Q wrapper.  Returns ``(y, row_ids, row_cnt)``; ``y`` is compact
+    (cap·block, F) when ``compact`` else scattered to (N, F) with zeros."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    t = row_mask.shape[-1]
+    cap = t if cap is None else cap
+    row_ids, row_cnt = active_indices(row_mask, cap)
+    y = gemm_q_sparse_kernel(x, w, row_ids, block_rows=block_rows,
+                             interpret=interpret)
+    if not compact:
+        base = jnp.zeros((x.shape[0], w.shape[-1]), x.dtype)
+        y = scatter_rows(y, row_ids, row_cnt, base, block_rows)
+    return y, row_ids, row_cnt
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "cap_rows", "cap_heads",
+                                             "interpret"))
+def gemm_o(
+    o_heads: jax.Array,      # (H, N, dh)
+    w: jax.Array,            # (H, dh, F)
+    bias: jax.Array,         # (N, F) forecast OP_reuse(B_c)
+    m_ch: jax.Array,         # (T, H) per-(row-block, head) live mask
+    *,
+    block_rows: int,
+    cap_rows: Optional[int] = None,
+    cap_heads: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = (not on_tpu()) if interpret is None else interpret
+    t, h = m_ch.shape
+    cap_rows = t if cap_rows is None else cap_rows
+    cap_heads = h if cap_heads is None else cap_heads
+    live_rows = jnp.any(m_ch, axis=-1)
+    row_ids, row_cnt = active_indices(live_rows, cap_rows)
+    rows = jnp.take(m_ch, row_ids, axis=0)                           # (Cr, H)
+    head_ids, head_cnt = active_indices(rows, cap_heads)
+    out = gemm_o_sparse_kernel(o_heads, w, bias, row_ids, head_ids, head_cnt,
+                               block_rows=block_rows, interpret=interpret)
+    return jnp.where(row_cnt > 0, out, bias)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "cap", "interpret"))
+def taylor_reuse(
+    derivs: jax.Array,       # (D+1, BH, N, d)
+    coef: jax.Array,         # (D+1,) f32
+    base: jax.Array,         # (BH, N, d)
+    cached_mask: jax.Array,  # (BH, T) True = cached (forecast these blocks)
+    *,
+    block: int,
+    cap: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = (not on_tpu()) if interpret is None else interpret
+    t = cached_mask.shape[-1]
+    cap = t if cap is None else cap
+    ids, cnt = active_indices(cached_mask, cap)
+    out = taylor_reuse_kernel(derivs, coef.reshape(1, -1).astype(jnp.float32),
+                              base, ids, block=block, interpret=interpret)
+    any_cached = (cnt > 0)[:, None, None]
+    return jnp.where(any_cached, out, base)

@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for the FlashOmni Pallas kernels.
+
+Every kernel in this package has a reference here with identical semantics
+(dense math + masking, no tiling).  Tests sweep shapes/dtypes and
+``assert_allclose`` kernel vs oracle.
+
+Mask convention: boolean, True = compute (matches the 1-bits of the paper's
+sparse symbols).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_ref",
+    "gemm_q_ref",
+    "gemm_o_ref",
+    "taylor_reuse_ref",
+]
+
+_NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,            # (BH, N, d)
+    k: jax.Array,            # (BH, N_kv, d)
+    v: jax.Array,            # (BH, N_kv, d)
+    m_c: jax.Array,          # (BH, T_q)     True = compute
+    m_s: jax.Array,          # (BH, T_q, T_kv)
+    o_reuse: jax.Array,      # (BH, N, d)    value for cached rows
+    *,
+    block_q: int,
+    block_kv: int,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """FlashOmni attention oracle (paper Algorithm 1 semantics)."""
+    n, d = q.shape[-2], q.shape[-1]
+    n_kv = k.shape[-2]
+    scale = (d ** -0.5) if scale is None else scale
+    tok = jnp.repeat(jnp.repeat(m_s, block_q, axis=-2), block_kv, axis=-1)
+    tok = tok[..., :n, :n_kv]
+    s = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * scale
+    s = jnp.where(tok, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32))
+    row_live = jnp.repeat(m_c, block_q, axis=-1)[..., :n]
+    return jnp.where(row_live[..., None], out.astype(q.dtype), o_reuse)
+
+
+def gemm_q_ref(
+    x: jax.Array,            # (N, K)
+    w: jax.Array,            # (K, F)
+    row_ids: jax.Array,      # (Cr,) live row-block ids (ascending, padded)
+    row_cnt: jax.Array,      # ()    number of valid ids
+    *,
+    block: int,
+) -> jax.Array:
+    """GEMM-Q oracle: compact (Cr*block, F) projection of the gathered live
+    row blocks.  Padding slots repeat the last live block's values."""
+    xb = x.reshape(-1, block, x.shape[-1])
+    xg = jnp.take(xb, row_ids, axis=0)
+    y = jnp.einsum("cbk,kf->cbf", xg.astype(jnp.float32), w.astype(jnp.float32))
+    return y.reshape(-1, w.shape[-1]).astype(x.dtype)
+
+
+def gemm_o_ref(
+    o_heads: jax.Array,      # (H, N, dh)
+    w: jax.Array,            # (H, dh, F)
+    bias: jax.Array,         # (N, F)  OP_reuse(B_c) forecast bias
+    row_ids: jax.Array,      # (Cr,)
+    row_cnt: jax.Array,      # ()
+    head_ids: jax.Array,     # (Cr, Hc) live head ids per live row block
+    head_cnt: jax.Array,     # (Cr,)
+    *,
+    block: int,
+) -> jax.Array:
+    """GEMM-O oracle (Eq. 3): ``Out_i = Σ_{h∈H_i} O_i^h W_h + bias_i`` for
+    live row blocks; rows never visited keep ``bias`` (Eq. 4)."""
+    h, n, dh = o_heads.shape
+    f = w.shape[-1]
+    t = n // block
+    out = bias.astype(jnp.float32).reshape(t, block, f)
+    cr, hc = head_ids.shape
+    ob = o_heads.reshape(h, t, block, dh)
+
+    def body(c, out):
+        rid = row_ids[c]
+        valid_row = c < row_cnt
+        hmask = jnp.arange(hc) < head_cnt[c]
+        og = ob[:, rid]                                     # (H, block, dh)
+        sel = jnp.take(og, head_ids[c], axis=0)             # (Hc, block, dh)
+        wg = jnp.take(w, head_ids[c], axis=0)               # (Hc, dh, F)
+        part = jnp.einsum("cbd,cdf->bf",
+                          jnp.where(hmask[:, None, None], sel, 0).astype(jnp.float32),
+                          wg.astype(jnp.float32))
+        new = bias.astype(jnp.float32).reshape(t, block, f)[rid] + part
+        return out.at[rid].set(jnp.where(valid_row, new, out[rid]))
+
+    out = jax.lax.fori_loop(0, cr, body, out)
+    return out.reshape(n, f).astype(bias.dtype)
+
+
+def taylor_reuse_ref(derivs: jax.Array, coefs: jax.Array) -> jax.Array:
+    """OP_reuse oracle: ``Σ_d coefs[d] · derivs[d]`` (TaylorSeer forecast)."""
+    return jnp.tensordot(coefs.astype(jnp.float32),
+                         derivs.astype(jnp.float32), axes=(0, 0)).astype(derivs.dtype)

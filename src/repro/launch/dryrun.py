@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  The 512 placeholder host devices exist ONLY for the dry-run.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+record memory/cost/collective analyses for EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS, arch_shapes, get_config
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.launch import steps as ST
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
+
+# HLO text: ``%all-reduce.705 = f32[256,4096]{1,0} all-reduce(%x), ...`` —
+# operands are bare names; we account the RESULT shape as bytes moved
+# (all-gather result = bytes received per device; all-reduce ≈ tensor size;
+# reduce-scatter result = shard received; a2a tuple = total moved).
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|[a-z0-9_\[\]{},]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
+                       r"f8e4m3\w*|f8e5m2\w*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    for k, v in _DTYPE_BYTES.items():
+        if dtype.startswith(k):
+            return n * v
+    return n * 4
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind (async `-done` ops excluded)."""
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(1)))
+        out[kind] = out.get(kind, 0) + total
+        out.setdefault(kind + "_count", 0)
+        out[kind + "_count"] += 1
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             *, mode_override: str | None = None, unroll: bool = False) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if unroll:
+        # Exact roofline accounting: lower the layer loop explicitly so
+        # cost_analysis sees every layer (see models.layers.maybe_scan).
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shapes = {s.name: s for s in arch_shapes(cfg)}
+    shape = shapes[shape_name]
+    rules = rules_for(cfg, shape, multi_pod=multi_pod)
+
+    if cfg.family == "dit":
+        mode = mode_override or "dispatch"
+        fn, in_shapes, in_sh, out_sh = ST.build_dit_step(cfg, shape, mesh, rules,
+                                                         mode=mode)
+        entry = f"denoise_{mode}"
+    elif shape.kind == "train":
+        fn, in_shapes, in_sh, out_sh = ST.build_train_step(cfg, shape, mesh, rules)
+        entry = "train_step"
+    elif shape.kind == "prefill":
+        fn, in_shapes, in_sh, out_sh = ST.build_prefill_step(cfg, shape, mesh, rules)
+        entry = "prefill"
+    else:
+        fn, in_shapes, in_sh, out_sh = ST.build_decode_step(cfg, shape, mesh, rules)
+        entry = "decode_step"
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*in_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        mem_rec[attr] = getattr(mem, attr, None)
+    cost = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "entry": entry,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": mesh.devices.size,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "flops_per_device": cost.get("flops"),
+        "bytes_per_device": cost.get("bytes accessed"),
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if isinstance(v, (int, float)) and
+                          ("flops" in k or "bytes" in k or "utilization" in k)},
+        "memory_analysis": mem_rec,
+        "collective_bytes": coll,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "n_params": get_config(arch).n_params(),
+        "n_active_params": get_config(arch).n_active_params(),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{mode_override}" if mode_override else ""
+    if unroll:
+        rec["unrolled"] = True
+        suffix += "__unroll"
+    path = out_dir / f"{arch}__{shape_name}__{rec['mesh']}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+    print(f"[dryrun] OK {arch} {shape_name} {rec['mesh']}{suffix} "
+          f"flops/dev={rec['flops_per_device']} compile={t_compile:.1f}s -> {path}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mode", default=None, help="dit: update|dispatch")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer loops for exact cost analysis")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for sh in arch_shapes(get_config(arch)):
+                cells.append((arch, sh.name))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, sh in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, sh, mp, out_dir, mode_override=args.mode,
+                         unroll=args.unroll)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((arch, sh, mp, repr(e)))
+                print(f"[dryrun] FAIL {arch} {sh} multi_pod={mp}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nAll {len(cells) * len(meshes)} dry-run cells compiled OK.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh construction (task spec: function, NOT module constant,
+so importing this never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "rules_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def rules_for(cfg, shape, *, multi_pod: bool):
+    """Pick sharding rules for an (arch, shape, mesh) cell.
+
+    * decode cells map the KV-cache sequence axis (``sp``) onto the model
+      axis (kv heads are replicated there — GQA kv counts don't divide 16);
+    * batch=1 long-context cells replicate the batch and spread the cache
+      sequence over BOTH mesh axes;
+    * ≥100B configs (``zero_over_pod``) extend fsdp over the pod axis.
+    """
+    from repro.distributed.sharding import ShardingRules
+
+    if getattr(cfg, "family", "") == "dit":
+        # Batch=1 video DiT serving: sequence parallel over data (and pod,
+        # when present — 33K tokens over 32 ways), heads/ff over model.
+        sp = ("pod", "data") if multi_pod else ("data",)
+        return ShardingRules(dp=(), fsdp=("data",), tp=("model",),
+                             sp=sp, ep=())
+    dp = ("pod", "data") if multi_pod else ("data",)
+    fsdp = ("pod", "data") if (multi_pod and cfg.zero_over_pod) else ("data",)
+    sp: tuple[str, ...] = ()
+    if shape.kind == "decode":
+        if shape.global_batch == 1:           # long_500k: batch can't shard
+            dp = ()
+            sp = ("data", "model")
+        else:
+            sp = ("model",)
+    return ShardingRules(dp=dp, fsdp=fsdp, tp=("model",), sp=sp, ep=())

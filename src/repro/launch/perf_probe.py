@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing probe: lower+compile ONE cell with a perf-option
+combination and print its roofline terms (hypothesis → change → re-lower →
+re-analyse loop).
+
+  PYTHONPATH=src python -m repro.launch.perf_probe --arch gemma3-1b \
+      --shape train_4k [--cast-bf16] [--moment-dtype bfloat16] \
+      [--cap-q-frac 0.6] [--mode update|dispatch] [--tag iterN]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs.registry import arch_shapes, get_config
+from repro.launch import steps as ST
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.optim.optimizer import AdamWConfig
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def probe(arch, shape_name, *, multi_pod=False, unroll=True, cast_bf16=False,
+          moment_dtype="float32", mode="dispatch", cap_q_frac=None,
+          cap_kv_frac=None, tag="probe", interval=None, out="artifacts/perf"):
+    cfg = get_config(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = {s.name: s for s in arch_shapes(cfg)}[shape_name]
+    rules = rules_for(cfg, shape, multi_pod=multi_pod)
+
+    if cfg.family == "dit":
+        from repro.core.engine import EngineConfig
+        from repro.core.masks import MaskConfig
+        ecfg = EngineConfig(
+            mask=MaskConfig(tau_q=0.5, tau_kv=0.15,
+                            interval=interval or 5, order=1, degrade=0.3,
+                            block_q=64, block_kv=64, pool=256),
+            cap_q_frac=cap_q_frac or 0.6, cap_kv_frac=cap_kv_frac or 0.9)
+        fn, in_shapes, in_sh, out_sh = ST.build_dit_step(
+            cfg, shape, mesh, rules, mode=mode, ecfg=ecfg)
+    elif shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=moment_dtype)
+        fn, in_shapes, in_sh, out_sh = ST.build_train_step(
+            cfg, shape, mesh, rules, opt_cfg=opt_cfg,
+            cast_params_bf16=cast_bf16)
+    elif shape.kind == "prefill":
+        fn, in_shapes, in_sh, out_sh = ST.build_prefill_step(cfg, shape, mesh, rules)
+    else:
+        fn, in_shapes, in_sh, out_sh = ST.build_decode_step(cfg, shape, mesh, rules)
+
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*in_shapes).compile()
+    cost = dict(compiled.cost_analysis() or {})
+    coll = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    flops = cost.get("flops", 0.0)
+    byts = cost.get("bytes accessed", 0.0)
+    cbytes = sum(v for k, v in coll.items() if not k.endswith("count"))
+    args = getattr(mem, "argument_size_in_bytes", 0)
+    rec = {
+        "tag": tag, "arch": arch, "shape": shape_name,
+        "opts": {"cast_bf16": cast_bf16, "moment_dtype": moment_dtype,
+                 "mode": mode, "cap_q_frac": cap_q_frac,
+                 "cap_kv_frac": cap_kv_frac, "interval": interval},
+        "t_compute_s": flops / PEAK, "t_memory_s": byts / HBM,
+        "t_collective_s": cbytes / ICI,
+        "flops": flops, "bytes": byts, "coll_bytes": cbytes,
+        "collectives": coll, "arg_bytes": args,
+        "compile_s": round(time.time() - t0, 1),
+    }
+    Path(out).mkdir(parents=True, exist_ok=True)
+    p = Path(out) / f"{arch}__{shape_name}__{tag}.json"
+    p.write_text(json.dumps(rec, indent=1))
+    dom = max(("compute", "memory", "collective"),
+              key=lambda k: rec[f"t_{k}_s"])
+    print(f"[perf] {arch} {shape_name} [{tag}] compute={rec['t_compute_s']:.3f}s "
+          f"memory={rec['t_memory_s']:.3f}s collective={rec['t_collective_s']:.3f}s "
+          f"dom={dom} args={args/1e9:.2f}GB -> {p}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true")
+    ap.add_argument("--cast-bf16", action="store_true")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--mode", default="dispatch")
+    ap.add_argument("--cap-q-frac", type=float, default=None)
+    ap.add_argument("--cap-kv-frac", type=float, default=None)
+    ap.add_argument("--interval", type=int, default=None)
+    ap.add_argument("--tag", default="probe")
+    args = ap.parse_args()
+    probe(args.arch, args.shape, multi_pod=args.multi_pod,
+          unroll=not args.no_unroll, cast_bf16=args.cast_bf16,
+          moment_dtype=args.moment_dtype, mode=args.mode,
+          cap_q_frac=args.cap_q_frac, cap_kv_frac=args.cap_kv_frac,
+          interval=args.interval, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Unrolled single-pod dry-run sweep for the roofline table, smallest cells
+first so results stream in early.  (The scanned --all --both-meshes sweep
+remains the compile-validation pass; this one feeds §Roofline.)"""
+
+from pathlib import Path
+
+from repro.configs.registry import ARCH_IDS, arch_shapes, get_config
+from repro.launch.dryrun import run_cell
+
+_KIND_W = {"decode": 0, "dit": 1, "prefill": 2, "train": 3}
+
+
+def main():
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sh in arch_shapes(cfg):
+            w = (_KIND_W[sh.kind], cfg.n_params() * cfg.n_layers)
+            cells.append((w, arch, sh.name))
+    cells.sort()
+    out = Path("artifacts/dryrun")
+    fails = []
+    for _, arch, sh in cells:
+        try:
+            run_cell(arch, sh, False, out, unroll=True)
+        except Exception as e:  # noqa: BLE001
+            fails.append((arch, sh, repr(e)))
+            print(f"[roofline-sweep] FAIL {arch} {sh}: {e}")
+    print(f"done, {len(fails)} failures: {fails}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) cell.
+
+These are the weak-type-correct, shardable stand-ins the multi-pod dry-run
+lowers against — no device allocation ever happens (task spec step 2).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+__all__ = ["train_batch", "train_batch_logical", "prefill_batch",
+           "prefill_batch_logical", "dit_inputs", "dit_inputs_logical"]
+
+F = jax.ShapeDtypeStruct
+
+
+def train_batch(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": F((b, s), jnp.int32), "labels": F((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = F((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = F((b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "dit":
+        nv = s - cfg.n_text_tokens
+        batch = {
+            "latents": F((b, nv, cfg.patch_dim), jnp.bfloat16),
+            "noise": F((b, nv, cfg.patch_dim), jnp.bfloat16),
+            "patch_emb": F((b, nv, cfg.d_model), jnp.bfloat16),
+            "text_emb": F((b, cfg.n_text_tokens, cfg.d_model), jnp.bfloat16),
+            "t": F((b,), jnp.float32),
+        }
+    return batch
+
+
+def train_batch_logical(cfg: ArchConfig) -> dict:
+    base = {"tokens": ("dp", None), "labels": ("dp", None)}
+    if cfg.family == "encdec":
+        base["frames"] = ("dp", None, None)
+    if cfg.family == "vlm":
+        base["patches"] = ("dp", None, None)
+    if cfg.family == "dit":
+        base = {"latents": ("dp", None, None), "noise": ("dp", None, None),
+                "patch_emb": ("dp", None, None), "text_emb": ("dp", None, None),
+                "t": ("dp",)}
+    return base
+
+
+def prefill_batch(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": F((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch = {"frames": F((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16),
+                 "tokens": F((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = F((b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_logical(cfg: ArchConfig) -> dict:
+    base = {"tokens": ("dp", None)}
+    if cfg.family == "encdec":
+        base["frames"] = ("dp", None, None)
+    if cfg.family == "vlm":
+        base["patches"] = ("dp", None, None)
+    return base
+
+
+def dit_inputs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b = shape.global_batch
+    nv = shape.seq_len - cfg.n_text_tokens
+    return {"x_vision": F((b, nv, cfg.d_model), jnp.bfloat16),
+            "text_emb": F((b, cfg.n_text_tokens, cfg.d_model), jnp.bfloat16),
+            "t": F((b,), jnp.float32)}
+
+
+def dit_inputs_logical(cfg: ArchConfig) -> dict:
+    return {"x_vision": ("dp", "sp", None), "text_emb": ("dp", None, None),
+            "t": ("dp",)}

@@ -1,0 +1,191 @@
+"""MMDiT — the paper's own model family (FLUX / HunyuanVideo style).
+
+Single-stream DiT blocks over the concatenated [text; vision] token
+sequence with adaLN-Zero timestep modulation; joint attention runs through
+the FlashOmni Update–Dispatch engine (``repro.core.engine``).  The text
+encoder and VAE/patchifier are STUBS per the task spec — inputs are
+precomputed text embeddings and latent-patch embeddings.
+
+Two jitted step functions exist per the engine's two phases:
+  * ``denoise_step(..., mode="update")``   — full attention, symbol refresh
+  * ``denoise_step(..., mode="dispatch")`` — sparse attention via symbols
+
+Engine states are stacked (L, ...) and scanned with the blocks, so the HLO
+stays one-block-sized at any depth.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import engine as E
+from repro.core.engine import AttnParams, EngineConfig, LayerState
+from repro.models import layers as L
+
+__all__ = ["init_params", "param_specs", "init_engine_states",
+           "engine_state_specs", "denoise_step", "timestep_embedding",
+           "train_loss"]
+
+
+def timestep_embedding(t: jax.Array, dim: int, max_period: float = 10000.0):
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def _init_block(cfg: ArchConfig, key, stack: Optional[int]):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 7)
+    sh = lambda *dims: dims if stack is None else (stack, *dims)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], sh(d, h * hd)) * s,
+        "wk": jax.random.normal(ks[1], sh(d, h * hd)) * s,
+        "wv": jax.random.normal(ks[2], sh(d, h * hd)) * s,
+        "wo": jax.random.normal(ks[3], sh(h * hd, d)) * s,
+        "q_scale": jnp.ones(sh(hd)),
+        "k_scale": jnp.ones(sh(hd)),
+        "mlp_wi": jax.random.normal(ks[4], sh(d, cfg.d_ff)) * s,
+        "mlp_wo": jax.random.normal(ks[5], sh(cfg.d_ff, d)) * (cfg.d_ff ** -0.5),
+        "adaln": jax.random.normal(ks[6], sh(d, 6 * d)) * 0.02,
+        "adaln_b": jnp.zeros(sh(6 * d)),
+    }
+
+
+def _block_specs():
+    n = (None,)
+    return {"wq": (*n, "fsdp", "tp"), "wk": (*n, "fsdp", "tp"),
+            "wv": (*n, "fsdp", "tp"), "wo": (*n, "tp", "fsdp"),
+            "q_scale": (*n, None), "k_scale": (*n, None),
+            "mlp_wi": (*n, "fsdp", "tp"), "mlp_wo": (*n, "tp", "fsdp"),
+            "adaln": (*n, "fsdp", None), "adaln_b": (*n, None)}
+
+
+def init_params(cfg: ArchConfig, key) -> Any:
+    kb, kt, kf, kp = jax.random.split(key, 4)
+    d = cfg.d_model
+    blocks = [_init_block(cfg, jax.random.fold_in(kb, i), None)
+              for i in range(cfg.n_layers)]
+    return {
+        "blocks": jax.tree.map(lambda *x: jnp.stack(x), *blocks),
+        "t_mlp1": jax.random.normal(kt, (256, d)) * 0.02,
+        "t_mlp2": jax.random.normal(jax.random.fold_in(kt, 1), (d, d)) * 0.02,
+        "final_mod": jax.random.normal(kf, (d, 2 * d)) * 0.02,
+        "final_proj": jax.random.normal(kp, (d, cfg.patch_dim)) * 0.02,
+        "final_norm": jnp.ones((d,)),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    return {"blocks": _block_specs(),
+            "t_mlp1": (None, "fsdp"), "t_mlp2": ("fsdp", "tp"),
+            "final_mod": ("fsdp", None), "final_proj": ("fsdp", None),
+            "final_norm": (None,)}
+
+
+def init_engine_states(cfg: ArchConfig, ecfg: EngineConfig, batch: int,
+                       n_tokens: int) -> LayerState:
+    one = E.init_layer_state(batch, cfg.n_heads, n_tokens, cfg.d_model, cfg.hd, ecfg)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers, *x.shape)), one)
+
+
+def engine_state_specs(cfg: ArchConfig, ecfg: EngineConfig) -> LayerState:
+    if ecfg.cache_mode == "bias":
+        taylor_feat = (None, None, "dp", "sp", "tp")   # (L, D+1, B, N, dm)
+    else:
+        taylor_feat = (None, None, "dp", None, "sp", None)
+    from repro.core.taylorseer import TaylorState
+    # Packed symbols are tiny (uint8); replicate the head dim (24 heads do
+    # not divide the 16-wide model axis).
+    return LayerState(
+        s_c=(None, "dp", None, None),
+        s_s=(None, "dp", None, None),
+        taylor=TaylorState(derivs=taylor_feat, n_updates=(None,)),
+        k_since=(None,),
+    )
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None]) + shift[:, None]
+
+
+def _block(cfg: ArchConfig, ecfg: EngineConfig, p, state, x, t_emb, *, mode: str,
+           n_text: int):
+    dtype = x.dtype
+    mod = (jax.nn.silu(t_emb) @ p["adaln"].astype(dtype) + p["adaln_b"].astype(dtype))
+    sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6, axis=-1)
+    xa = _modulate(L.rms_norm(x, jnp.ones((cfg.d_model,)), cfg.norm_eps), sh_a, sc_a)
+    attn_p = AttnParams(wq=p["wq"].astype(dtype), wk=p["wk"].astype(dtype),
+                        wv=p["wv"].astype(dtype), wo=p["wo"].astype(dtype),
+                        q_scale=p["q_scale"], k_scale=p["k_scale"])
+    if mode == "update":
+        o, new_state = E.update_layer(attn_p, xa, state, ecfg, n_text=n_text,
+                                      heads=cfg.n_heads)
+    elif mode == "dispatch":
+        o, new_state = E.dispatch_layer(attn_p, xa, state, ecfg, n_text=n_text,
+                                        heads=cfg.n_heads)
+    else:  # "dense": engine off (baseline / training)
+        q, k = E._qk(attn_p, xa, cfg.n_heads, None)
+        v = E._project_heads(xa, attn_p.wv, cfg.n_heads)
+        from repro.core.attention import dense_attention
+        oh = dense_attention(q, k, v)
+        o = oh.transpose(0, 2, 1, 3).reshape(*xa.shape[:2], -1) @ attn_p.wo
+        new_state = state
+    from repro.distributed.ctx import constrain
+    x = constrain(x + g_a[:, None] * o.astype(dtype), "dp", "sp", None)
+    xm = _modulate(L.rms_norm(x, jnp.ones((cfg.d_model,)), cfg.norm_eps), sh_m, sc_m)
+    y = constrain(jax.nn.gelu(xm @ p["mlp_wi"].astype(dtype)), "dp", "sp", "tp")
+    y = constrain(y @ p["mlp_wo"].astype(dtype), "dp", "sp", None)
+    return x + g_m[:, None] * y, new_state
+
+
+def denoise_step(params, cfg: ArchConfig, ecfg: EngineConfig, states: LayerState,
+                 x_vision: jax.Array, text_emb: jax.Array, t: jax.Array,
+                 *, mode: str, dtype=jnp.bfloat16):
+    """One diffusion step: predicts the velocity field for ``x_vision``.
+
+    x_vision (B, N_v, d_model) latent patch embeddings; text_emb (B, N_t, d);
+    t (B,) diffusion time in [0, 1].  Returns (velocity, new_states).
+    """
+    b = x_vision.shape[0]
+    n_text = text_emb.shape[1]
+    from repro.distributed.ctx import constrain
+    x = jnp.concatenate([text_emb.astype(dtype), x_vision.astype(dtype)], axis=1)
+    x = constrain(x, "dp", "sp", None)
+    t_emb = timestep_embedding(t * 1000.0, 256).astype(dtype) @ params["t_mlp1"].astype(dtype)
+    t_emb = (jax.nn.silu(t_emb) @ params["t_mlp2"].astype(dtype)).astype(dtype)
+
+    def body(x, sl):
+        p, st = sl
+        x, new_st = _block(cfg, ecfg, p, st, x, t_emb, mode=mode, n_text=n_text)
+        return x, new_st
+
+    from repro.models import layers as L
+    x, new_states = L.maybe_scan(body, x, (params["blocks"], states),
+                                 scan=cfg.scan_layers)
+    mod = jax.nn.silu(t_emb) @ params["final_mod"].astype(dtype)
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    x = _modulate(L.rms_norm(x, params["final_norm"], cfg.norm_eps), sh, sc)
+    v = x[:, n_text:] @ params["final_proj"].astype(dtype)
+    return v, new_states
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, dtype=jnp.bfloat16):
+    """Flow-matching training loss (rectified flow): v_θ(x_t, t) ≈ x1 − x0.
+
+    batch: {"latents": (B,N_v,patch_dim) clean targets,
+            "patch_emb": (B,N_v,d_model) embedded noisy input,
+            "text_emb": (B,N_t,d_model), "t": (B,), "noise": like latents}.
+    """
+    ecfg = EngineConfig()                    # engine off in training (dense)
+    states = init_engine_states(cfg, ecfg, batch["patch_emb"].shape[0],
+                                batch["text_emb"].shape[1] + batch["patch_emb"].shape[1])
+    v, _ = denoise_step(params, cfg, ecfg, states, batch["patch_emb"],
+                        batch["text_emb"], batch["t"], mode="dense", dtype=dtype)
+    target = batch["latents"] - batch["noise"]
+    return jnp.mean(jnp.square(v.astype(jnp.float32) - target.astype(jnp.float32)))

@@ -1,0 +1,222 @@
+"""Whisper-large-v3 backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+The conv audio frontend is a STUB per the task spec — ``input_specs``
+provides precomputed mel-frame embeddings (B, 1500, d).  Both stacks are
+vanilla pre-LN transformers (LayerNorm + GELU MLP, no gating); the decoder
+adds cross-attention to the encoder output.  FlashOmni applicability: S_s
+block-skipping on encoder self-attention and decoder cross-attention
+(the paper's t↔v metrics map onto text↔audio); S_c inapplicable.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+__all__ = ["init_params", "param_specs", "forward", "train_loss",
+           "init_cache", "cache_specs", "prefill", "decode_step"]
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+def _init_ln(d, stack=None):
+    sh = (d,) if stack is None else (stack, d)
+    return {"scale": jnp.ones(sh), "bias": jnp.zeros(sh)}
+
+
+def _init_vanilla_mlp(key, d, ff, stack=None):
+    k1, k2 = jax.random.split(key)
+    sh1 = (d, ff) if stack is None else (stack, d, ff)
+    sh2 = (ff, d) if stack is None else (stack, ff, d)
+    return {"wi": jax.random.normal(k1, sh1) * d ** -0.5,
+            "bi": jnp.zeros(sh1[:-2] + (ff,)),
+            "wo": jax.random.normal(k2, sh2) * ff ** -0.5,
+            "bo": jnp.zeros(sh2[:-2] + (d,))}
+
+
+def _vanilla_mlp(p, x):
+    dtype = x.dtype
+    h = jax.nn.gelu(x @ p["wi"].astype(dtype) + p["bi"].astype(dtype))
+    return h @ p["wo"].astype(dtype) + p["bo"].astype(dtype)
+
+
+def _init_block(cfg: ArchConfig, key, stack, cross: bool):
+    ks = jax.random.split(key, 3)
+    attn, _ = L.init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, stack=stack)
+    p = {"attn": attn, "ln1": _init_ln(cfg.d_model, stack),
+         "mlp": _init_vanilla_mlp(ks[1], cfg.d_model, cfg.d_ff, stack),
+         "ln2": _init_ln(cfg.d_model, stack)}
+    if cross:
+        xattn, _ = L.init_attention(ks[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.hd, stack=stack)
+        p["xattn"] = xattn
+        p["lnx"] = _init_ln(cfg.d_model, stack)
+    return p
+
+
+def _block_specs(cross: bool):
+    ln = {"scale": (None, None), "bias": (None, None)}
+    mlp = {"wi": (None, "fsdp", "tp"), "bi": (None, "tp"),
+           "wo": (None, "tp", "fsdp"), "bo": (None, None)}
+    s = {"attn": L.attention_specs(True), "ln1": ln, "mlp": mlp, "ln2": ln}
+    if cross:
+        s["xattn"] = L.attention_specs(True)
+        s["lnx"] = ln
+    return s
+
+
+def init_params(cfg: ArchConfig, key) -> Any:
+    ke, kd, kte, kpe, kpd, kh = jax.random.split(key, 6)
+    n_enc = n_dec = cfg.n_layers
+    enc = [_init_block(cfg, jax.random.fold_in(ke, i), None, cross=False)
+           for i in range(n_enc)]
+    dec = [_init_block(cfg, jax.random.fold_in(kd, i), None, cross=True)
+           for i in range(n_dec)]
+    return {
+        "tok_embed": jax.random.normal(kte, (cfg.vocab_padded, cfg.d_model)) * 0.02,
+        "pos_enc": jax.random.normal(kpe, (cfg.encoder_len, cfg.d_model)) * 0.02,
+        "pos_dec": jax.random.normal(kpd, (32768, cfg.d_model)) * 0.02,
+        "enc": jax.tree.map(lambda *x: jnp.stack(x), *enc),
+        "dec": jax.tree.map(lambda *x: jnp.stack(x), *dec),
+        "ln_enc": _init_ln(cfg.d_model),
+        "ln_dec": _init_ln(cfg.d_model),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    ln0 = {"scale": (None,), "bias": (None,)}
+    return {"tok_embed": ("tp", "fsdp"), "pos_enc": (None, "fsdp"),
+            "pos_dec": (None, "fsdp"),
+            "enc": _block_specs(cross=False), "dec": _block_specs(cross=True),
+            "ln_enc": ln0, "ln_dec": ln0}
+
+
+def _mha(p, x, kv_src, cfg, *, causal):
+    b, s, _ = x.shape
+    dtype = x.dtype
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"].astype(dtype)).reshape(b, s, h, hd)
+    k = (kv_src @ p["wk"].astype(dtype)).reshape(b, kv_src.shape[1], hkv, hd)
+    v = (kv_src @ p["wv"].astype(dtype)).reshape(b, kv_src.shape[1], hkv, hd)
+    o = L.gqa_attention(q, k, v, causal=causal)
+    return o.reshape(b, s, h * hd) @ p["wo"].astype(dtype)
+
+
+def encode(params, cfg: ArchConfig, frames, *, dtype=jnp.bfloat16):
+    """frames: (B, encoder_len, d_model) — precomputed conv-frontend output."""
+    x = frames.astype(dtype) + params["pos_enc"].astype(dtype)
+
+    def body(x, p):
+        xa = layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+        x = x + _mha(p["attn"], xa, xa, cfg, causal=False)
+        xm = layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+        return x + _vanilla_mlp(p["mlp"], xm), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = L.maybe_scan(body, x, params["enc"], scan=cfg.scan_layers)
+    return layer_norm(x, params["ln_enc"]["scale"], params["ln_enc"]["bias"])
+
+
+def decode_train(params, cfg: ArchConfig, tokens, enc_out, *, dtype=jnp.bfloat16):
+    b, s = tokens.shape
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(dtype)
+    x = x + params["pos_dec"][:s].astype(dtype)
+
+    def body(x, p):
+        xa = layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+        x = x + _mha(p["attn"], xa, xa, cfg, causal=True)
+        xc = layer_norm(x, p["lnx"]["scale"], p["lnx"]["bias"])
+        x = x + _mha(p["xattn"], xc, enc_out, cfg, causal=False)
+        xm = layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+        return x + _vanilla_mlp(p["mlp"], xm), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = L.maybe_scan(body, x, params["dec"], scan=cfg.scan_layers)
+    x = layer_norm(x, params["ln_dec"]["scale"], params["ln_dec"]["bias"])
+    logits = x @ params["tok_embed"].T.astype(dtype)
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    return logits
+
+
+def forward(params, cfg: ArchConfig, batch, *, dtype=jnp.bfloat16):
+    enc_out = encode(params, cfg, batch["frames"], dtype=dtype)
+    logits = decode_train(params, cfg, batch["tokens"], enc_out, dtype=dtype)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, dtype=jnp.bfloat16):
+    logits, _ = forward(params, cfg, batch, dtype=dtype)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    nl = cfg.n_layers
+    kv = lambda length: {
+        "k": jnp.zeros((nl, batch, length, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((nl, batch, length, cfg.n_kv_heads, cfg.hd), dtype)}
+    return {"self": kv(max_len), "cross": kv(cfg.encoder_len),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig):
+    kv = {"k": (None, "dp", "sp", None, None), "v": (None, "dp", "sp", None, None)}
+    # Cross K/V: encoder_len=1500 divides no mesh axis -> batch-sharded only.
+    xkv = {"k": (None, "dp", None, None, None), "v": (None, "dp", None, None, None)}
+    return {"self": kv, "cross": xkv, "len": ("dp",)}
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos, *, dtype=jnp.bfloat16):
+    """One decoder token; cross K/V assumed precomputed in the cache."""
+    b = token.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = jnp.take(params["tok_embed"], token[:, None], axis=0).astype(dtype)
+    x = x + jax.lax.dynamic_index_in_dim(params["pos_dec"], pos, keepdims=True).astype(dtype)
+
+    def body(x, sl):
+        p, kvs, kvx = sl
+        xa = layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+        q = (xa @ p["attn"]["wq"].astype(dtype)).reshape(b, 1, h, hd)
+        kq = (xa @ p["attn"]["wk"].astype(dtype)).reshape(b, 1, hkv, hd)
+        vq = (xa @ p["attn"]["wv"].astype(dtype)).reshape(b, 1, hkv, hd)
+        slot = jnp.minimum(pos, kvs["k"].shape[1] - 1)
+        kc = kvs["k"].at[:, slot].set(kq[:, 0].astype(kvs["k"].dtype))
+        vc = kvs["v"].at[:, slot].set(vq[:, 0].astype(kvs["v"].dtype))
+        cl = jnp.minimum(pos + 1, kc.shape[1]) * jnp.ones((b,), jnp.int32)
+        o = L.decode_attention(q, kc, vc, cl)
+        x = x + o.reshape(b, 1, h * hd) @ p["attn"]["wo"].astype(dtype)
+        xc = layer_norm(x, p["lnx"]["scale"], p["lnx"]["bias"])
+        qx = (xc @ p["xattn"]["wq"].astype(dtype)).reshape(b, 1, h, hd)
+        el = kvx["k"].shape[1] * jnp.ones((b,), jnp.int32)
+        ox = L.decode_attention(qx, kvx["k"], kvx["v"], el)
+        x = x + ox.reshape(b, 1, h * hd) @ p["xattn"]["wo"].astype(dtype)
+        xm = layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+        return x + _vanilla_mlp(p["mlp"], xm), {"k": kc, "v": vc}
+
+    x, new_self = L.maybe_scan(body, x, (params["dec"], cache["self"],
+                                         cache["cross"]), scan=cfg.scan_layers)
+    x = layer_norm(x, params["ln_dec"]["scale"], params["ln_dec"]["bias"])
+    logits = (x @ params["tok_embed"].T.astype(dtype))[:, 0]
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    return logits, dict(cache, self=new_self, len=cache["len"] + 1)
+
+
+def prefill(params, cfg: ArchConfig, batch, *, dtype=jnp.bfloat16):
+    logits, _ = forward(params, cfg, batch, dtype=dtype)
+    return logits[:, -1]

@@ -1,0 +1,343 @@
+"""Shared model layers (pure-JAX pytrees + logical sharding specs).
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+params pytree with tuples of LOGICAL axis names (see
+``repro.distributed.sharding``).  Layer stacks are initialised with a
+leading ``L`` dim (spec ``None``) and applied with ``lax.scan`` so the HLO
+stays one-layer-sized regardless of depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_dense", "init_rmsnorm", "rms_norm", "rope_table", "apply_rope",
+    "gqa_attention", "local_attention", "decode_attention",
+    "init_attention", "attention_specs", "init_mlp", "mlp",
+    "init_moe", "moe_mlp", "softmax_xent", "maybe_scan",
+]
+
+
+def maybe_scan(body, init, xs, *, scan: bool = True):
+    """``lax.scan`` or an unrolled python loop (same signature/результат).
+
+    Unrolling exists for the roofline dry-run: XLA's ``cost_analysis``
+    counts a while-loop body ONCE regardless of trip count, so scanned
+    models under-report FLOPs/bytes by ~n_layers.  ``--unroll`` dry-runs
+    lower the loop explicitly to get exact per-device costs (the scanned
+    variant remains the compile-validation + production path).
+    """
+    if scan:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *e: jnp.stack(e), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param init helpers
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, spec=("fsdp", "tp"), dtype=jnp.float32,
+               stack: Optional[int] = None):
+    scale = d_in ** -0.5
+    shape = (d_in, d_out) if stack is None else (stack, d_in, d_out)
+    w = jax.random.normal(key, shape, dtype) * scale
+    s = spec if stack is None else (None, *spec)
+    return w, s
+
+
+def init_rmsnorm(d: int, stack: Optional[int] = None):
+    shape = (d,) if stack is None else (stack, d)
+    spec = (None,) if stack is None else (None, None)
+    return jnp.ones(shape, jnp.float32), spec
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_table(positions: jax.Array, dim: int, theta: float = 10000.0):
+    """positions (...,) int -> (cos, sin) each (..., dim//2) f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, dh) or (..., S, dh); cos/sin broadcastable (..., S, dh//2)."""
+    if x.ndim == cos.ndim + 2:                    # (B,S,H,dh) with (B?,S,dh/2)
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill): chunked causal GQA, optional window.
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(qc, k):
+    """qc (B,Hkv,G,C,dh) x k (B,Hkv,S,dh) -> (B,Hkv,G,C,S)."""
+    return jnp.einsum("bhgcd,bhsd->bhgcs", qc, k)
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                  window: Optional[int] = None, chunk: int = 512,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Chunked masked attention.  q (B,S,H,dh); k,v (B,Skv,Hkv,dh).
+
+    Memory is O(chunk·S_kv) per head; XLA fuses the inner softmax.  The
+    window mask also enables the gemma/mixtral sliding-window layers (the
+    sub-quadratic path for those is :func:`local_attention`).
+
+    §Perf note (EXPERIMENTS iteration A1): the loop slices Q by INDEX from
+    the un-transposed operand instead of scanning a transposed stacked
+    copy — GSPMD keeps batch/head sharding through dynamic-slice, whereas
+    the stacked form lost it (involuntary full rematerialisation:
+    replicated f32[global_batch, ...] temps, ~30x memory-term inflation).
+    """
+    b, s, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = (dh ** -0.5) if scale is None else scale
+    from repro.distributed.ctx import constrain
+    qh = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, s, dh) * scale
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    qh = constrain(qh, "dp", None, None, None, "tp")
+    kh = constrain(kh, "dp", None, None, "tp")
+    vh = constrain(vh, "dp", None, None, "tp")
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    kv_pos = jnp.arange(skv)
+
+    def one_chunk(ci):
+        qc = jax.lax.dynamic_slice_in_dim(qh, ci * chunk, chunk, axis=3)
+        qc = constrain(qc, "dp", None, None, None, "tp")
+        sc = jnp.einsum("bhgcd,bhsd->bhgcs", qc, kh).astype(jnp.float32)
+        q_pos = ci * chunk + jnp.arange(chunk) + q_offset
+        mask = jnp.ones((chunk, skv), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+        sc = jnp.where(mask, sc, _NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhgcs,bhsd->bhgcd", p, vh.astype(jnp.float32))
+        return constrain(o.astype(q.dtype), "dp", None, None, None, "tp")
+
+    out = jax.lax.map(one_chunk, jnp.arange(n_chunks))   # (nc,b,hkv,g,chunk,dh)
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, n_chunks * chunk, dh)
+    out = out[:, :, :, :s].reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def local_attention(q, k, v, *, window: int, chunk: Optional[int] = None,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Sub-quadratic sliding-window attention: each q chunk attends to a
+    banded KV slice of length chunk+window.  Cost O(S·(chunk+window))."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    chunk = window if chunk is None else chunk
+    scale = (dh ** -0.5) if scale is None else scale
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    band = window + chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # Pad KV on the left so every band slice is in range.
+    kp = jnp.pad(k, ((0, 0), (band - chunk, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (band - chunk, pad), (0, 0), (0, 0)))
+    qch = q.reshape(b, n_chunks, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def one_chunk(ci, qc):
+        start = ci * chunk                      # band begins at start in padded kv
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+        qg = qc.reshape(b, chunk, hkv, g, dh) * scale
+        sc = jnp.einsum("bchgd,bshd->bhgcs", qg, kb).astype(jnp.float32)
+        q_pos = ci * chunk + jnp.arange(chunk)
+        kv_pos = start + jnp.arange(band) - (band - chunk)
+        mask = (q_pos[:, None] >= kv_pos[None, :]) & \
+               (q_pos[:, None] - kv_pos[None, :] < window) & (kv_pos[None, :] >= 0)
+        sc = jnp.where(mask, sc, _NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        ob = jnp.einsum("bhgcs,bshd->bchgd", p, vb.astype(jnp.float32))
+        return ob.reshape(b, chunk, h, dh)
+
+    out = jax.lax.map(lambda args: one_chunk(*args), (jnp.arange(n_chunks), qch))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, h, dh)
+    return out[:, :s].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: Optional[int] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode: q (B,1,H,dh) vs caches (B,S,Hkv,dh)."""
+    b, _, h, dh = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = (dh ** -0.5) if scale is None else scale
+    qh = q.reshape(b, hkv, g, dh) * scale
+    sc = jnp.einsum("bhgd,bshd->bhgs", qh, k_cache).astype(jnp.float32)
+    pos = jnp.arange(s)
+    mask = pos[None, :] < cache_len[:, None]                  # (B,S)
+    if window is not None:
+        mask &= pos[None, :] >= cache_len[:, None] - window
+    sc = jnp.where(mask[:, None, None, :], sc, _NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+                   stack: Optional[int] = None, qk_norm: bool = False):
+    ks = jax.random.split(key, 4)
+    wq, sq = init_dense(ks[0], d_model, n_heads * head_dim, ("fsdp", "tp"), stack=stack)
+    wk, sk = init_dense(ks[1], d_model, n_kv_heads * head_dim, ("fsdp", "tp"), stack=stack)
+    wv, sv = init_dense(ks[2], d_model, n_kv_heads * head_dim, ("fsdp", "tp"), stack=stack)
+    wo, so = init_dense(ks[3], n_heads * head_dim, d_model, ("tp", "fsdp"), stack=stack)
+    p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    s = {"wq": sq, "wk": sk, "wv": sv, "wo": so}
+    if qk_norm:
+        p["q_norm"], s["q_norm"] = init_rmsnorm(head_dim, stack)
+        p["k_norm"], s["k_norm"] = init_rmsnorm(head_dim, stack)
+    return p, s
+
+
+def attention_specs(stack: bool, qk_norm: bool = False):
+    base = (None,) if stack else ()
+    s = {"wq": (*base, "fsdp", "tp"), "wk": (*base, "fsdp", "tp"),
+         "wv": (*base, "fsdp", "tp"), "wo": (*base, "tp", "fsdp")}
+    if qk_norm:
+        s["q_norm"] = (*base, None)
+        s["k_norm"] = (*base, None)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SiLU) & MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, stack: Optional[int] = None):
+    ks = jax.random.split(key, 3)
+    wi, si = init_dense(ks[0], d_model, d_ff, ("fsdp", "tp"), stack=stack)
+    wg, sg = init_dense(ks[1], d_model, d_ff, ("fsdp", "tp"), stack=stack)
+    wo, so = init_dense(ks[2], d_ff, d_model, ("tp", "fsdp"), stack=stack)
+    return {"wi": wi, "wg": wg, "wo": wo}, {"wi": si, "wg": sg, "wo": so}
+
+
+def mlp(p, x):
+    from repro.distributed.ctx import constrain
+    # Constrain the dot OUTPUTS to stay batch-sharded: otherwise GSPMD may
+    # pick contraction-sharded partials (fsdp weight dim) and all-reduce
+    # global-batch activations (§Perf iteration A4 — 5x collective win).
+    h = jax.nn.silu(constrain(x @ p["wg"], "dp", None, "tp")) * \
+        constrain(x @ p["wi"], "dp", None, "tp")
+    return constrain(h @ p["wo"], "dp", None, None)
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int,
+             stack: Optional[int] = None):
+    ks = jax.random.split(key, 4)
+    shape = lambda *dims: dims if stack is None else (stack, *dims)
+    base = () if stack is None else (None,)
+    scale = d_model ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], shape(d_model, num_experts)) * scale,
+        "wi": jax.random.normal(ks[1], shape(num_experts, d_model, d_ff)) * scale,
+        "wg": jax.random.normal(ks[2], shape(num_experts, d_model, d_ff)) * scale,
+        "wo": jax.random.normal(ks[3], shape(num_experts, d_ff, d_model)) * (d_ff ** -0.5),
+    }
+    s = {
+        "router": (*base, "fsdp", None),
+        "wi": (*base, "ep", "fsdp", "tp"),
+        "wg": (*base, "ep", "fsdp", "tp"),
+        "wo": (*base, "ep", "tp", "fsdp"),
+    }
+    return p, s
+
+
+def moe_mlp(p, x, *, top_k: int, capacity_factor: float = 1.25):
+    """Capacity-based top-k MoE (gather-dispatch; FLOPs ≈ k·tokens·expert).
+
+    EP-friendly: expert buffers (E, C, d) shard E over ``ep`` and flow
+    through an all-to-all inserted by the partitioner when ep is mapped.
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    n = b * s
+    xf = x.reshape(n, d)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, eids = jax.lax.top_k(probs, top_k)                 # (N,k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    cap = int(capacity_factor * n * top_k / e) + 1
+    flat_e = eids.reshape(-1)                                 # (N*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                      # position in expert
+    flat_pos = jnp.sum(pos * onehot, axis=-1)                 # (N*k,)
+    keep = flat_pos < cap
+    tok_ids = jnp.repeat(jnp.arange(n), top_k)
+
+    # Dispatch: (E, C, d) expert buffers.
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, flat_e, e - 1),
+                 jnp.where(keep, flat_pos, cap - 1)].add(
+        jnp.where(keep[:, None], xf[tok_ids], 0))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    yb = jnp.einsum("ecf,efd->ecd", h, p["wo"])               # (E,C,d)
+
+    # Combine: gather back and weight by gate.
+    flat_gate = gates.reshape(-1)
+    contrib = yb[flat_e, jnp.minimum(flat_pos, cap - 1)] * \
+        (flat_gate * keep.astype(flat_gate.dtype))[:, None]
+    y = jnp.zeros((n, d), jnp.float32).at[tok_ids].add(contrib.astype(jnp.float32))
+    aux = _load_balance_loss(probs, eids, e)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _load_balance_loss(probs, eids, e):
+    """Switch-style load-balancing auxiliary loss."""
+    n = probs.shape[0]
+    frac_tokens = jnp.mean(jax.nn.one_hot(eids[:, 0], e), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return e * jnp.sum(frac_tokens * frac_probs)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4):
+    """Cross entropy with z-loss; logits (..., V), labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

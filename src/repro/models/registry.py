@@ -1,0 +1,60 @@
+"""Model registry: family -> module with a unified batch-dict API."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import dit, encdec, rglru, ssm, transformer, vision
+
+__all__ = ["get_model", "Model"]
+
+
+class Model:
+    """Thin adapter giving every family the same entry points.
+
+    ``train_loss(params, batch)``, ``prefill(params, batch)``,
+    ``decode_step(params, cache, batch)``; batches are dicts produced by
+    ``repro.launch.specs.input_specs``.
+    """
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.mod = {
+            "dense": transformer, "moe": transformer, "vlm": vision,
+            "ssm": ssm, "hybrid": rglru, "encdec": encdec, "dit": dit,
+        }[cfg.family]
+
+    # -- params -----------------------------------------------------------
+    def init_params(self, key):
+        return self.mod.init_params(self.cfg, key)
+
+    def param_specs(self):
+        return self.mod.param_specs(self.cfg)
+
+    # -- training ---------------------------------------------------------
+    def train_loss(self, params, batch, *, dtype=jnp.bfloat16):
+        if self.cfg.family in ("dense", "moe", "ssm", "hybrid"):
+            return self.mod.train_loss(params, self.cfg, batch, dtype=dtype)
+        return self.mod.train_loss(params, self.cfg, batch, dtype=dtype)
+
+    # -- serving ----------------------------------------------------------
+    def prefill(self, params, batch, *, dtype=jnp.bfloat16):
+        if self.cfg.family in ("dense", "moe", "ssm", "hybrid"):
+            return self.mod.prefill(params, self.cfg, batch["tokens"], dtype=dtype)
+        return self.mod.prefill(params, self.cfg, batch, dtype=dtype)
+
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        return self.mod.init_cache(self.cfg, batch_size, max_len, dtype)
+
+    def cache_specs(self):
+        return self.mod.cache_specs(self.cfg)
+
+    def decode_step(self, params, cache, token, pos, *, dtype=jnp.bfloat16):
+        return self.mod.decode_step(params, self.cfg, cache, token, pos, dtype=dtype)
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,328 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks +
+local attention, pattern 1 attention : 2 recurrent (period 3).
+
+The RG-LRU gate:  r_t = σ(W_a x + b_a),  i_t = σ(W_x x + b_x)
+                  log a_t = -c · softplus(Λ) · r_t          (c = 8)
+                  h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Sequences use ``jax.lax.associative_scan`` (O(log S) depth — this plus the
+local-attention window is why the arch runs the ``long_500k`` cell with a
+CONSTANT-size decode state).  FlashOmni applicability: ``S_s`` expresses
+the local-attention window as a static symbol pattern on attn layers;
+feature caching is inapplicable (no diffusion timesteps).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+__all__ = ["init_params", "param_specs", "forward", "train_loss",
+           "init_cache", "cache_specs", "prefill", "decode_step", "rg_lru"]
+
+_C = 8.0
+CONV_K = 4
+
+
+def rg_lru(x, gate_x, gate_a, lam):
+    """x, gates (B,S,D); lam (D,). Associative scan over a_t h + b_t."""
+    r = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    i = jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(lam) * r                  # (B,S,D)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = mult * (i * x.astype(jnp.float32))
+
+    def combine(l, r_):
+        a1, b1 = l
+        a2, b2 = r_
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype)
+
+
+def rg_lru_step(state, x, gate_x, gate_a, lam):
+    r = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    i = jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(lam) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    h = a * state + mult * (i * x.astype(jnp.float32))
+    return h.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _init_rec_block(cfg: ArchConfig, key, stack: Optional[int]):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    sh = lambda *dims: dims if stack is None else (stack, *dims)
+    s = d ** -0.5
+    p = {
+        "ln": jnp.ones(sh(d)),
+        "w_in_x": jax.random.normal(ks[0], sh(d, d)) * s,     # recurrent branch
+        "w_in_y": jax.random.normal(ks[1], sh(d, d)) * s,     # gelu gate branch
+        "conv": jax.random.normal(ks[2], sh(CONV_K, d)) * 0.2,
+        "w_gate_x": jax.random.normal(ks[3], sh(d, d)) * s,
+        "w_gate_a": jax.random.normal(ks[4], sh(d, d)) * s,
+        "lam": jnp.full(sh(d), 0.65),
+        "w_out": jax.random.normal(ks[5], sh(d, d)) * s,
+    }
+    return p
+
+
+def _rec_specs(stack: bool):
+    b = (None,) if stack else ()
+    return {"ln": (*b, None), "w_in_x": (*b, "fsdp", "tp"), "w_in_y": (*b, "fsdp", "tp"),
+            "conv": (*b, None, "tp"), "w_gate_x": (*b, "fsdp", "tp"),
+            "w_gate_a": (*b, "fsdp", "tp"), "lam": (*b, "tp"),
+            "w_out": (*b, "tp", "fsdp")}
+
+
+def _init_attn_block(cfg: ArchConfig, key, stack: Optional[int]):
+    ka, km = jax.random.split(key)
+    attn, _ = L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, stack=stack, qk_norm=False)
+    mlp, _ = L.init_mlp(km, cfg.d_model, cfg.d_ff, stack=stack)
+    sh = lambda *dims: dims if stack is None else (stack, *dims)
+    return {"attn": attn, "mlp": mlp, "ln1": jnp.ones(sh(cfg.d_model)),
+            "ln2": jnp.ones(sh(cfg.d_model))}
+
+
+def _attn_specs(stack: bool):
+    b = (None,) if stack else ()
+    return {"attn": L.attention_specs(stack), "ln1": (*b, None), "ln2": (*b, None),
+            "mlp": {"wi": (*b, "fsdp", "tp"), "wg": (*b, "fsdp", "tp"),
+                    "wo": (*b, "tp", "fsdp")}}
+
+
+def _init_mlp_block(cfg, key, stack):
+    mlp, _ = L.init_mlp(key, cfg.d_model, cfg.d_ff, stack=stack)
+    sh = lambda *dims: dims if stack is None else (stack, *dims)
+    return {"mlp": mlp, "ln": jnp.ones(sh(cfg.d_model))}
+
+
+def n_cycles(cfg: ArchConfig) -> int:
+    # Pattern period 3: [recurrent, recurrent, local-attn]
+    assert cfg.n_layers % 3 == 2 or cfg.n_layers % 3 == 0, cfg.n_layers
+    return cfg.n_layers // 3
+
+
+def init_params(cfg: ArchConfig, key) -> Any:
+    ke, kr, ka, kh, kt = jax.random.split(key, 5)
+    nc = n_cycles(cfg)
+    rec = [ _init_rec_block(cfg, jax.random.fold_in(kr, i), None)
+            for i in range(nc * 2) ]
+    params = {
+        "embed": jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model)) * 0.02,
+        "rec": jax.tree.map(lambda *x: jnp.stack(x).reshape(nc, 2, *x[0].shape), *rec),
+        "attn": _init_attn_block(cfg, ka, nc),
+        "final_norm": jnp.ones((cfg.d_model,)),
+    }
+    # trailing layers (26 % 3 == 2): two recurrent blocks
+    tail = cfg.n_layers - nc * 3
+    if tail:
+        t = [_init_rec_block(cfg, jax.random.fold_in(kt, i), None) for i in range(tail)]
+        params["tail"] = jax.tree.map(lambda *x: jnp.stack(x), *t)
+    return params
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    nc = n_cycles(cfg)
+    specs = {
+        "embed": ("tp", "fsdp"),
+        "rec": jax.tree.map(lambda s: (None, *s), _rec_specs(True),
+                            is_leaf=lambda x: isinstance(x, tuple)),
+        "attn": _attn_specs(True),
+        "final_norm": (None,),
+    }
+    if cfg.n_layers - nc * 3:
+        specs["tail"] = _rec_specs(True)
+    return specs
+
+
+def _rec_apply(cfg, p, x):
+    dtype = x.dtype
+    res = x
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    y = jax.nn.gelu(xn @ p["w_in_y"].astype(dtype))
+    xr = xn @ p["w_in_x"].astype(dtype)
+    xr = _causal_conv(xr, p["conv"].astype(dtype))
+    h = rg_lru(xr, xn @ p["w_gate_x"].astype(dtype),
+               xn @ p["w_gate_a"].astype(dtype), p["lam"])
+    return res + (h * y) @ p["w_out"].astype(dtype)
+
+
+def _causal_conv(x, w):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+
+
+def _attn_apply_blk(cfg, p, x, cos, sin):
+    dtype = x.dtype
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xa = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (xa @ p["attn"]["wq"].astype(dtype)).reshape(b, s, h, hd)
+    k = (xa @ p["attn"]["wk"].astype(dtype)).reshape(b, s, hkv, hd)
+    v = (xa @ p["attn"]["wv"].astype(dtype)).reshape(b, s, hkv, hd)
+    q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    if cfg.window and s > 2 * cfg.window:
+        o = L.local_attention(q, k, v, window=cfg.window)
+    else:
+        o = L.gqa_attention(q, k, v, causal=True, window=cfg.window)
+    x = x + o.reshape(b, s, h * hd) @ p["attn"]["wo"].astype(dtype)
+    xm = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp(jax.tree.map(lambda w: w.astype(dtype), p["mlp"]), xm)
+
+
+def forward(params, cfg: ArchConfig, tokens, *, dtype=jnp.bfloat16):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype) * (cfg.d_model ** 0.5)
+    cos, sin = L.rope_table(jnp.arange(s), cfg.hd, cfg.rope_theta)
+    remat = (lambda f: jax.checkpoint(
+        f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)) \
+        if cfg.remat else (lambda f: f)
+
+    def cycle(x, sl):
+        def rec_body(x, p):
+            return _rec_apply(cfg, p, x), None
+        x, _ = L.maybe_scan(remat(rec_body), x, sl["rec"], scan=True)
+        x = remat(lambda x2, p: _attn_apply_blk(cfg, p, x2, cos, sin))(x, sl["attn"])
+        return x, None
+
+    x, _ = L.maybe_scan(cycle, x, {"rec": params["rec"], "attn": params["attn"]},
+                        scan=cfg.scan_layers)
+    if "tail" in params:
+        def rec_body(x, p):
+            return _rec_apply(cfg, p, x), None
+        x, _ = L.maybe_scan(remat(rec_body), x, params["tail"],
+                            scan=cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(dtype)
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, dtype=jnp.bfloat16):
+    logits, _ = forward(params, cfg, batch["tokens"], dtype=dtype)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    nc = n_cycles(cfg)
+    d = cfg.d_model
+    w = min(cfg.window or max_len, max_len)
+    cache = {
+        "rec_h": jnp.zeros((nc, 2, batch, d), jnp.float32),
+        "rec_conv": jnp.zeros((nc, 2, batch, CONV_K - 1, d), dtype),
+        "attn": {"k": jnp.zeros((nc, batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+                 "v": jnp.zeros((nc, batch, w, cfg.n_kv_heads, cfg.hd), dtype)},
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    tail = cfg.n_layers - nc * 3
+    if tail:
+        cache["tail_h"] = jnp.zeros((tail, batch, d), jnp.float32)
+        cache["tail_conv"] = jnp.zeros((tail, batch, CONV_K - 1, d), dtype)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig):
+    nc = n_cycles(cfg)
+    specs = {
+        "rec_h": (None, None, "dp", "tp"),
+        "rec_conv": (None, None, "dp", None, "tp"),
+        "attn": {"k": (None, "dp", "sp", None, None),
+                 "v": (None, "dp", "sp", None, None)},
+        "len": ("dp",),
+    }
+    if cfg.n_layers - nc * 3:
+        specs["tail_h"] = (None, "dp", "tp")
+        specs["tail_conv"] = (None, "dp", None, "tp")
+    return specs
+
+
+def _rec_step(cfg, p, x, h_state, conv_state):
+    dtype = x.dtype
+    res = x
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    y = jax.nn.gelu(xn @ p["w_in_y"].astype(dtype))
+    xr = xn @ p["w_in_x"].astype(dtype)                       # (B,1,D)
+    hist = jnp.concatenate([conv_state, xr[:, 0:1]], axis=1)  # (B,K,D)
+    xr = jnp.einsum("bkd,kd->bd", hist, p["conv"].astype(dtype))[:, None]
+    new_conv = hist[:, 1:]
+    h, new_h = rg_lru_step(h_state[:, None], xr,
+                           xn @ p["w_gate_x"].astype(dtype),
+                           xn @ p["w_gate_a"].astype(dtype), p["lam"])
+    out = res + (h * y) @ p["w_out"].astype(dtype)
+    return out, new_h[:, 0], new_conv
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos, *, dtype=jnp.bfloat16):
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(dtype) * (cfg.d_model ** 0.5)
+    cos, sin = L.rope_table(pos[None], cfg.hd, cfg.rope_theta)
+    w = cache["attn"]["k"].shape[2]
+
+    def cycle(x, sl):
+        p_cyc, rec_h, rec_conv, kv = sl
+        def rec_body(carry, sl2):
+            x, = carry
+            p, h0, c0 = sl2
+            x, h1, c1 = _rec_step(cfg, p, x, h0, c0)
+            return (x,), (h1, c1)
+        (x,), (h_new, c_new) = L.maybe_scan(
+            rec_body, (x,), (p_cyc["rec"], rec_h, rec_conv), scan=True)
+        # local attention w/ ring buffer
+        p = p_cyc["attn"]
+        xa = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = (xa @ p["attn"]["wq"].astype(dtype)).reshape(b, 1, cfg.n_heads, cfg.hd)
+        kq = (xa @ p["attn"]["wk"].astype(dtype)).reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+        vq = (xa @ p["attn"]["wv"].astype(dtype)).reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+        q, kq = L.apply_rope(q, cos, sin), L.apply_rope(kq, cos, sin)
+        slot = pos % w
+        kc = kv["k"].at[:, slot].set(kq[:, 0].astype(kv["k"].dtype))
+        vc = kv["v"].at[:, slot].set(vq[:, 0].astype(kv["v"].dtype))
+        cl = jnp.minimum(pos + 1, w) * jnp.ones((b,), jnp.int32)
+        o = L.decode_attention(q, kc, vc, cl)
+        x = x + o.reshape(b, 1, -1) @ p["attn"]["wo"].astype(dtype)
+        xm = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp(jax.tree.map(lambda w2: w2.astype(dtype), p["mlp"]), xm)
+        return x, (h_new, c_new, {"k": kc, "v": vc})
+
+    x, (h_new, c_new, kv_new) = L.maybe_scan(
+        cycle, x, ({"rec": params["rec"], "attn": params["attn"]},
+                   cache["rec_h"], cache["rec_conv"], cache["attn"]),
+        scan=cfg.scan_layers)
+    new_cache = dict(cache, rec_h=h_new, rec_conv=c_new, attn=kv_new,
+                     len=cache["len"] + 1)
+    if "tail" in params:
+        def rec_body(carry, sl2):
+            x, = carry
+            p, h0, c0 = sl2
+            x, h1, c1 = _rec_step(cfg, p, x, h0, c0)
+            return (x,), (h1, c1)
+        (x,), (th, tc) = L.maybe_scan(
+            rec_body, (x,), (params["tail"], cache["tail_h"], cache["tail_conv"]),
+            scan=cfg.scan_layers)
+        new_cache["tail_h"], new_cache["tail_conv"] = th, tc
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(dtype))[:, 0]
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    return logits, new_cache
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, dtype=jnp.bfloat16):
+    logits, _ = forward(params, cfg, tokens, dtype=dtype)
+    return logits[:, -1]

@@ -1,0 +1,256 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Attention-free; FlashOmni's technique is inapplicable here (DESIGN
+§Arch-applicability) — the arch is still first-class: train/prefill/decode,
+scan-over-layers, sharding specs, constant-memory recurrent decode state
+(the reason this arch RUNS the ``long_500k`` cell).
+
+Block: in_proj -> [z | x | B | C | dt]; causal depthwise conv on (x,B,C);
+chunked SSD; gated RMSNorm; out_proj.  The chunked SSD follows the paper's
+block decomposition: intra-chunk (quadratic in chunk), chunk states,
+inter-chunk recurrence (scan), off-diagonal contribution.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+__all__ = ["init_params", "param_specs", "forward", "train_loss",
+           "init_cache", "cache_specs", "prefill", "decode_step", "ssd_chunked",
+           "ssd_recurrent_step"]
+
+HEAD_DIM = 64
+CONV_K = 4
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // HEAD_DIM
+    return d_inner, n_heads, cfg.ssm_state
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, a_log, b, c, *, chunk: int = 128):
+    """Chunked SSD.  x (B,S,H,P); dt (B,S,H); a_log (H,) (A = -exp(a_log));
+    b, c (B,S,N) single group.  Returns y (B,S,H,P)."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    nc = s // chunk
+    assert nc * chunk == s, f"seq {s} not divisible by chunk {chunk}"
+    a = -jnp.exp(a_log)                                    # (H,)
+    xb = (x * dt[..., None]).reshape(bs, nc, chunk, h, p)  # dt-weighted input
+    da = (dt * a).reshape(bs, nc, chunk, h)                # per-step log decay
+    bb = b.reshape(bs, nc, chunk, n)
+    cc = c.reshape(bs, nc, chunk, n)
+
+    cum = jnp.cumsum(da, axis=2)                           # (B,nc,c,H)
+    # 1) intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,c,c,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    ldec = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bkin,bkjn->bkij", cc, bb)         # (B,nc,c,c)
+    y_diag = jnp.einsum("bkij,bkijh,bkjhp->bkihp", scores, ldec, xb)
+
+    # 2) chunk-final states: sum_j exp(cum_last - cum_j) B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,c,H)
+    states = jnp.einsum("bkjn,bkjh,bkjhp->bkhpn", bb, decay_to_end, xb)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, = carry
+        s_k, dk = inp
+        new = st * dk[:, :, None, None] + s_k
+        return (new,), st                                  # emit state BEFORE chunk
+
+    init = jnp.zeros((bs, h, p, n), jnp.float32)
+    (_, ), prev_states = jax.lax.scan(
+        scan_fn, (init,),
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,N)
+
+    # 4) off-diagonal: y_off_i = C_i · (exp(cum_i) ⊙ prev_state)
+    in_decay = jnp.exp(cum)                                # (B,nc,c,H)
+    y_off = jnp.einsum("bkin,bkih,bkhpn->bkihp", cc, in_decay,
+                       prev_states.astype(cc.dtype))
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    return y.astype(x.dtype)
+
+
+def ssd_recurrent_step(state, x_t, dt_t, a_log, b_t, c_t):
+    """One-token SSD update.  state (B,H,P,N); x_t (B,H,P); dt_t (B,H);
+    b_t, c_t (B,N).  Returns (y_t, new_state)."""
+    decay = jnp.exp(dt_t * (-jnp.exp(a_log)))              # (B,H)
+    incr = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], b_t)
+    new_state = state * decay[..., None, None] + incr
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_t)
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Block / model
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ArchConfig, key, stack: Optional[int]):
+    d_inner, h, n = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * n + h
+    ks = jax.random.split(key, 4)
+    sh = lambda *dims: dims if stack is None else (stack, *dims)
+    return {
+        "in_proj": jax.random.normal(ks[0], sh(cfg.d_model, d_in_proj)) * cfg.d_model ** -0.5,
+        "conv": jax.random.normal(ks[1], sh(CONV_K, d_inner + 2 * n)) * 0.2,
+        "a_log": jnp.zeros(sh(h)),
+        "dt_bias": jnp.zeros(sh(h)),
+        "d_skip": jnp.ones(sh(h)),
+        "norm": jnp.ones(sh(d_inner)),
+        "out_proj": jax.random.normal(ks[2], sh(d_inner, cfg.d_model)) * d_inner ** -0.5,
+        "ln": jnp.ones(sh(cfg.d_model)),
+    }
+
+
+def _block_specs(stack: bool):
+    b = (None,) if stack else ()
+    return {"in_proj": (*b, "fsdp", "tp"), "conv": (*b, None, "tp"),
+            "a_log": (*b, "tp"), "dt_bias": (*b, "tp"), "d_skip": (*b, "tp"),
+            "norm": (*b, "tp"), "out_proj": (*b, "tp", "fsdp"), "ln": (*b, None)}
+
+
+def init_params(cfg: ArchConfig, key) -> Any:
+    ke, kb, kh = jax.random.split(key, 3)
+    blocks = [_init_block(cfg, jax.random.fold_in(kb, i), None)
+              for i in range(cfg.n_layers)]
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model)) * 0.02,
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "lm_head": jax.random.normal(kh, (cfg.d_model, cfg.vocab_padded)) * cfg.d_model ** -0.5,
+    }
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    return {"embed": ("tp", "fsdp"), "blocks": _block_specs(True),
+            "final_norm": (None,), "lm_head": ("fsdp", "tp")}
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def _split_proj(cfg, proj):
+    d_inner, h, n = _dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def _block_apply(cfg: ArchConfig, p, x, *, chunk: int = 128):
+    d_inner, h, n = _dims(cfg)
+    dtype = x.dtype
+    res = x
+    x = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = x @ p["in_proj"].astype(dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv"].astype(dtype)))
+    xs = xbc[..., :d_inner].reshape(*x.shape[:2], h, HEAD_DIM)
+    b = xbc[..., d_inner:d_inner + n]
+    c = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y = ssd_chunked(xs.astype(jnp.float32), dt, p["a_log"],
+                    b.astype(jnp.float32), c.astype(jnp.float32), chunk=chunk)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(*x.shape[:2], d_inner).astype(dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)   # gated norm
+    return res + y @ p["out_proj"].astype(dtype)
+
+
+def forward(params, cfg: ArchConfig, tokens, *, dtype=jnp.bfloat16, chunk: int = 128):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+
+    def body(x, p):
+        return _block_apply(cfg, p, x, chunk=chunk), jnp.zeros((), jnp.float32)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = L.maybe_scan(body, x, params["blocks"], scan=cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(dtype)
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, dtype=jnp.bfloat16):
+    logits, _ = forward(params, cfg, batch["tokens"], dtype=dtype)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    d_inner, h, n = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, HEAD_DIM, n), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, CONV_K - 1, d_inner + 2 * n), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ArchConfig):
+    return {"ssm": (None, "dp", "tp", None, None),
+            "conv": (None, "dp", None, "tp"), "len": ("dp",)}
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos, *, dtype=jnp.bfloat16):
+    d_inner, h, n = _dims(cfg)
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(dtype)
+
+    def body(x, sl):
+        p, ssm, conv = sl
+        res = x
+        xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        proj = xn @ p["in_proj"].astype(dtype)
+        z, xbc, dt = _split_proj(cfg, proj)
+        hist = jnp.concatenate([conv, xbc], axis=1)            # (B, K, C)
+        xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv"].astype(dtype)))
+        new_conv = hist[:, 1:]
+        xs = xbc[:, :d_inner].reshape(-1, h, HEAD_DIM)
+        bq = xbc[:, d_inner:d_inner + n]
+        cq = xbc[:, d_inner + n:]
+        dtq = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+        y, new_ssm = ssd_recurrent_step(ssm, xs.astype(jnp.float32), dtq,
+                                        p["a_log"], bq.astype(jnp.float32),
+                                        cq.astype(jnp.float32))
+        y = y + xs.astype(jnp.float32) * p["d_skip"][:, None]
+        y = y.reshape(-1, 1, d_inner).astype(dtype)
+        y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+        return res + y @ p["out_proj"].astype(dtype), (new_ssm, new_conv)
+
+    x, (new_ssm, new_conv) = L.maybe_scan(
+        body, x, (params["blocks"], cache["ssm"], cache["conv"]),
+        scan=cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(dtype))[:, 0]
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    return logits, {"ssm": new_ssm, "conv": new_conv, "len": cache["len"] + 1}
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, dtype=jnp.bfloat16):
+    logits, _ = forward(params, cfg, tokens, dtype=dtype)
+    return logits[:, -1]

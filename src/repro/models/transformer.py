@@ -1,0 +1,351 @@
+"""Decoder-only transformer LM (dense / MoE / local:global patterns).
+
+Covers: gemma3-1b/12b (5:1 local:global GQA), granite-8b, llama3-405b,
+mixtral-8x22b (MoE + SWA), granite-moe-3b (MoE top-8), and the backbone of
+llama-3.2-vision (cross-attention extension lives in ``models/vision.py``).
+
+Structure notes (production-grade at 1000+ nodes):
+  * ``lax.scan`` over layer stacks -> HLO is one-layer-sized; compile time
+    is depth-independent (essential for 126-layer llama3-405b).
+  * Mixed local/global patterns are *cycle-grouped*: the repeating unit of
+    ``global_every`` layers becomes [scan over (global_every-1) local
+    layers] + [one global layer], scanned over cycles.  Local layers use
+    the banded sub-quadratic kernel and RING-BUFFER KV caches of length
+    ``window`` — this is what makes ``long_500k`` feasible.
+  * Activation remat (``jax.checkpoint``) on the block body with the
+    dots-saveable policy.
+  * All params carry logical sharding specs (fsdp/tp), see
+    ``repro.distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+__all__ = [
+    "init_params", "param_specs", "forward", "train_loss",
+    "init_cache", "cache_specs", "prefill", "decode_step",
+]
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Layer grouping (cycles of local layers + one global layer)
+# ---------------------------------------------------------------------------
+
+def layer_groups(cfg: ArchConfig) -> tuple[int, int, int]:
+    """Returns (n_cycles, locals_per_cycle, n_tail_local)."""
+    if cfg.global_every <= 1:
+        if cfg.global_every == 0:      # all-local (pure SWA, e.g. mixtral)
+            return 0, 0, cfg.n_layers
+        return cfg.n_layers, 0, 0     # all-global
+    p = cfg.global_every
+    return cfg.n_layers // p, p - 1, cfg.n_layers % p
+
+
+def _block_init(key, cfg: ArchConfig, stack: Optional[int]):
+    ks = jax.random.split(key, 4)
+    attn, _ = L.init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, stack=stack, qk_norm=True)
+    if cfg.moe:
+        mlp, _ = L.init_moe(ks[1], cfg.d_model, cfg.moe.d_ff,
+                            cfg.moe.num_experts, stack=stack)
+    else:
+        mlp, _ = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, stack=stack)
+    ln1, _ = L.init_rmsnorm(cfg.d_model, stack)
+    ln2, _ = L.init_rmsnorm(cfg.d_model, stack)
+    return {"attn": attn, "mlp": mlp, "ln1": ln1, "ln2": ln2}
+
+
+def _block_specs(cfg: ArchConfig, stack: bool):
+    base = (None,) if stack else ()
+    attn = L.attention_specs(stack, qk_norm=True)
+    if cfg.moe:
+        mlp = {"router": (*base, "fsdp", None), "wi": (*base, "ep", "fsdp", "tp"),
+               "wg": (*base, "ep", "fsdp", "tp"), "wo": (*base, "ep", "tp", "fsdp")}
+    else:
+        mlp = {"wi": (*base, "fsdp", "tp"), "wg": (*base, "fsdp", "tp"),
+               "wo": (*base, "tp", "fsdp")}
+    return {"attn": attn, "mlp": mlp, "ln1": (*base, None), "ln2": (*base, None)}
+
+
+def _stack2(tree_fn, outer: int, inner: int, key):
+    """Init params stacked (outer, inner, ...) — one fold per layer."""
+    flat = [tree_fn(jax.random.fold_in(key, i * inner + j))
+            for i in range(outer) for j in range(inner)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs).reshape(outer, inner, *xs[0].shape),
+                        *flat)
+
+
+def init_params(cfg: ArchConfig, key) -> Pytree:
+    kc, kg, kt, ke, kh = jax.random.split(key, 5)
+    n_cyc, n_loc, n_tail = layer_groups(cfg)
+    params: dict = {}
+    params["embed"] = jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model)) * 0.02
+    if n_cyc and n_loc:
+        params["locals"] = _stack2(lambda k: _block_init(k, cfg, None), n_cyc, n_loc, kc)
+        params["globals"] = _block_init(kg, cfg, n_cyc)
+    elif n_cyc:
+        params["globals"] = _block_init(kg, cfg, n_cyc)
+    if n_tail:
+        params["tail"] = _block_init(kt, cfg, n_tail)
+    params["final_norm"], _ = L.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"], _ = L.init_dense(kh, cfg.d_model, cfg.vocab_padded, ("fsdp", "tp"))
+    return params
+
+
+def param_specs(cfg: ArchConfig) -> Pytree:
+    n_cyc, n_loc, n_tail = layer_groups(cfg)
+    specs: dict = {"embed": ("tp", "fsdp"), "final_norm": (None,)}
+    blk = _block_specs(cfg, stack=True)
+    if n_cyc and n_loc:
+        specs["locals"] = jax.tree.map(lambda s: (None, *s), blk,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        specs["globals"] = blk
+    elif n_cyc:
+        specs["globals"] = blk
+    if n_tail:
+        specs["tail"] = blk
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ("fsdp", "tp")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill shared body)
+# ---------------------------------------------------------------------------
+
+def _attn_apply(p, x, cfg: ArchConfig, *, window, cos, sin, dtype):
+    from repro.distributed.ctx import constrain
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = constrain(x @ p["wq"].astype(dtype), "dp", None, "tp").reshape(b, s, h, hd)
+    k = constrain(x @ p["wk"].astype(dtype), "dp", None, "tp").reshape(b, s, hkv, hd)
+    v = constrain(x @ p["wv"].astype(dtype), "dp", None, "tp").reshape(b, s, hkv, hd)
+    q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    if window is not None and s > 2 * window:
+        o = L.local_attention(q, k, v, window=window)
+    else:
+        o = L.gqa_attention(q, k, v, causal=True, window=window)
+    o = constrain(o.reshape(b, s, h * hd), "dp", None, "tp")
+    return constrain(o @ p["wo"].astype(dtype), "dp", None, None)
+
+
+def _block_apply(p, x, cfg: ArchConfig, *, window, cos, sin):
+    dtype = x.dtype
+    aux = jnp.zeros((), jnp.float32)
+    x = x + _attn_apply(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                        window=window, cos=cos, sin=sin, dtype=dtype)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        y, aux = L.moe_mlp(p["mlp"], h, top_k=cfg.moe.top_k)
+    else:
+        y = L.mlp(jax.tree.map(lambda w: w.astype(dtype), p["mlp"]), h)
+    return x + y, aux
+
+
+def forward(params: Pytree, cfg: ArchConfig, tokens: jax.Array,
+            *, dtype=jnp.bfloat16, extra_ctx: Optional[dict] = None) -> tuple[jax.Array, jax.Array]:
+    """Full causal forward -> (logits, aux_loss).  tokens (B, S) int32."""
+    from repro.distributed.ctx import constrain
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = constrain(x * (cfg.d_model ** 0.5), "dp", None, None)
+    cos, sin = L.rope_table(jnp.arange(s), cfg.hd, cfg.rope_theta)
+    n_cyc, n_loc, n_tail = layer_groups(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def local_body(x, p):
+        y, aux = _block_apply(p, x, cfg, window=cfg.window, cos=cos, sin=sin)
+        return y, aux
+
+    def global_body(x, p):
+        y, aux = _block_apply(p, x, cfg, window=None, cos=cos, sin=sin)
+        return y, aux
+
+    remat = (lambda f: jax.checkpoint(
+        f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)) \
+        if cfg.remat else (lambda f: f)
+
+    if n_cyc and n_loc:
+        def cycle(x, p_cyc):
+            x, aux1 = L.maybe_scan(remat(local_body), x, p_cyc["locals"], scan=True)
+            x, aux2 = remat(global_body)(x, p_cyc["globals"])
+            return x, jnp.sum(aux1) + aux2
+        x, auxs = L.maybe_scan(
+            cycle, x, {"locals": params["locals"], "globals": params["globals"]},
+            scan=cfg.scan_layers)
+        aux_total += jnp.sum(auxs)
+    elif n_cyc:
+        x, auxs = L.maybe_scan(remat(global_body), x, params["globals"],
+                               scan=cfg.scan_layers)
+        aux_total += jnp.sum(auxs)
+    if n_tail:
+        x, auxs = L.maybe_scan(remat(local_body), x, params["tail"],
+                               scan=cfg.scan_layers)
+        aux_total += jnp.sum(auxs)
+
+    from repro.distributed.ctx import constrain
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(x @ head.astype(dtype), "dp", None, "tp")
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    return logits, aux_total
+
+
+def train_loss(params: Pytree, cfg: ArchConfig, batch: dict,
+               *, dtype=jnp.bfloat16) -> jax.Array:
+    logits, aux = forward(params, cfg, batch["tokens"], dtype=dtype)
+    return L.softmax_xent(logits, batch["labels"]) + 1e-2 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with ring-buffer local caches
+# ---------------------------------------------------------------------------
+
+def _cache_entry(cfg: ArchConfig, batch: int, length: int, stack_dims: tuple[int, ...],
+                 dtype):
+    shape = (*stack_dims, batch, length, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Pytree:
+    n_cyc, n_loc, n_tail = layer_groups(cfg)
+    w = min(cfg.window or max_len, max_len)
+    cache: dict = {"len": jnp.zeros((batch,), jnp.int32)}
+    if n_cyc and n_loc:
+        cache["locals"] = _cache_entry(cfg, batch, w, (n_cyc, n_loc), dtype)
+        cache["globals"] = _cache_entry(cfg, batch, max_len, (n_cyc,), dtype)
+    elif n_cyc:
+        cache["globals"] = _cache_entry(cfg, batch, max_len, (n_cyc,), dtype)
+    if n_tail:
+        cache["tail"] = _cache_entry(cfg, batch, w, (n_tail,), dtype)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig) -> Pytree:
+    """Logical specs: batch->dp, kv-heads->tp, sequence->sp (long-context)."""
+    n_cyc, n_loc, n_tail = layer_groups(cfg)
+    kv = lambda extra: {"k": (*extra, "dp", "sp", None, None),
+                        "v": (*extra, "dp", "sp", None, None)}
+    specs: dict = {"len": ("dp",)}
+    if n_cyc and n_loc:
+        specs["locals"] = kv((None, None))
+        specs["globals"] = kv((None,))
+    elif n_cyc:
+        specs["globals"] = kv((None,))
+    if n_tail:
+        specs["tail"] = kv((None,))
+    return specs
+
+
+def _decode_block(p, x, cache_kv, cfg: ArchConfig, *, window, pos, cos, sin):
+    """One-token decode through one block; returns (x, new_cache_kv)."""
+    b = x.shape[0]
+    dtype = x.dtype
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xa = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (xa @ p["attn"]["wq"].astype(dtype)).reshape(b, 1, h, hd)
+    k = (xa @ p["attn"]["wk"].astype(dtype)).reshape(b, 1, hkv, hd)
+    v = (xa @ p["attn"]["wv"].astype(dtype)).reshape(b, 1, hkv, hd)
+    q = L.rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+    k = L.rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    length = cache_kv["k"].shape[1]
+    if window is not None:
+        slot = pos % length                      # ring buffer (local layers)
+    else:
+        slot = jnp.minimum(pos, length - 1)
+    kc = cache_kv["k"].at[:, slot].set(k[:, 0].astype(cache_kv["k"].dtype))
+    vc = cache_kv["v"].at[:, slot].set(v[:, 0].astype(cache_kv["v"].dtype))
+    cache_len = jnp.minimum(pos + 1, length) * jnp.ones((b,), jnp.int32)
+    # Ring-buffer slots are within-window by construction; keys carry their
+    # absolute-position RoPE so scores stay relative-correct across wraps.
+    o = L.decode_attention(q, kc, vc, cache_len)
+    o = o.reshape(b, 1, h * hd) @ p["attn"]["wo"].astype(dtype)
+    x = x + o
+    hmid = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        y, _ = L.moe_mlp(p["mlp"], hmid, top_k=cfg.moe.top_k)
+    else:
+        y = L.mlp(jax.tree.map(lambda w: w.astype(dtype), p["mlp"]), hmid)
+    return x + y, {"k": kc, "v": vc}
+
+
+def decode_step(params: Pytree, cfg: ArchConfig, cache: Pytree, token: jax.Array,
+                pos: jax.Array, *, dtype=jnp.bfloat16):
+    """One new token for the whole batch; pos is the (uniform) write position."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(dtype)
+    x = x * (cfg.d_model ** 0.5)
+    cos, sin = L.rope_table(pos[None], cfg.hd, cfg.rope_theta)
+    n_cyc, n_loc, n_tail = layer_groups(cfg)
+    new_cache = dict(cache)
+
+    if n_cyc and n_loc:
+        def cycle(x, sl):
+            p_cyc, c_cyc = sl
+            def loc(x, sl2):
+                p, c = sl2
+                x, nc = _decode_block(p, x, c, cfg, window=cfg.window, pos=pos,
+                                      cos=cos, sin=sin)
+                return x, nc
+            x, nc_loc = L.maybe_scan(loc, x, (p_cyc["locals"], c_cyc["locals"]),
+                                     scan=True)
+            x, nc_glob = _decode_block(p_cyc["globals"], x, c_cyc["globals"], cfg,
+                                       window=None, pos=pos, cos=cos, sin=sin)
+            return x, {"locals": nc_loc, "globals": nc_glob}
+        x, ncs = L.maybe_scan(
+            cycle, x,
+            ({"locals": params["locals"], "globals": params["globals"]},
+             {"locals": cache["locals"], "globals": cache["globals"]}),
+            scan=cfg.scan_layers)
+        new_cache["locals"], new_cache["globals"] = ncs["locals"], ncs["globals"]
+    elif n_cyc:
+        def glob(x, sl):
+            p, c = sl
+            x, nc = _decode_block(p, x, c, cfg, window=None, pos=pos, cos=cos, sin=sin)
+            return x, nc
+        x, nc = L.maybe_scan(glob, x, (params["globals"], cache["globals"]),
+                             scan=cfg.scan_layers)
+        new_cache["globals"] = nc
+    if n_tail:
+        def tail(x, sl):
+            p, c = sl
+            x, nc = _decode_block(p, x, c, cfg, window=cfg.window, pos=pos,
+                                  cos=cos, sin=sin)
+            return x, nc
+        x, nc = L.maybe_scan(tail, x, (params["tail"], cache["tail"]),
+                             scan=cfg.scan_layers)
+        new_cache["tail"] = nc
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(dtype))[:, 0]
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    new_cache["len"] = cache["len"] + 1
+    return logits, new_cache
+
+
+def prefill(params: Pytree, cfg: ArchConfig, tokens: jax.Array,
+            *, dtype=jnp.bfloat16):
+    """Prefill: full forward returning last-token logits (cache population is
+    recomputed lazily at decode in this repo's serving loop; the dry-run
+    lowers prefill as the compute-bound member of the serve pair)."""
+    logits, _ = forward(params, cfg, tokens, dtype=dtype)
+    return logits[:, -1]

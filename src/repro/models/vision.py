@@ -1,0 +1,170 @@
+"""Llama-3.2-Vision-11B backbone: llama-arch decoder with gated
+cross-attention image layers every ``cross_attn_every`` layers.
+
+The vision encoder is a STUB per the task spec — ``input_specs`` provides
+precomputed patch embeddings (B, num_image_tokens, d_model).  Pattern is
+cycle-grouped like the LM: [cross+self block] + (cross_attn_every − 1)
+self blocks per cycle.  FlashOmni applicability: S_s on self-attention;
+on cross-attention the paper's C_{v→t}/G_{t→v} metrics apply VERBATIM
+(text queries ↔ image keys), so the cross layers use the same mask
+generator with image tokens as the "vision" stream.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+__all__ = ["init_params", "param_specs", "forward", "train_loss",
+           "init_cache", "cache_specs", "prefill", "decode_step"]
+
+
+def _groups(cfg: ArchConfig) -> tuple[int, int]:
+    p = cfg.cross_attn_every
+    assert p > 1 and cfg.n_layers % p == 0
+    return cfg.n_layers // p, p - 1      # (cycles, self layers per cycle)
+
+
+def init_params(cfg: ArchConfig, key) -> Any:
+    kc, ks, ke, kh, kx = jax.random.split(key, 5)
+    n_cyc, n_self = _groups(cfg)
+    self_blocks = T._stack2(lambda k: T._block_init(k, cfg, None), n_cyc, n_self, ks)
+    cross = []
+    for i in range(n_cyc):
+        ki = jax.random.fold_in(kx, i)
+        xattn, _ = L.init_attention(ki, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.hd, stack=None, qk_norm=True)
+        cross.append({"xattn": xattn, "lnx": jnp.ones((cfg.d_model,)),
+                      "gate": jnp.zeros(())})
+    params = {
+        "embed": jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model)) * 0.02,
+        "selfs": self_blocks,
+        "cross": jax.tree.map(lambda *x: jnp.stack(x), *cross),
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "lm_head": jax.random.normal(kh, (cfg.d_model, cfg.vocab_padded)) * cfg.d_model ** -0.5,
+    }
+    return params
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    blk = T._block_specs(cfg, stack=True)
+    xspec = L.attention_specs(True, qk_norm=True)
+    return {
+        "embed": ("tp", "fsdp"),
+        "selfs": jax.tree.map(lambda s: (None, *s), blk,
+                              is_leaf=lambda x: isinstance(x, tuple)),
+        "cross": {"xattn": xspec, "lnx": (None, None), "gate": (None,)},
+        "final_norm": (None,),
+        "lm_head": ("fsdp", "tp"),
+    }
+
+
+def _cross_apply(p, x, img, cfg: ArchConfig):
+    dtype = x.dtype
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xa = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+    q = (xa @ p["xattn"]["wq"].astype(dtype)).reshape(b, s, h, hd)
+    k = (img @ p["xattn"]["wk"].astype(dtype)).reshape(b, img.shape[1], hkv, hd)
+    v = (img @ p["xattn"]["wv"].astype(dtype)).reshape(b, img.shape[1], hkv, hd)
+    q = L.rms_norm(q, p["xattn"]["q_norm"], cfg.norm_eps)
+    k = L.rms_norm(k, p["xattn"]["k_norm"], cfg.norm_eps)
+    o = L.gqa_attention(q, k, v, causal=False)
+    o = o.reshape(b, s, h * hd) @ p["xattn"]["wo"].astype(dtype)
+    return x + jnp.tanh(p["gate"]).astype(dtype) * o
+
+
+def forward(params, cfg: ArchConfig, batch, *, dtype=jnp.bfloat16):
+    tokens, img = batch["tokens"], batch["patches"]
+    b, s = tokens.shape
+    img = img.astype(dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    cos, sin = L.rope_table(jnp.arange(s), cfg.hd, cfg.rope_theta)
+    remat = (lambda f: jax.checkpoint(
+        f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)) \
+        if cfg.remat else (lambda f: f)
+
+    def cycle(x, sl):
+        x = remat(lambda x2, p: _cross_apply(p, x2, img, cfg))(x, sl["cross"])
+        def body(x2, p):
+            y, _ = T._block_apply(p, x2, cfg, window=None, cos=cos, sin=sin)
+            return y, None
+        x, _ = L.maybe_scan(remat(body), x, sl["selfs"], scan=True)
+        return x, None
+
+    x, _ = L.maybe_scan(cycle, x, {"cross": params["cross"], "selfs": params["selfs"]},
+                        scan=cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(dtype)
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, dtype=jnp.bfloat16):
+    logits, _ = forward(params, cfg, batch, dtype=dtype)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_cyc, n_self = _groups(cfg)
+    kv = lambda *stack: {
+        "k": jnp.zeros((*stack, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((*stack, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)}
+    xkv = {"k": jnp.zeros((n_cyc, batch, cfg.num_image_tokens, cfg.n_kv_heads, cfg.hd), dtype),
+           "v": jnp.zeros((n_cyc, batch, cfg.num_image_tokens, cfg.n_kv_heads, cfg.hd), dtype)}
+    return {"selfs": kv(n_cyc, n_self), "cross": xkv,
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig):
+    kv2 = {"k": (None, None, "dp", "sp", None, None),
+           "v": (None, None, "dp", "sp", None, None)}
+    kv1 = {"k": (None, "dp", None, None, None), "v": (None, "dp", None, None, None)}
+    return {"selfs": kv2, "cross": kv1, "len": ("dp",)}
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos, *, dtype=jnp.bfloat16):
+    b = token.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(dtype)
+    cos, sin = L.rope_table(pos[None], cfg.hd, cfg.rope_theta)
+
+    def cycle(x, sl):
+        p_c, c_self, c_cross = sl
+        # gated cross-attention against precomputed image K/V
+        p = p_c["cross"]
+        xa = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+        q = (xa @ p["xattn"]["wq"].astype(dtype)).reshape(b, 1, h, hd)
+        q = L.rms_norm(q, p["xattn"]["q_norm"], cfg.norm_eps)
+        il = c_cross["k"].shape[1] * jnp.ones((b,), jnp.int32)
+        o = L.decode_attention(q, c_cross["k"], c_cross["v"], il)
+        x = x + jnp.tanh(p["gate"]).astype(dtype) * (
+            o.reshape(b, 1, h * hd) @ p["xattn"]["wo"].astype(dtype))
+        def body(x2, sl2):
+            pp, cc = sl2
+            y, nc = T._decode_block(pp, x2, cc, cfg, window=None, pos=pos,
+                                    cos=cos, sin=sin)
+            return y, nc
+        x, nc_self = L.maybe_scan(body, x, (p_c["selfs"], c_self), scan=True)
+        return x, nc_self
+
+    x, nc = L.maybe_scan(cycle, x, ({"cross": params["cross"], "selfs": params["selfs"]},
+                                    cache["selfs"], cache["cross"]),
+                         scan=cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(dtype))[:, 0]
+    if cfg.vocab_padded != cfg.vocab:
+        logits = logits[..., :cfg.vocab]
+    return logits, dict(cache, selfs=nc, len=cache["len"] + 1)
+
+
+def prefill(params, cfg: ArchConfig, batch, *, dtype=jnp.bfloat16):
+    logits, _ = forward(params, cfg, batch, dtype=dtype)
+    return logits[:, -1]

@@ -1,0 +1,84 @@
+"""AdamW with global-norm clipping and cosine schedule (pure JAX).
+
+Optimizer state shards exactly like the params (fsdp/tp logical specs) —
+ZeRO-1/3 falls out of the sharding rules, not special-case code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_state_specs", "adamw_update",
+           "cosine_lr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    # §Perf lever: bf16 Adam moments cut optimizer-state HBM (and its read/
+    # write traffic) in half — 12 B/param -> 8 B/param.  Updates still
+    # accumulate in f32 (moments are re-quantized after the f32 math).
+    moment_dtype: str = "float32"          # "float32" | "bfloat16"
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def adamw_init(params: Any, cfg: AdamWConfig = AdamWConfig()) -> Any:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros_like(p, dtype=dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_state_specs(param_specs: Any) -> Any:
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    ident = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
+    return {"mu": ident, "nu": ident, "step": ()}
+
+
+def adamw_update(grads: Any, state: Any, params: Any, cfg: AdamWConfig):
+    """Returns (new_params, new_state, grad_norm)."""
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu_f = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu_f = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        update = (mu_f / b1c) / (jnp.sqrt(nu_f / b2c) + cfg.eps)
+        newp = p.astype(jnp.float32) - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu_f.astype(mu.dtype), nu_f.astype(nu.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, gnorm

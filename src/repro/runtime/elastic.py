@@ -1,0 +1,64 @@
+"""Elastic scaling: rebuild the mesh from the surviving device set and
+reshard the training state.
+
+Policy (DESIGN §3): the ``data`` axis absorbs capacity changes (it carries
+batch DP + ZeRO shards); the ``model`` axis is fixed by the TP layout of the
+weights.  On shrink from D to D' data-rows, per-device batch grows by
+D/D' and the optimizer shards re-gather — both handled here by re-device_put
+onto the new mesh.  Grow-back follows the same path.
+
+On CPU we validate the logic by shrinking a host-device mesh; on real
+hardware the surviving-device list comes from the coordinator's heartbeat
+service.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ShardingRules, named_sharding_tree
+
+__all__ = ["shrink_mesh", "reshard_state"]
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def shrink_mesh(mesh: Mesh, surviving: Sequence[int] | None = None,
+                *, drop_data_rows: int = 1) -> Mesh:
+    """Build a new mesh without the failed data-rows.
+
+    Elastic policy: the surviving data-row count is rounded DOWN to a power
+    of two so every sharded dim (batch, fsdp shards — all powers of two in
+    this repo) still divides evenly.  ``surviving``: flat device ids that
+    are still healthy; defaults to dropping the LAST ``drop_data_rows``
+    rows of the data axis.
+    """
+    devs = mesh.devices             # ndarray [data, model] or [pod, data, model]
+    n_model = devs.shape[-1]
+    if surviving is not None:
+        flat = [d for d in devs.reshape(-1) if d.id in set(surviving)]
+        n_rows = _pow2_floor(len(flat) // n_model)
+        flat = flat[: n_rows * n_model]
+        arr = np.array(flat).reshape(n_rows, n_model)
+        return Mesh(arr, mesh.axis_names[-2:])
+    if devs.ndim == 2:
+        n_rows = _pow2_floor(devs.shape[0] - drop_data_rows)
+        return Mesh(devs[:n_rows], mesh.axis_names)
+    n_rows = _pow2_floor(devs.shape[1] - drop_data_rows)
+    return Mesh(devs[:, :n_rows], mesh.axis_names)
+
+
+def reshard_state(state: Any, spec_tree: Any, new_mesh: Mesh,
+                  rules: ShardingRules) -> Any:
+    """Move a pytree onto the (shrunk/grown) mesh with the same logical specs."""
+    shardings = named_sharding_tree(spec_tree, new_mesh, rules)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)

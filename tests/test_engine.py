@@ -1,0 +1,92 @@
+"""Update–Dispatch engine invariants (paper §3.2/§3.5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AttnParams, EngineConfig, MaskConfig, dispatch_layer,
+                        init_layer_state, is_update_step, update_layer)
+
+
+def _setup(mode="bias", tau_kv=0.0, capq=1.0, capkv=1.0, order=1, dtype=jnp.float32):
+    key = jax.random.PRNGKey(0)
+    B, H, N, dm, dh = 1, 2, 256, 64, 32
+    cfg = EngineConfig(
+        mask=MaskConfig(pool=32, block_q=16, block_kv=16, interval=4,
+                        order=order, warmup_steps=1, tau_kv=tau_kv, tau_q=0.5),
+        cache_mode=mode, cap_q_frac=capq, cap_kv_frac=capkv,
+        cache_dtype=jnp.float32)
+    ks = jax.random.split(key, 8)
+    p = AttnParams(
+        wq=jax.random.normal(ks[0], (dm, H * dh), dtype) * 0.05,
+        wk=jax.random.normal(ks[1], (dm, H * dh), dtype) * 0.05,
+        wv=jax.random.normal(ks[2], (dm, H * dh), dtype) * 0.05,
+        wo=jax.random.normal(ks[3], (H * dh, dm), dtype) * 0.05,
+        q_scale=jnp.ones(dh), k_scale=jnp.ones(dh))
+    x = jax.random.normal(ks[4], (B, N, dm), dtype)
+    state = init_layer_state(B, H, N, dm, dh, cfg)
+    return cfg, p, x, state, H
+
+
+@pytest.mark.parametrize("mode", ["bias", "o_cache"])
+def test_dispatch_exact_when_no_skipping(mode):
+    """τ_kv=0, full caps, unchanged input -> dispatch == update exactly."""
+    cfg, p, x, state, H = _setup(mode)
+    out_u, state = update_layer(p, x, state, cfg, n_text=64, heads=H)
+    out_d, state = dispatch_layer(p, x, state, cfg, n_text=64, heads=H)
+    err = float(jnp.linalg.norm(out_d - out_u) / jnp.linalg.norm(out_u))
+    assert err < 1e-5, err
+
+
+@pytest.mark.parametrize("mode", ["bias", "o_cache"])
+def test_dispatch_error_bounded_with_skipping(mode):
+    cfg, p, x, state, H = _setup(mode, tau_kv=0.15, capq=0.75, capkv=0.9)
+    out_u, state = update_layer(p, x, state, cfg, n_text=64, heads=H)
+    out_d, state = dispatch_layer(p, x, state, cfg, n_text=64, heads=H)
+    err = float(jnp.linalg.norm(out_d - out_u) / jnp.linalg.norm(out_u))
+    assert np.isfinite(err) and err < 0.6
+
+
+def test_bias_equals_ocache_semantics():
+    """Eq. 4: forecasting in projected space == projecting the forecast."""
+    cfg_b, p, x, st_b, H = _setup("bias", tau_kv=0.0)
+    cfg_o, _, _, st_o, _ = _setup("o_cache", tau_kv=0.0)
+    u_b, st_b = update_layer(p, x, st_b, cfg_b, n_text=64, heads=H)
+    u_o, st_o = update_layer(p, x, st_o, cfg_o, n_text=64, heads=H)
+    d_b, _ = dispatch_layer(p, x, st_b, cfg_b, n_text=64, heads=H)
+    d_o, _ = dispatch_layer(p, x, st_o, cfg_o, n_text=64, heads=H)
+    np.testing.assert_allclose(np.asarray(d_b), np.asarray(d_o), atol=1e-4)
+
+
+def test_multi_step_dispatch_chain():
+    """N-1 dispatches after an update: k_since increments, outputs finite,
+    drift grows smoothly as the input evolves."""
+    cfg, p, x, state, H = _setup("bias", tau_kv=0.1, capq=0.9, capkv=1.0)
+    out, state = update_layer(p, x, state, cfg, n_text=64, heads=H)
+    errs = []
+    for k in range(1, 4):
+        x = x + 0.01 * jax.random.normal(jax.random.PRNGKey(k), x.shape)
+        ref_out, _ = update_layer(p, x, init_layer_state(1, H, 256, 64, 32, cfg),
+                                  cfg, n_text=64, heads=H)
+        out, state = dispatch_layer(p, x, state, cfg, n_text=64, heads=H)
+        assert int(state.k_since) == k
+        errs.append(float(jnp.linalg.norm(out - ref_out) /
+                          jnp.linalg.norm(ref_out)))
+    assert all(np.isfinite(errs))
+
+
+def test_update_dispatch_schedule():
+    cfg = EngineConfig(mask=MaskConfig(interval=5, warmup_steps=3))
+    kinds = ["U" if is_update_step(s, cfg) else "D" for s in range(14)]
+    assert kinds == list("UUU") + list("UDDDD") * 2 + ["U"]
+
+
+def test_symbols_refresh_only_on_update():
+    cfg, p, x, state, H = _setup("bias", tau_kv=0.1)
+    _, s1 = update_layer(p, x, state, cfg, n_text=64, heads=H)
+    _, s2 = dispatch_layer(p, x, s1, cfg, n_text=64, heads=H)
+    assert (s1.s_c == s2.s_c).all() and (s1.s_s == s2.s_s).all()
+    x2 = x + jax.random.normal(jax.random.PRNGKey(9), x.shape)
+    _, s3 = update_layer(p, x2, s2, cfg, n_text=64, heads=H)
+    assert not bool((s3.s_c == s2.s_c).all())     # new input -> new symbols

@@ -1,0 +1,136 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret=True on CPU).
+
+Per task spec: sweep shapes/dtypes per kernel, assert_allclose vs ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.symbols import active_indices
+from repro.kernels import ops, ref
+
+
+def _attn_inputs(key, bh, n, d, bq, bk, p_c=0.6, p_s=0.7, dtype=jnp.float32):
+    tq, tkv = n // bq, n // bk
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    q = jax.random.normal(ks[0], (bh, n, d), dtype)
+    k = jax.random.normal(ks[1], (bh, n, d), dtype)
+    v = jax.random.normal(ks[2], (bh, n, d), dtype)
+    o_reuse = jax.random.normal(ks[3], (bh, n, d), dtype)
+    m_c = jax.random.bernoulli(ks[4], p_c, (bh, tq))
+    m_s = jax.random.bernoulli(ks[5], p_s, (bh, tq, tkv)).at[..., 0].set(True)
+    return q, k, v, m_c, m_s, o_reuse
+
+
+ATTN_SWEEP = [
+    # (BH, N, d, bq, bk, dtype, tol)
+    (2, 128, 32, 16, 16, jnp.float32, 2e-5),
+    (1, 256, 64, 32, 16, jnp.float32, 2e-5),
+    (3, 256, 128, 64, 64, jnp.float32, 2e-5),
+    (2, 128, 64, 16, 32, jnp.bfloat16, 3e-2),
+]
+
+
+@pytest.mark.parametrize("variant", ["csr", "symbols"])
+@pytest.mark.parametrize("bh,n,d,bq,bk,dtype,tol", ATTN_SWEEP)
+def test_flashomni_attention_vs_ref(variant, bh, n, d, bq, bk, dtype, tol):
+    q, k, v, m_c, m_s, o_reuse = _attn_inputs(bh * n, bh, n, d, bq, bk, dtype=dtype)
+    want = ref.attention_ref(q, k, v, m_c, m_s, o_reuse, block_q=bq, block_kv=bk)
+    got = ops.flashomni_attention(q, k, v, m_c, m_s, o_reuse,
+                                  block_q=bq, block_kv=bk, variant=variant)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("variant", ["csr", "symbols"])
+def test_attention_all_cached_and_all_live(variant):
+    q, k, v, m_c, m_s, o_reuse = _attn_inputs(7, 2, 128, 32, 16, 16)
+    for mc in [jnp.zeros_like(m_c), jnp.ones_like(m_c)]:
+        want = ref.attention_ref(q, k, v, mc, m_s, o_reuse, block_q=16, block_kv=16)
+        got = ops.flashomni_attention(q, k, v, mc, m_s, o_reuse,
+                                      block_q=16, block_kv=16, variant=variant)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_attention_csr_with_capacity():
+    q, k, v, m_c, m_s, o_reuse = _attn_inputs(9, 2, 256, 32, 32, 32)
+    tq = m_c.shape[-1]
+    # capacity == max live count across bh -> still exact
+    cap = int(m_c.sum(-1).max())
+    want = ref.attention_ref(q, k, v, m_c, m_s, o_reuse, block_q=32, block_kv=32)
+    got = ops.flashomni_attention(q, k, v, m_c, m_s, o_reuse, block_q=32,
+                                  block_kv=32, cap_q=cap, cap_kv=tq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+GEMM_SWEEP = [
+    (128, 64, 128, 16, jnp.float32, 1e-4),
+    (256, 128, 256, 32, jnp.float32, 1e-4),
+    (128, 256, 512, 64, jnp.float32, 1e-4),
+    (128, 64, 128, 16, jnp.bfloat16, 5e-2),
+]
+
+
+@pytest.mark.parametrize("n,k,f,blk,dtype,tol", GEMM_SWEEP)
+def test_gemm_q_vs_ref(n, k, f, blk, dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(n + k), 3)
+    x = jax.random.normal(ks[0], (n, k), dtype)
+    w = jax.random.normal(ks[1], (k, f), dtype)
+    rm = jax.random.bernoulli(ks[2], 0.5, (n // blk,)).at[0].set(True)
+    y, ids, cnt = ops.gemm_q(x, w, rm, block_rows=blk, interpret=True)
+    want = ref.gemm_q_ref(x, w, ids, cnt, block=blk)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("h,n,dh,f,blk,dtype,tol", [
+    (4, 128, 32, 64, 16, jnp.float32, 1e-4),
+    (8, 256, 64, 128, 32, jnp.float32, 1e-4),
+    (2, 128, 128, 256, 64, jnp.float32, 1e-4),
+    (4, 128, 64, 64, 16, jnp.bfloat16, 6e-2),
+])
+def test_gemm_o_vs_ref(h, n, dh, f, blk, dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(h * n), 4)
+    oh = jax.random.normal(ks[0], (h, n, dh), dtype)
+    w = jax.random.normal(ks[1], (h, dh, f), dtype)
+    bias = jax.random.normal(ks[2], (n, f), dtype)
+    t = n // blk
+    m_ch = jax.random.bernoulli(ks[3], 0.6, (t, h))
+    got = ops.gemm_o(oh, w, bias, m_ch, block_rows=blk, interpret=True)
+    row_ids, row_cnt = active_indices(jnp.any(m_ch, -1), t)
+    head_ids, head_cnt = active_indices(jnp.take(m_ch, row_ids, 0), h)
+    want = ref.gemm_o_ref(oh, w, bias, row_ids, row_cnt, head_ids, head_cnt, block=blk)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_gemm_o_eq3_identity():
+    """Eq. 3: live-head partial + cached-bias == full dense projection."""
+    from repro.core.sparse_gemm import gemm_o_update_bias
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h, n, dh, f, blk = 4, 64, 16, 32, 16
+    oh = jax.random.normal(ks[0], (h, n, dh))
+    w = jax.random.normal(ks[1], (h, dh, f))
+    m_ch = jax.random.bernoulli(ks[2], 0.5, (n // blk, h))
+    o_tok = oh.transpose(1, 0, 2)[None]                     # (1,N,H,dh)
+    bias = gemm_o_update_bias(o_tok, w, m_ch[None], block=blk)[0]
+    got = ops.gemm_o(oh, w, bias, m_ch, block_rows=blk, interpret=True)
+    want = jnp.einsum("hnd,hdf->nf", oh, w)                 # full projection
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("d1,bh,n,d,blk", [(2, 2, 128, 32, 16), (4, 1, 64, 64, 16)])
+def test_taylor_reuse_vs_ref(d1, bh, n, d, blk):
+    ks = jax.random.split(jax.random.PRNGKey(d1), 3)
+    derivs = jax.random.normal(ks[0], (d1, bh, n, d))
+    coef = jax.random.normal(ks[1], (d1,))
+    base = jax.random.normal(ks[2], (bh, n, d))
+    cmask = jax.random.bernoulli(ks[0], 0.5, (bh, n // blk))
+    got = ops.taylor_reuse(derivs, coef, base, cmask, block=blk, interpret=True)
+    want_f = ref.taylor_reuse_ref(derivs, coef)
+    live = jnp.repeat(cmask, blk, axis=-1)
+    want = jnp.where(live[..., None], want_f, base)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

@@ -1,0 +1,94 @@
+"""Mask-generation tests (paper §3.3: compressed map, C/G metrics, Eq. 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as M
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+CFG = M.MaskConfig(tau_q=0.5, tau_kv=0.15, pool=16, block_q=8, block_kv=8)
+
+
+def _qk(key, n=128, d=16):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    return (jax.random.normal(k1, (2, n, d)), jax.random.normal(k2, (2, n, d)))
+
+
+def test_compressed_map_rows_normalised():
+    q, k = _qk(0)
+    p = M.compressed_attention_map(q, k, 16)
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_pool_tokens_mean_with_ragged_tail():
+    x = jnp.arange(10, dtype=jnp.float32).reshape(1, 10, 1)
+    out = M.pool_tokens(x, 4)
+    np.testing.assert_allclose(np.asarray(out[0, :, 0]),
+                               [1.5, 5.5, 8.5], atol=1e-6)  # tail mean of (8,9)
+
+
+@given(st.integers(0, 5), st.floats(0.05, 0.95))
+def test_select_by_cummass_respects_threshold(seed, tau):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.random((3, 24)) + 1e-3)
+    sel = M.select_by_cummass(scores, tau)
+    # cumulative mass of the selected set never exceeds tau * total
+    mass = (scores * sel).sum(-1)
+    assert (np.asarray(mass) <= tau * np.asarray(scores.sum(-1)) + 1e-5).all()
+    # and it is the ASCENDING prefix: anything smaller than a selected score
+    # must also be selected
+    s, m = np.asarray(scores), np.asarray(sel)
+    for b in range(s.shape[0]):
+        if m[b].any():
+            thr = s[b][m[b]].max()
+            assert m[b][s[b] < thr].all()
+
+
+def test_caching_mask_never_caches_text():
+    q, k = _qk(1)
+    m_c = M.make_caching_mask(q, k, CFG, n_text_tokens=32)
+    n_t = 32 // CFG.pool
+    assert bool(m_c[..., :n_t].all())            # Observation 1
+
+
+def test_caching_mask_pure_vision_path():
+    q, k = _qk(2)
+    m_c = M.make_caching_mask(q, k, CFG, n_text_tokens=0)
+    assert m_c.shape[-1] == 8
+    assert bool(m_c.any())                       # something stays live
+
+
+def test_skip_mask_protects_text_regions():
+    q, k = _qk(3)
+    m_s = M.make_skip_mask(q, k, CFG, n_text_tokens=32)
+    n_t = 2
+    assert bool(m_s[..., :n_t, :].all())         # text rows full
+    assert bool(m_s[..., :, :n_t].all())         # text cols full
+
+
+def test_skip_mask_static_window_pattern():
+    q, k = _qk(4)
+    m_s = M.make_skip_mask(q, k, CFG, n_text_tokens=0, tau_kv=0.0, static_window=2)
+    t = m_s.shape[-1]
+    i, j = np.meshgrid(np.arange(t), np.arange(t), indexing="ij")
+    want = np.abs(i - j) < 2
+    np.testing.assert_array_equal(np.asarray(m_s[0]), want)
+
+
+def test_degradation_threshold():
+    m = jnp.array([[True] + [False] * 9])        # 10% live < 30% -> all cached
+    out = M.apply_degradation(m, 0.3)
+    assert not bool(out.any())
+    m2 = jnp.array([[True] * 5 + [False] * 5])   # 50% live stays
+    assert (M.apply_degradation(m2, 0.3) == m2).all()
+
+
+def test_expand_block_mask():
+    m = jnp.array([[True, False, True]])
+    out = M.expand_block_mask(m, 2, 6)
+    np.testing.assert_array_equal(np.asarray(out[0]),
+                                  [True, True, False, False, True, True])

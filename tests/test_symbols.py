@@ -1,0 +1,80 @@
+"""Sparse-symbol unit + property tests (paper §3.3, Fig. 5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import symbols as S
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def test_paper_figure5_example():
+    # Paper: mask [1,1,1,0,0] big-end aligned, zero padded -> 0b11100000 = 224
+    s = S.pack_bits(jnp.array([1, 1, 1, 0, 0], bool))
+    assert int(s[0]) == 224
+    # And the two S_s example bytes: 235 = 0b11101011, 197 = 0b11000101
+    assert int(S.pack_bits(jnp.array([1,1,1,0,1,0,1,1], bool))[0]) == 235
+    assert int(S.pack_bits(jnp.array([1,1,0,0,0,1,0,1], bool))[0]) == 197
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=70))
+def test_pack_unpack_roundtrip(bits):
+    m = jnp.array(bits, bool)
+    assert (S.unpack_bits(S.pack_bits(m), len(bits)) == m).all()
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=64), st.data())
+def test_decode_spatial_matches_mask(bits, data):
+    m = jnp.array(bits, bool)
+    sym = S.pack_bits(m)
+    i = data.draw(st.integers(0, len(bits) - 1))
+    assert int(S.decode_spatial(sym, i)) == int(m[i])
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.data())
+def test_decode_reduction_matches_matrix(tq, tkv, data):
+    rng = np.random.default_rng(0)
+    m = rng.random((tq, tkv)) < 0.5
+    sym = S.pack_bits(jnp.asarray(m.reshape(-1)))
+    i = data.draw(st.integers(0, tq - 1))
+    j = data.draw(st.integers(0, tkv - 1))
+    assert int(S.decode_reduction(sym, i, j, tkv)) == int(m[i, j])
+
+
+def test_symbol_storage_is_8x_compressed():
+    t = 128
+    m = jnp.ones((4, t), bool)
+    assert S.pack_bits(m).size * 8 == m.size  # uint8 vs 1 bool per bit
+
+
+@given(st.lists(st.booleans(), min_size=4, max_size=40), st.integers(1, 40))
+def test_active_indices_properties(bits, cap):
+    m = jnp.array(bits, bool)
+    cap = min(cap, len(bits))
+    ids, cnt = S.active_indices(m, cap)
+    n_active = int(m.sum())
+    assert int(cnt) == min(n_active, cap)
+    got = np.asarray(ids[: int(cnt)])
+    want = np.nonzero(np.asarray(m))[0][:cap]
+    np.testing.assert_array_equal(got, want)          # ascending, exact
+    if n_active:
+        assert (np.asarray(ids) < len(bits)).all()    # padding stays in range
+
+
+@given(st.integers(1, 64), st.floats(0.01, 1.0))
+def test_capacity_for_bounds(t, frac):
+    cap = S.capacity_for(t, frac)
+    assert 1 <= cap <= t
+
+
+def test_clamp_mask_topk_keeps_highest():
+    m = jnp.array([1, 1, 1, 1, 0, 1], bool)
+    score = jnp.array([0.1, 0.9, 0.5, 0.7, 1.0, 0.2])
+    out = S.clamp_mask_topk(m, score, 3)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  [False, True, True, True, False, False])
+    assert int(out.sum()) == 3

@@ -1,0 +1,67 @@
+"""TaylorSeer forecasting properties (paper §3.3 OP_reuse)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import taylorseer as ts
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _fit_and_forecast(coeffs, order, mode, interval=4, n_updates=4):
+    poly = lambda t: sum(c * t ** i for i, c in enumerate(coeffs))
+    st_ = ts.init_state((2,), order)
+    ts_pts = [interval * i for i in range(n_updates)]
+    for t in ts_pts:
+        st_ = ts.update(st_, jnp.full((2,), poly(float(t))))
+    t_last = ts_pts[-1]
+    return st_, poly, t_last
+
+
+@given(st.lists(st.floats(-2, 2), min_size=2, max_size=2), st.integers(1, 3))
+def test_taylor_mode_exact_linear(coeffs, k):
+    state, poly, t_last = _fit_and_forecast(coeffs, order=2, mode="taylor")
+    pred = ts.forecast(state, k, 4, mode="taylor")
+    np.testing.assert_allclose(np.asarray(pred), poly(t_last + k),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.lists(st.floats(-2, 2), min_size=3, max_size=3), st.integers(1, 3))
+def test_newton_mode_exact_quadratic(coeffs, k):
+    state, poly, t_last = _fit_and_forecast(coeffs, order=2, mode="newton")
+    pred = ts.forecast(state, k, 4, mode="newton")
+    np.testing.assert_allclose(np.asarray(pred), poly(t_last + k),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_order0_is_plain_reuse():
+    state = ts.init_state((3,), 0)
+    state = ts.update(state, jnp.array([1.0, 2.0, 3.0]))
+    for k in range(1, 4):
+        np.testing.assert_allclose(np.asarray(ts.forecast(state, k, 5)),
+                                   [1.0, 2.0, 3.0])
+
+
+def test_warmup_degrades_to_lower_order():
+    # One update only: derivatives are masked, forecast == reuse.
+    state = ts.init_state((2,), 2)
+    state = ts.update(state, jnp.array([5.0, -1.0]))
+    np.testing.assert_allclose(np.asarray(ts.forecast(state, 3, 4)), [5.0, -1.0])
+
+
+def test_derivative_stack_contents():
+    state = ts.init_state((1,), 2)
+    for y in [1.0, 3.0, 7.0]:
+        state = ts.update(state, jnp.array([y]))
+    # Δ0=7, Δ1=7-3=4, Δ2=4-(3-1)=2
+    np.testing.assert_allclose(np.asarray(state.derivs[:, 0]), [7.0, 4.0, 2.0])
+
+
+def test_coefficients_taylor_vs_newton():
+    ct = np.asarray(ts.reuse_coefficients(2, 2, 4, "taylor"))
+    cn = np.asarray(ts.reuse_coefficients(2, 2, 4, "newton"))
+    x = 0.5
+    np.testing.assert_allclose(ct, [1, x, x * x / 2], rtol=1e-6)
+    np.testing.assert_allclose(cn, [1, x, x * (x + 1) / 2], rtol=1e-6)
