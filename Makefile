@@ -1,0 +1,18 @@
+# FlashOmni reproduction — one-liner entry points.
+#
+#   make test    tier-1 test suite (ROADMAP verify command)
+#   make smoke   fast benchmark smoke (dispatch-plan amortization + micro rows)
+#   make bench   full paper-figure benchmark suite
+
+PY ?= python
+
+.PHONY: test smoke bench
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --smoke
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run

@@ -1,20 +1,30 @@
 """Benchmark harness entry: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (task spec)."""
+Prints ``name,us_per_call,derived`` CSV (task spec).
+
+``--smoke`` runs a fast subset (the dispatch-plan amortization benchmark
+at its smallest shape plus the sparse-GEMM micro rows) so CI and
+``make smoke`` get a signal in seconds rather than minutes.
+``--only SUBSTR`` filters suites by label.
+"""
 
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import time
 
 
-def main() -> None:
+def _suites():
     from benchmarks import (bench_ablation, bench_attention_sparsity,
-                            bench_density, bench_e2e_quality,
-                            bench_e2e_speedup, bench_gemm_o_interval,
-                            bench_sparse_gemm, bench_warmup)
+                            bench_density, bench_dispatch_plan,
+                            bench_e2e_quality, bench_e2e_speedup,
+                            bench_gemm_o_interval, bench_sparse_gemm,
+                            bench_warmup)
 
-    suites = [
+    return [
+        ("issue1 dispatch-plan amortization", bench_dispatch_plan.run),
         ("fig6/fig10 attention", bench_attention_sparsity.run),
         ("fig6/fig11 sparse GEMMs", bench_sparse_gemm.run),
         ("fig8/A.1.2 GEMM-O interval", bench_gemm_o_interval.run),
@@ -24,12 +34,38 @@ def main() -> None:
         ("fig1 e2e speedup", bench_e2e_speedup.run),
         ("fig9 warmup", bench_warmup.run),
     ]
+
+
+# Labels included in --smoke mode (fast, CPU-friendly).
+SMOKE_SUITES = ("issue1 dispatch-plan amortization", "fig6/fig11 sparse GEMMs")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset with reduced shapes")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on suite labels")
+    args = ap.parse_args(argv)
+
+    suites = _suites()
+    if args.smoke:
+        suites = [(l, f) for l, f in suites if l in SMOKE_SUITES]
+    if args.only:
+        suites = [(l, f) for l, f in suites if args.only in l]
+    if not suites:
+        print("# no suites matched", file=sys.stderr)
+        return
+
     csv: list[dict] = []
     print("name,us_per_call,derived")
     for label, fn in suites:
         t0 = time.time()
         start = len(csv)
-        fn(csv)
+        if "smoke" in inspect.signature(fn).parameters:
+            fn(csv, smoke=args.smoke)
+        else:
+            fn(csv)
         for row in csv[start:]:
             print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
         print(f"# suite [{label}] done in {time.time() - t0:.1f}s",

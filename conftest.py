@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make ``repro`` importable without PYTHONPATH."""
+
+import sys
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

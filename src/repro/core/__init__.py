@@ -10,18 +10,25 @@ from repro.core.engine import (
     dispatch_layer,
     init_layer_state,
     is_update_step,
+    plan_from_state,
     update_layer,
 )
 from repro.core.attention import SparseAttentionSpec
+from repro.core.backend import get_backend
+from repro.core.plan import DispatchPlan, build_dispatch_plan
 
 __all__ = [
     "MaskConfig",
     "EngineConfig",
     "AttnParams",
     "LayerState",
+    "DispatchPlan",
     "SparseAttentionSpec",
     "init_layer_state",
     "is_update_step",
     "update_layer",
     "dispatch_layer",
+    "plan_from_state",
+    "build_dispatch_plan",
+    "get_backend",
 ]

@@ -29,6 +29,8 @@ __all__ = [
     "SparseAttentionSpec",
     "dense_attention",
     "masked_block_attention",
+    "attention_plan_indices",
+    "sparse_attention_from_plan",
     "sparse_attention_xla",
     "sparse_decode_attention",
 ]
@@ -107,6 +109,104 @@ def scatter_blocks(base: jax.Array, ids: jax.Array, cnt: jax.Array,
     return jnp.where(written[..., None, None] > 0, scattered, base)
 
 
+def attention_plan_indices(m_c: jax.Array, m_s: jax.Array,
+                           spec: SparseAttentionSpec):
+    """Index-decode step of the structural path (runs at Update time only).
+
+    Returns ``(q_ids, q_cnt, kv_ids, kv_cnt, pair_live)`` — the attention
+    slice of a :class:`repro.core.plan.DispatchPlan`.  All sort/top-k work
+    of the XLA path lives here.
+    """
+    q_ids, q_cnt = active_indices(m_c, spec.cap_q)                     # (..., Cq)
+    # KV-block union over live rows, importance = how many live rows need
+    # the block; clamped gracefully to the static capacity (softmax then
+    # renormalises over the kept subset — documented approximation when
+    # cap_kv < |union|, exact otherwise).
+    need = jnp.sum(m_s & m_c[..., None], axis=-2)                      # (..., T_kv)
+    kv_union = clamp_mask_topk(need > 0, need, spec.cap_kv)
+    kv_ids, kv_cnt = active_indices(kv_union, spec.cap_kv)             # (..., Ck)
+    pair = jnp.take_along_axis(
+        jnp.take_along_axis(m_s, q_ids[..., :, None], axis=-2),
+        kv_ids[..., None, :], axis=-1,
+    )                                                                   # (..., Cq, Ck)
+    kv_valid = jnp.arange(spec.cap_kv) < kv_cnt[..., None]             # (..., Ck)
+    pair_live = pair & kv_valid[..., None, :]
+    return q_ids, q_cnt, kv_ids, kv_cnt, pair_live
+
+
+def sparse_attention_from_plan(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o_reuse: jax.Array,
+    q_ids: jax.Array,
+    q_cnt: jax.Array,
+    kv_ids: jax.Array,
+    kv_cnt: jax.Array,
+    pair_live: jax.Array,
+    spec: SparseAttentionSpec,
+    *,
+    scale: Optional[float] = None,
+    q_chunk_blocks: int = 16,
+    q_src_ids: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Structurally sparse attention over PRECOMPUTED indices.
+
+    Shapes: q,k,v,o_reuse (..., N, d); index arrays as returned by
+    :func:`attention_plan_indices`.  Contains no index decoding — a
+    Dispatch step traces only gathers/einsums/softmax from here.
+
+    ``q_src_ids`` optionally re-maps the Q gather to a different (compact)
+    block layout while the output scatter keeps the full-layout ``q_ids``
+    (GEMM-Q layout fusion).  The gathered live Q blocks are processed in
+    chunks of ``q_chunk_blocks`` so peak score memory is
+    O(chunk·bq·Ckv·bk) regardless of N (needed for the 33K-token
+    HunyuanVideo cells).
+    """
+    bq, bk = spec.block_q, spec.block_kv
+    d = q.shape[-1]
+    n_kv = k.shape[-2]
+    t_q = o_reuse.shape[-2] // bq
+    t_kv = n_kv // bk
+    scale = (d ** -0.5) if scale is None else scale
+    q_src_ids = q_ids if q_src_ids is None else q_src_ids
+
+    qb = q.reshape(*q.shape[:-2], q.shape[-2] // bq, bq, d)
+    kb = k.reshape(*k.shape[:-2], t_kv, bk, d)
+    vb = v.reshape(*v.shape[:-2], t_kv, bk, d)
+    kg = _gather_blocks(kb, kv_ids)                                    # (..., Ck, bk, d)
+    vg = _gather_blocks(vb, kv_ids)
+
+    def q_chunk(ids_c, live_c):
+        """One chunk of live q-block ids + its pair mask -> outputs."""
+        qg = _gather_blocks(qb, ids_c)                                 # (..., cc, bq, d)
+        s = jnp.einsum("...ipd,...jqd->...ipjq", qg, kg).astype(jnp.float32) * scale
+        s = jnp.where(live_c[..., :, None, :, None], s, _NEG_INF)
+        cc = ids_c.shape[-1]
+        sf = s.reshape(*s.shape[:-4], cc, bq, spec.cap_kv * bk)
+        p = jax.nn.softmax(sf, axis=-1).reshape(s.shape)
+        return jnp.einsum("...ipjq,...jqd->...ipd", p,
+                          vg.astype(jnp.float32)).astype(q.dtype)
+
+    if spec.cap_q <= q_chunk_blocks or spec.cap_q % q_chunk_blocks != 0:
+        og = q_chunk(q_src_ids, pair_live)
+    else:
+        n_ch = spec.cap_q // q_chunk_blocks
+        ids_ch = jnp.moveaxis(
+            q_src_ids.reshape(*q_src_ids.shape[:-1], n_ch, q_chunk_blocks), -2, 0)
+        live_ch = jnp.moveaxis(
+            pair_live.reshape(*pair_live.shape[:-2], n_ch, q_chunk_blocks,
+                              pair_live.shape[-1]), -3, 0)
+        og_ch = jax.lax.map(lambda t: q_chunk(*t), (ids_ch, live_ch))
+        og = jnp.moveaxis(og_ch, 0, -4)                                # (..., n_ch, cc, bq, d)
+        og = og.reshape(*og.shape[:-4], spec.cap_q, bq, d)
+
+    # Scatter computed blocks over the reuse baseline (padding slots dropped).
+    out_blocks = o_reuse.reshape(*o_reuse.shape[:-2], t_q, bq, d)
+    out_blocks = scatter_blocks(out_blocks, q_ids, q_cnt, og)
+    return out_blocks.reshape(o_reuse.shape)
+
+
 def sparse_attention_xla(
     q: jax.Array,
     k: jax.Array,
@@ -122,62 +222,16 @@ def sparse_attention_xla(
     """Structurally sparse attention (see module docstring).
 
     Shapes: q,k,v,o_reuse (..., N, d); m_c (..., T_q); m_s (..., T_q, T_kv).
-    The gathered live Q blocks are processed in chunks of ``q_chunk_blocks``
-    so peak score memory is O(chunk·bq·Ckv·bk) regardless of N (needed for
-    the 33K-token HunyuanVideo cells).
+    Mask-level entry point: decodes indices per call (legacy rebuild path).
+    The Update–Dispatch engine instead decodes once via
+    :func:`attention_plan_indices` and calls
+    :func:`sparse_attention_from_plan` on every Dispatch step.
     """
-    bq, bk = spec.block_q, spec.block_kv
-    n, d = q.shape[-2], q.shape[-1]
-    n_kv = k.shape[-2]
-    t_q, t_kv = n // bq, n_kv // bk
-    scale = (d ** -0.5) if scale is None else scale
-
-    q_ids, q_cnt = active_indices(m_c, spec.cap_q)                     # (..., Cq)
-    # KV-block union over live rows, importance = how many live rows need
-    # the block; clamped gracefully to the static capacity (softmax then
-    # renormalises over the kept subset — documented approximation when
-    # cap_kv < |union|, exact otherwise).
-    need = jnp.sum(m_s & m_c[..., None], axis=-2)                      # (..., T_kv)
-    kv_union = clamp_mask_topk(need > 0, need, spec.cap_kv)
-    kv_ids, kv_cnt = active_indices(kv_union, spec.cap_kv)             # (..., Ck)
-
-    qb = q.reshape(*q.shape[:-2], t_q, bq, d)
-    kb = k.reshape(*k.shape[:-2], t_kv, bk, d)
-    vb = v.reshape(*v.shape[:-2], t_kv, bk, d)
-    kg = _gather_blocks(kb, kv_ids)                                    # (..., Ck, bk, d)
-    vg = _gather_blocks(vb, kv_ids)
-    kv_valid = jnp.arange(spec.cap_kv) < kv_cnt[..., None]             # (..., Ck)
-
-    def q_chunk(ids_c):
-        """Process one chunk of live q-block ids: (..., cq_chunk) -> outputs."""
-        qg = _gather_blocks(qb, ids_c)                                 # (..., cc, bq, d)
-        s = jnp.einsum("...ipd,...jqd->...ipjq", qg, kg).astype(jnp.float32) * scale
-        pair = jnp.take_along_axis(
-            jnp.take_along_axis(m_s, ids_c[..., :, None], axis=-2),
-            kv_ids[..., None, :], axis=-1,
-        )                                                               # (..., cc, Ck)
-        live = pair & kv_valid[..., None, :]
-        s = jnp.where(live[..., :, None, :, None], s, _NEG_INF)
-        cc = ids_c.shape[-1]
-        sf = s.reshape(*s.shape[:-4], cc, bq, spec.cap_kv * bk)
-        p = jax.nn.softmax(sf, axis=-1).reshape(s.shape)
-        return jnp.einsum("...ipjq,...jqd->...ipd", p,
-                          vg.astype(jnp.float32)).astype(q.dtype)
-
-    if spec.cap_q <= q_chunk_blocks or spec.cap_q % q_chunk_blocks != 0:
-        og = q_chunk(q_ids)
-    else:
-        n_ch = spec.cap_q // q_chunk_blocks
-        ids_ch = jnp.moveaxis(
-            q_ids.reshape(*q_ids.shape[:-1], n_ch, q_chunk_blocks), -2, 0)
-        og_ch = jax.lax.map(q_chunk, ids_ch)                           # (n_ch, ..., cc, bq, d)
-        og = jnp.moveaxis(og_ch, 0, -4)
-        og = og.reshape(*og.shape[:-4], spec.cap_q, bq, d)
-
-    # Scatter computed blocks over the reuse baseline (padding slots dropped).
-    out_blocks = o_reuse.reshape(*o_reuse.shape[:-2], t_q, bq, d)
-    out_blocks = scatter_blocks(out_blocks, q_ids, q_cnt, og)
-    return out_blocks.reshape(o_reuse.shape)
+    q_ids, q_cnt, kv_ids, kv_cnt, pair_live = attention_plan_indices(
+        m_c, m_s, spec)
+    return sparse_attention_from_plan(
+        q, k, v, o_reuse, q_ids, q_cnt, kv_ids, kv_cnt, pair_live, spec,
+        scale=scale, q_chunk_blocks=q_chunk_blocks)
 
 
 def sparse_decode_attention(

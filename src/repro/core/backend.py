@@ -1,0 +1,144 @@
+"""Backend routing for the Update–Dispatch engine (paper Fig. 4 "engine").
+
+One logical Dispatch step = GEMM-Q → sparse attention → GEMM-O, all driven
+by a precomputed :class:`~repro.core.plan.DispatchPlan`.  Two
+interchangeable implementations sit behind a common interface:
+
+  * :class:`XlaBackend`   — the pjit/XLA structural path (capacity-padded
+    gathers + one-hot scatters).  Multi-pod / GSPMD friendly; the dry-run
+    and roofline tooling lower this one.
+  * :class:`PallasBackend` — the paper-faithful Pallas TPU kernels
+    (``flashomni_attention_csr`` + ``gemm_q_sparse_kernel`` +
+    ``gemm_o_sparse_kernel``), chained through the COMPACT GEMM-Q layout:
+    the ``(Cr·bm, F)`` live-row projection feeds the CSR attention kernel
+    directly via ``plan.q_slots`` — no scatter between the two kernels.
+    Off-TPU the kernels run with ``interpret=True`` so tests and CI
+    exercise the exact same code path.
+
+Selection lives on ``EngineConfig.backend``: ``"xla"`` | ``"pallas"`` |
+``"auto"`` (Pallas on real TPUs, XLA elsewhere).
+
+Semantics note: when ``cap_kv`` truncates a head's KV-block union, the XLA
+path drops the lowest-need blocks globally per head while the Pallas CSR
+path truncates per row — identical whenever the capacity admits the full
+union (the default test configuration), documented approximation
+otherwise.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_gemm
+from repro.core.attention import SparseAttentionSpec, sparse_attention_from_plan
+from repro.core.plan import DispatchPlan
+
+__all__ = ["XlaBackend", "PallasBackend", "get_backend", "available_backends"]
+
+
+class XlaBackend:
+    """Structural-sparse XLA path over precomputed plan indices."""
+
+    name = "xla"
+    compact_q = False
+
+    def gemm_q(self, x: jax.Array, w: jax.Array, plan: DispatchPlan, *,
+               block: int) -> jax.Array:
+        """(B, N, d_in) @ (d_in, F) -> (B, N, F), zeros on cached rows."""
+        return sparse_gemm.gemm_q_from_plan(
+            x, w, plan.row_ids, plan.row_cnt, block=block)
+
+    def attention(self, q, k, v, o_reuse, plan: DispatchPlan,
+                  spec: SparseAttentionSpec, *, scale: Optional[float] = None,
+                  compact_q: bool = False) -> jax.Array:
+        """q (B,H,N_q,dh) [compact when ``compact_q``], k/v/o_reuse full."""
+        return sparse_attention_from_plan(
+            q, k, v, o_reuse, plan.q_ids, plan.q_cnt, plan.kv_ids,
+            plan.kv_cnt, plan.pair_live, spec, scale=scale,
+            q_src_ids=plan.q_slots if compact_q else None)
+
+    def gemm_o(self, o_tok, w, plan: DispatchPlan, bias: jax.Array, *,
+               block: int) -> jax.Array:
+        """o_tok (B,N,H,dh), w (H,dh,F), bias (B,N,F) -> (B,N,F)."""
+        return sparse_gemm.gemm_o_from_plan(
+            o_tok, w, plan.head_mask, plan.row_ids, plan.row_cnt, bias,
+            block=block)
+
+
+class PallasBackend:
+    """Pallas kernel path (CSR attention + sparse GEMMs, layout-fused)."""
+
+    name = "pallas"
+    compact_q = True
+
+    def __init__(self, interpret: Optional[bool] = None):
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+
+    def gemm_q(self, x: jax.Array, w: jax.Array, plan: DispatchPlan, *,
+               block: int) -> jax.Array:
+        """COMPACT (B, Cr·block, F) projection of the live row blocks."""
+        from repro.kernels.gemm_q import gemm_q_sparse_kernel
+        outs = [
+            gemm_q_sparse_kernel(x[b], w, plan.row_ids[b], block_rows=block,
+                                 interpret=self.interpret)
+            for b in range(x.shape[0])
+        ]
+        return jnp.stack(outs)
+
+    def attention(self, q, k, v, o_reuse, plan: DispatchPlan,
+                  spec: SparseAttentionSpec, *, scale: Optional[float] = None,
+                  compact_q: bool = False) -> jax.Array:
+        from repro.kernels.flashomni_attention import flashomni_attention_csr
+        b, h, n_q, dh = q.shape
+        n = o_reuse.shape[-2]
+        flat = lambda a: a.reshape(b * h, *a.shape[2:])
+        out = flashomni_attention_csr(
+            flat(q), flat(k), flat(v), flat(o_reuse),
+            flat(plan.q_ids), flat(plan.kv_row_ids), flat(plan.kv_row_cnt),
+            block_q=spec.block_q, block_kv=spec.block_kv, scale=scale,
+            interpret=self.interpret,
+            q_src_ids=flat(plan.q_slots) if compact_q else None)
+        # Degenerate all-cached guard (paper A.1.1 S_q degradation): with
+        # zero live rows the kernel writes garbage through the duplicated
+        # slot-0 id; keep the pure-reuse tensor for those (b, h).
+        any_live = (flat(plan.q_cnt) > 0)[:, None, None]
+        out = jnp.where(any_live, out, flat(o_reuse))
+        return out.reshape(b, h, n, dh)
+
+    def gemm_o(self, o_tok, w, plan: DispatchPlan, bias: jax.Array, *,
+               block: int) -> jax.Array:
+        from repro.kernels.gemm_o import gemm_o_sparse_kernel
+        outs = [
+            gemm_o_sparse_kernel(
+                o_tok[b].transpose(1, 0, 2), w, bias[b], plan.row_ids[b],
+                plan.head_ids[b], plan.head_cnt[b], block_rows=block,
+                interpret=self.interpret)
+            for b in range(o_tok.shape[0])
+        ]
+        return jnp.stack(outs)
+
+
+_XLA = XlaBackend()
+
+
+def available_backends() -> tuple[str, ...]:
+    return ("xla", "pallas", "auto")
+
+
+def get_backend(cfg):
+    """Resolve ``EngineConfig.backend`` to a backend instance."""
+    name = cfg.backend
+    if name == "auto":
+        name = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if name == "xla":
+        return _XLA
+    if name == "pallas":
+        return PallasBackend(interpret=getattr(cfg, "interpret", None))
+    raise ValueError(
+        f"unknown engine backend {cfg.backend!r}; expected one of "
+        f"{available_backends()}")

@@ -21,6 +21,27 @@ Two cache modes (DESIGN §2.3/§2.4):
 Symbols are stored at the *compressed* granularity (pool = n·b) exactly as
 in the paper (decode ``F(S_c, i) = (S_c >> i/n) & 1``), and expanded to
 kernel-block granularity on use.
+
+Update→plan→Dispatch dataflow (compile-once DispatchPlan):
+
+    update_layer ──► refresh_symbols ──► S_c, S_s        (packed uint8)
+                         │
+                         └─► build_dispatch_plan ──► DispatchPlan
+                               (ALL unpack / expand / top-k / argsort
+                                index work happens HERE, once per 𝒩 steps)
+                         LayerState = (S_c, S_s, taylor, k_since, plan)
+
+    dispatch_layer ──► get_backend(cfg) ──► backend.{gemm_q, attention,
+                                                      gemm_o}(…, plan)
+                       consumes ``state.plan`` VERBATIM — a Dispatch jaxpr
+                       contains no ``unpack_bits``/``clamp_mask_topk``/
+                       ``active_indices`` work (see tests/test_backend.py).
+
+Backend routing (``EngineConfig.backend``): ``"xla"`` structural path,
+``"pallas"`` CSR kernels with compact GEMM-Q→attention layout fusion, or
+``"auto"`` (Pallas on TPU hardware, XLA elsewhere).  The packed symbols
+stay in the state as the canonical compressed representation (diagnostics,
+resharding, and the paper's symbol-decode fidelity kernels).
 """
 
 from __future__ import annotations
@@ -33,10 +54,11 @@ import jax.numpy as jnp
 
 from repro.core import masks as masklib
 from repro.core import sparse_gemm, taylorseer
-from repro.core.attention import SparseAttentionSpec, dense_attention, sparse_attention_xla
+from repro.core.attention import SparseAttentionSpec, dense_attention
+from repro.core.backend import get_backend
 from repro.core.masks import MaskConfig
+from repro.core.plan import DispatchPlan, build_dispatch_plan, empty_plan_like
 from repro.core.symbols import (
-    active_indices,
     capacity_for,
     clamp_mask_topk,
     pack_bits,
@@ -48,10 +70,12 @@ __all__ = [
     "EngineConfig",
     "LayerState",
     "AttnParams",
+    "DispatchPlan",
     "init_layer_state",
     "is_update_step",
     "update_layer",
     "dispatch_layer",
+    "plan_from_state",
     "rms_norm",
     "apply_rope",
 ]
@@ -68,6 +92,8 @@ class EngineConfig:
     use_gemm_q: bool = True
     use_gemm_o: bool = True
     cache_dtype: jnp.dtype = jnp.bfloat16
+    backend: str = "xla"              # "xla" | "pallas" | "auto"
+    interpret: Optional[bool] = None  # Pallas interpret mode (None: off-TPU)
 
     # Capacity bookkeeping.  The single source of truth is the COMPRESSED
     # granularity capacity (symbols live there); block-granularity caps are
@@ -110,6 +136,7 @@ class LayerState(NamedTuple):
     s_s: jax.Array                 # (B, H, flat_bytes) uint8 — skipping symbol
     taylor: taylorseer.TaylorState  # over B_c (bias mode) or Õ (o_cache mode)
     k_since: jax.Array             # int32 — dispatch offset since last Update
+    plan: DispatchPlan             # compile-once index plan (refreshed at Update)
 
 
 def init_layer_state(
@@ -127,6 +154,7 @@ def init_layer_state(
         s_s=jnp.full((batch, heads, fbytes), 255, jnp.uint8),
         taylor=taylorseer.init_state(feat, cfg.mask.order, cfg.cache_dtype),
         k_since=jnp.zeros((), jnp.int32),
+        plan=empty_plan_like(batch, heads, n_tokens, cfg),
     )
 
 
@@ -206,6 +234,15 @@ def _unpack(state: LayerState, cfg: EngineConfig, n_tokens: int):
     return m_c, m_s
 
 
+def plan_from_state(state: LayerState, cfg: EngineConfig,
+                    n_tokens: int) -> DispatchPlan:
+    """Legacy rebuild path: re-derive the DispatchPlan from the packed
+    symbols (what every Dispatch step used to do).  Kept for the
+    plan-reuse invariance tests and the amortization benchmark."""
+    m_c, m_s = _unpack(state, cfg, n_tokens)
+    return build_dispatch_plan(m_c, m_s, cfg, n_tokens)
+
+
 # ---------------------------------------------------------------------------
 # Update / Dispatch step over one attention module.
 # ---------------------------------------------------------------------------
@@ -238,8 +275,11 @@ def update_layer(
         taylor = taylorseer.update(state.taylor, bias.astype(cfg.cache_dtype))
     else:
         taylor = taylorseer.update(state.taylor, o.astype(cfg.cache_dtype))
+    # Compile-once index plan: ALL index decoding for the coming Dispatch
+    # steps happens here, amortized over the next interval−1 steps.
+    plan = build_dispatch_plan(m_c, m_s, cfg, n)
     new_state = LayerState(s_c=s_c, s_s=s_s, taylor=taylor,
-                           k_since=jnp.zeros((), jnp.int32))
+                           k_since=jnp.zeros((), jnp.int32), plan=plan)
     return out, new_state
 
 
@@ -252,61 +292,70 @@ def dispatch_layer(
     n_text: int = 0,
     heads: int,
     freqs: Optional[jax.Array] = None,
+    plan: Optional[DispatchPlan] = None,
 ) -> tuple[jax.Array, LayerState]:
-    """Sparse execution guided by frozen symbols (paper *Dispatch* phase)."""
+    """Sparse execution guided by the frozen DispatchPlan (paper *Dispatch*).
+
+    Consumes ``state.plan`` verbatim — no symbol unpacking, mask expansion
+    or top-k/argsort index work happens here; that all ran once inside
+    :func:`update_layer`.  ``plan`` overrides the stored plan (used by the
+    rebuild-vs-reuse benchmark and invariance tests).  Execution routes
+    through :func:`repro.core.backend.get_backend` (XLA structural path or
+    Pallas CSR kernels with compact GEMM-Q layout fusion).
+    """
     b, n, dm = x.shape
     m = cfg.mask
-    m_c, m_s = _unpack(state, cfg, n)                          # compressed granularity
+    plan = state.plan if plan is None else plan
+    backend = get_backend(cfg)
     k_since = state.k_since + 1
-
     spec_c = cfg.caps(n)                                        # block granularity caps
-    factor = m.pool // m.block_q
-    t_q = -(-n // m.block_q)
-    m_c_blk = masklib.expand_block_mask(m_c, factor, t_q)
-    m_s_blk = jnp.repeat(jnp.repeat(m_s, factor, axis=-2), m.pool // m.block_kv, axis=-1)
-    m_s_blk = m_s_blk[..., :t_q, : (-(-n // m.block_kv))]
 
     # --- GEMM-Q: skip row blocks cached in every head (Obs. 2). ---
-    row_live = jnp.any(m_c, axis=-2)                            # (B, T) live in any head
     if cfg.use_gemm_q:
-        cap_rows = cfg.cap_q_cmp(n)
-        q_flat = sparse_gemm.gemm_q_sparse(x, params.wq, row_live,
-                                           block=m.pool, cap=cap_rows)
+        q_flat = backend.gemm_q(x, params.wq, plan, block=m.pool)
+        compact = backend.compact_q                             # (B, Cr·pool, H·dh)
     else:
         q_flat = jnp.einsum("bnd,df->bnf", x, params.wq)
-    qh = q_flat.reshape(b, n, heads, -1).transpose(0, 2, 1, 3)
+        compact = False
+    n_q = q_flat.shape[1]
+    qh = q_flat.reshape(b, n_q, heads, -1).transpose(0, 2, 1, 3)
     qh = rms_norm(qh, params.q_scale)
     k_h = rms_norm(_project_heads(x, params.wk, heads), params.k_scale)
     if freqs is not None:
-        qh, k_h = apply_rope(qh, freqs), apply_rope(k_h, freqs)
+        q_freqs = freqs
+        if compact:
+            # Compact rows are gathered: RoPE phases follow the ORIGINAL
+            # token positions of the gathered live rows.
+            pos = (plan.row_ids[..., :, None] * m.pool
+                   + jnp.arange(m.pool)).reshape(b, n_q)        # (B, Cr·pool)
+            q_freqs = freqs[pos][:, None]                       # (B,1,n_q,dh/2)
+        qh, k_h = apply_rope(qh, q_freqs), apply_rope(k_h, freqs)
     v_h = _project_heads(x, params.wv, heads)
 
-    # --- Attention: structural sparse path. ---
+    # --- Attention: backend sparse path over the frozen plan. ---
     dh = qh.shape[-1]
     if cfg.cache_mode == "bias":
         o_reuse = jnp.zeros((b, heads, n, dh), qh.dtype)
     else:
         o_reuse = taylorseer.forecast(state.taylor, k_since, m.interval).astype(qh.dtype)
-    o = sparse_attention_xla(qh, k_h, v_h, m_c_blk, m_s_blk, o_reuse, spec_c)
+    o = backend.attention(qh, k_h, v_h, o_reuse, plan, spec_c,
+                          compact_q=compact)
 
     # --- GEMM-O: live heads + forecast bias (Obs. 3, Eq. 4). ---
     o_tok = o.transpose(0, 2, 1, 3)
     wo_h = params.wo.reshape(heads, dh, dm)
-    m_ch = jnp.swapaxes(m_c, -1, -2)                            # (B,T,H)
     if cfg.cache_mode == "bias":
         bias_f = taylorseer.forecast(state.taylor, k_since, m.interval).astype(x.dtype)
         if cfg.use_gemm_o:
-            cap_rows = cfg.cap_q_cmp(n)
-            out = sparse_gemm.gemm_o_sparse(o_tok, wo_h, m_ch, bias_f,
-                                            block=m.pool, cap=cap_rows)
+            out = backend.gemm_o(o_tok, wo_h, plan, bias_f, block=m.pool)
         else:
             # Dense GEMM over (zero-filled) cached heads + forecast bias —
             # numerically identical, no FLOP saving (fidelity fallback).
-            m_tok = jnp.repeat(m_ch, m.pool, axis=-2)[..., :n, :]
+            m_tok = jnp.repeat(plan.m_ch, m.pool, axis=-2)[..., :n, :]
             out = jnp.einsum("bnhd,hdf->bnf",
                              jnp.where(m_tok[..., None], o_tok, 0), wo_h) + bias_f
     else:
         out = jnp.einsum("bnhd,hdf->bnf", o_tok, wo_h)
     new_state = LayerState(s_c=state.s_c, s_s=state.s_s, taylor=state.taylor,
-                           k_since=k_since)
+                           k_since=k_since, plan=plan)
     return out, new_state

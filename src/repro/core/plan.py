@@ -1,0 +1,156 @@
+"""Compile-once DispatchPlan — precomputed CSR index plan for Dispatch steps.
+
+The paper's Update–Dispatch engine (§3.2) freezes the sparse symbols at an
+*Update* step and reuses them for the next ``𝒩−1`` *Dispatch* steps.  The
+seed implementation froze only the PACKED symbols and re-derived every
+index structure (``unpack_bits`` → block-mask expand → ``clamp_mask_topk``
+→ ``active_indices``) on every dispatch of every layer — per-step work that
+Sparse VideoGen / Sparse-vDiT show should be off the critical path.
+
+:class:`DispatchPlan` moves all of that to Update time.  It is a plain
+pytree carried inside ``LayerState``, so it flows through ``jit``/``scan``
+and sharding unchanged, and every backend (XLA structural or Pallas CSR
+kernels) consumes it verbatim:
+
+  * ``q_ids``/``q_cnt``       — live q-block ids at kernel-block granularity
+    (the attention spatial gather, symbol ``S_c``).
+  * ``q_slots``               — the same live q blocks, re-indexed into the
+    COMPACT GEMM-Q output layout (``(Cr·pool, F)`` row-major), so the
+    Pallas CSR attention kernel can read Q straight out of the compact
+    projection without a scatter (layout fusion).
+  * ``kv_ids``/``kv_cnt``/``pair_live`` — per-(batch, head) KV-block UNION
+    with the exact (i, j) liveness inside the gathered subset (the XLA
+    structural path's reduction layout, symbol ``S_s``).
+  * ``kv_row_ids``/``kv_row_cnt``       — per-live-row CSR column lists
+    (the Pallas kernel's reduction layout).
+  * ``row_ids``/``row_cnt``   — pool-granularity row blocks live in ANY
+    head (GEMM-Q spatial gather + GEMM-O spatial gather, Obs. 2).
+  * ``head_ids``/``head_cnt``/``head_mask`` — per-live-row live-head lists
+    (GEMM-O reduction sparsity, Obs. 3) in both CSR (Pallas) and mask
+    (XLA) form.
+  * ``m_ch``                  — the compressed (row-block, head) compute
+    mask, kept for the dense fidelity fallbacks and diagnostics.
+
+All shapes are static functions of ``(EngineConfig, n_tokens, heads)``, so
+a Dispatch step's jaxpr contains no sort/top-k/unpack work at all — see
+the jaxpr-inspection test in ``tests/test_backend.py``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masklib
+from repro.core.attention import attention_plan_indices
+from repro.core.symbols import active_indices, slot_positions
+
+__all__ = ["DispatchPlan", "build_dispatch_plan", "empty_plan_like"]
+
+
+class DispatchPlan(NamedTuple):
+    """Precomputed index plan for Dispatch steps (a pytree of int32/bool)."""
+
+    # --- attention, kernel-block granularity, per (B, H) ---
+    q_ids: jax.Array       # (B, H, Cq) int32 live q-block ids (full layout)
+    q_cnt: jax.Array       # (B, H)     int32
+    q_slots: jax.Array     # (B, H, Cq) int32 same blocks, compact layout
+    kv_ids: jax.Array      # (B, H, Ck) int32 KV-union ids (XLA path)
+    kv_cnt: jax.Array      # (B, H)     int32
+    pair_live: jax.Array   # (B, H, Cq, Ck) bool exact (i,j) mask in the union
+    kv_row_ids: jax.Array  # (B, H, Cq, Ck) int32 per-row CSR (Pallas path)
+    kv_row_cnt: jax.Array  # (B, H, Cq) int32
+    # --- GEMM-Q / GEMM-O, pool granularity, per B ---
+    row_ids: jax.Array     # (B, Cr) int32 row blocks live in any head
+    row_cnt: jax.Array     # (B,)    int32
+    head_ids: jax.Array    # (B, Cr, H) int32 live heads per live row (CSR)
+    head_cnt: jax.Array    # (B, Cr) int32
+    head_mask: jax.Array   # (B, Cr, H) bool gathered (row, head) mask
+    m_ch: jax.Array        # (B, T, H) bool compressed compute mask
+
+
+def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg,
+                        n_tokens: int) -> DispatchPlan:
+    """Derive the full index plan from fresh compressed-granularity masks.
+
+    ``m_c``: (B, H, T) bool, ``m_s``: (B, H, T, T) bool — True = compute,
+    as produced by :func:`repro.core.engine.refresh_symbols`.  Runs ONCE
+    per Update step; every sort/top-k in the engine lives here.
+    """
+    m = cfg.mask
+    spec = cfg.caps(n_tokens)
+    factor = m.pool // m.block_q
+    t_q = -(-n_tokens // m.block_q)
+    t_kv = -(-n_tokens // m.block_kv)
+    t_cmp = m_c.shape[-1]
+
+    # Kernel-block granularity masks (transient — not stored).
+    # GEMM-Q / GEMM-O spatial gather first (pool granularity, any-head
+    # union): attention may only compute q blocks whose pool row survived
+    # the row-capacity truncation — the row projection simply does not
+    # exist for the others (they degrade to cache-reuse, consistently
+    # across backends; the seed XLA path silently attended with q = 0).
+    cap_rows = cfg.cap_q_cmp(n_tokens)
+    row_live = jnp.any(m_c, axis=-2)                               # (B, T)
+    row_ids, row_cnt = active_indices(row_live, cap_rows)
+    slot = jnp.arange(cap_rows, dtype=jnp.int32)
+    sid = jnp.where(slot < row_cnt[..., None], row_ids, t_cmp)
+    kept = jnp.zeros((*row_ids.shape[:-1], t_cmp + 1), jnp.bool_)
+    kept = jnp.put_along_axis(kept, sid, jnp.ones_like(sid, jnp.bool_),
+                              axis=-1, inplace=False)[..., :t_cmp]
+    m_c = m_c & kept[..., None, :]                                 # (B, H, T)
+
+    m_c_blk = masklib.expand_block_mask(m_c, factor, t_q)
+    m_s_blk = jnp.repeat(jnp.repeat(m_s, factor, axis=-2),
+                         m.pool // m.block_kv, axis=-1)[..., :t_q, :t_kv]
+
+    # Attention spatial gather (S_c) + XLA reduction layout (per-(b, h)
+    # KV union over live rows) — shared with the mask-level
+    # ``sparse_attention_xla`` entry so both paths rank/clamp identically.
+    q_ids, q_cnt, kv_ids, kv_cnt, pair_live = attention_plan_indices(
+        m_c_blk, m_s_blk, spec)
+
+    # Pallas reduction layout: per-live-row CSR column lists.
+    rows = jnp.take_along_axis(m_s_blk, q_ids[..., :, None], axis=-2)
+    kv_row_ids, kv_row_cnt = active_indices(rows, spec.cap_kv)
+
+    # GEMM-O reduction sparsity over the kept rows.  Padding slots (slot >=
+    # row_cnt) duplicate the last live row id; their head lists MUST be
+    # empty — the Pallas GEMM-O output is bias-aliased, so on real TPU a
+    # padded duplicate with live heads would re-accumulate that row's
+    # contribution once per padded slot (interpret mode hides this).
+    m_ch = jnp.swapaxes(m_c, -1, -2)                               # (B, T, H)
+    row_valid = slot < row_cnt[..., None]                          # (B, Cr)
+    head_mask = jnp.take_along_axis(m_ch, row_ids[..., None], axis=-2)
+    head_mask = head_mask & row_valid[..., None]
+    heads = m_ch.shape[-1]
+    head_ids, head_cnt = active_indices(head_mask, heads)
+
+    # Compact-layout remap: live q block i (block granularity) lives at
+    # block index  slot(i // factor)·factor + i % factor  of the compact
+    # (Cr·pool, F) GEMM-Q output.  Live q blocks always fall inside live
+    # rows (m_c live at (h, i) ⇒ row i live in the any-head union).
+    row_slot = slot_positions(row_ids, row_cnt, t_cmp)             # (B, T)
+    slot_of = jnp.take_along_axis(
+        jnp.broadcast_to(row_slot[:, None, :], (*q_ids.shape[:-1], t_cmp)),
+        q_ids // factor, axis=-1)
+    q_slots = slot_of * factor + q_ids % factor
+
+    return DispatchPlan(
+        q_ids=q_ids, q_cnt=q_cnt, q_slots=q_slots,
+        kv_ids=kv_ids, kv_cnt=kv_cnt, pair_live=pair_live,
+        kv_row_ids=kv_row_ids, kv_row_cnt=kv_row_cnt,
+        row_ids=row_ids, row_cnt=row_cnt,
+        head_ids=head_ids, head_cnt=head_cnt, head_mask=head_mask,
+        m_ch=m_ch,
+    )
+
+
+def empty_plan_like(batch: int, heads: int, n_tokens: int, cfg) -> DispatchPlan:
+    """All-live plan matching the all-ones init symbols (warmup state)."""
+    t = cfg.mask.n_blocks(n_tokens)
+    m_c = jnp.ones((batch, heads, t), jnp.bool_)
+    m_s = jnp.ones((batch, heads, t, t), jnp.bool_)
+    return build_dispatch_plan(m_c, m_s, cfg, n_tokens)

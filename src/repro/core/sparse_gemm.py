@@ -29,8 +29,10 @@ from repro.core.symbols import active_indices
 
 __all__ = [
     "gemm_q_sparse",
+    "gemm_q_from_plan",
     "gemm_o_update_bias",
     "gemm_o_sparse",
+    "gemm_o_from_plan",
     "rows_any_head_live",
 ]
 
@@ -38,6 +40,38 @@ __all__ = [
 def _gather_rows(xb: jax.Array, ids: jax.Array) -> jax.Array:
     idx = jnp.broadcast_to(ids[..., None, None], (*ids.shape, *xb.shape[-2:]))
     return jnp.take_along_axis(xb, idx, axis=-3)
+
+
+def gemm_q_from_plan(
+    x: jax.Array,
+    w: jax.Array,
+    ids: jax.Array,
+    cnt: jax.Array,
+    *,
+    block: int,
+    bias: Optional[jax.Array] = None,
+    compact: bool = False,
+) -> jax.Array:
+    """Row-block-sparse ``x @ w`` over PRECOMPUTED live-row indices.
+
+    ``ids``/``cnt`` from :func:`repro.core.symbols.active_indices` (or a
+    :class:`~repro.core.plan.DispatchPlan`).  When ``compact`` the gathered
+    projection is returned in slot order, shape (..., cap·block, d_out),
+    without the scatter (the Pallas layout-fusion contract); otherwise it
+    is scattered to full shape with zeros on cached rows.
+    """
+    n, d_in = x.shape[-2], x.shape[-1]
+    t = n // block
+    xb = x.reshape(*x.shape[:-2], t, block, d_in)
+    xg = _gather_rows(xb, ids)                                  # (..., cap, block, d_in)
+    yg = jnp.einsum("...cbd,df->...cbf", xg, w)
+    if bias is not None:
+        yg = yg + bias
+    if compact:
+        return yg.reshape(*x.shape[:-2], ids.shape[-1] * block, w.shape[-1])
+    outb = jnp.zeros((*x.shape[:-2], t, block, w.shape[-1]), yg.dtype)
+    outb = scatter_blocks(outb, ids, cnt, yg)
+    return outb.reshape(*x.shape[:-1], w.shape[-1])
 
 
 def gemm_q_sparse(
@@ -49,23 +83,14 @@ def gemm_q_sparse(
     cap: int,
     bias: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Row-block-sparse ``x @ w``.
+    """Row-block-sparse ``x @ w`` (mask-level entry; decodes indices).
 
     x: (..., N, d_in); w: (d_in, d_out); m_rows: (..., T) with T = N//block,
     True = row block is live.  Cached row blocks produce zeros (their Q is
     never consumed — their attention output comes from cache).
     """
-    n, d_in = x.shape[-2], x.shape[-1]
-    t = n // block
     ids, cnt = active_indices(m_rows, cap)
-    xb = x.reshape(*x.shape[:-2], t, block, d_in)
-    xg = _gather_rows(xb, ids)                                  # (..., cap, block, d_in)
-    yg = jnp.einsum("...cbd,df->...cbf", xg, w)
-    if bias is not None:
-        yg = yg + bias
-    outb = jnp.zeros((*x.shape[:-2], t, block, w.shape[-1]), yg.dtype)
-    outb = scatter_blocks(outb, ids, cnt, yg)
-    return outb.reshape(*x.shape[:-1], w.shape[-1])
+    return gemm_q_from_plan(x, w, ids, cnt, block=block, bias=bias)
 
 
 def rows_any_head_live(m_ch: jax.Array) -> jax.Array:
@@ -93,6 +118,36 @@ def gemm_o_update_bias(
     return jnp.sum(jnp.where(per_tok[..., None], contrib, 0), axis=-2)
 
 
+def gemm_o_from_plan(
+    o_heads: jax.Array,
+    w: jax.Array,
+    head_mask: jax.Array,
+    ids: jax.Array,
+    cnt: jax.Array,
+    bias_forecast: jax.Array,
+    *,
+    block: int,
+) -> jax.Array:
+    """Dispatch-step GEMM-O over PRECOMPUTED indices.
+
+    o_heads: (..., N, H, dh); w: (H, dh, d_out); ``ids``/``cnt`` are the
+    live-row list and ``head_mask`` (..., cap, H) the per-live-row live-head
+    mask — both straight from a :class:`~repro.core.plan.DispatchPlan`.
+    """
+    n, h, dh = o_heads.shape[-3], o_heads.shape[-2], o_heads.shape[-1]
+    t = n // block
+    d_out = w.shape[-1]
+    ob = o_heads.reshape(*o_heads.shape[:-3], t, block, h, dh)
+    idx = jnp.broadcast_to(ids[..., None, None, None], (*ids.shape, block, h, dh))
+    og = jnp.take_along_axis(ob, idx, axis=-4)                  # (..., cap, block, H, dh)
+    og = jnp.where(head_mask[..., None, :, None], og, 0)        # mask cached heads
+    yg = jnp.einsum("...cbhd,hdf->...cbf", og, w)
+    outb = jnp.zeros((*o_heads.shape[:-3], t, block, d_out), yg.dtype)
+    outb = scatter_blocks(outb, ids, cnt, yg)
+    out = outb.reshape(*o_heads.shape[:-3], n, d_out)
+    return out + bias_forecast
+
+
 def gemm_o_sparse(
     o_heads: jax.Array,
     w: jax.Array,
@@ -102,24 +157,14 @@ def gemm_o_sparse(
     block: int,
     cap: int,
 ) -> jax.Array:
-    """Dispatch-step GEMM-O: live heads projected + forecast bias added.
+    """Dispatch-step GEMM-O (mask-level entry; decodes indices per call).
 
     o_heads: (..., N, H, dh); w: (H, dh, d_out); m_ch: (..., T, H);
     bias_forecast = OP_reuse(B_c): (..., N, d_out).
     Fully cached row blocks cost zero GEMM FLOPs (spatial gather).
     """
-    n, h, dh = o_heads.shape[-3], o_heads.shape[-2], o_heads.shape[-1]
-    t = n // block
-    d_out = w.shape[-1]
     live_rows = rows_any_head_live(m_ch)                        # (..., T)
     ids, cnt = active_indices(live_rows, cap)
-    ob = o_heads.reshape(*o_heads.shape[:-3], t, block, h, dh)
-    idx = jnp.broadcast_to(ids[..., None, None, None], (*ids.shape, block, h, dh))
-    og = jnp.take_along_axis(ob, idx, axis=-4)                  # (..., cap, block, H, dh)
     mh = jnp.take_along_axis(m_ch, ids[..., None], axis=-2)     # (..., cap, H)
-    og = jnp.where(mh[..., None, :, None], og, 0)               # mask cached heads
-    yg = jnp.einsum("...cbhd,hdf->...cbf", og, w)
-    outb = jnp.zeros((*o_heads.shape[:-3], t, block, d_out), yg.dtype)
-    outb = scatter_blocks(outb, ids, cnt, yg)
-    out = outb.reshape(*o_heads.shape[:-3], n, d_out)
-    return out + bias_forecast
+    return gemm_o_from_plan(o_heads, w, mh, ids, cnt, bias_forecast,
+                            block=block)

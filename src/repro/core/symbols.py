@@ -36,6 +36,7 @@ __all__ = [
     "active_indices",
     "capacity_for",
     "clamp_mask_topk",
+    "slot_positions",
 ]
 
 # Big-endian bit weights within a byte: bit for in-byte position p sits at
@@ -118,6 +119,24 @@ def clamp_mask_topk(mask: jax.Array, score: jax.Array, cap: int) -> jax.Array:
     keep = jnp.put_along_axis(keep, ids, jnp.ones_like(ids, jnp.bool_), axis=-1,
                               inplace=False)
     return mask & keep
+
+
+def slot_positions(ids: jax.Array, count: jax.Array, t: int) -> jax.Array:
+    """Inverse of :func:`active_indices`: map each of the ``t`` positions to
+    its slot in the compacted ``ids`` list (0 for positions never selected).
+
+    ``ids``: (..., C) from ``active_indices``; ``count``: (...,).  Padding
+    slots (slot >= count) are routed to a discard column so a duplicated
+    padded id can never overwrite a live slot assignment.  Used to chain the
+    compact GEMM-Q layout into the CSR attention kernel without a scatter.
+    """
+    cap = ids.shape[-1]
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    sid = jnp.where(slot < count[..., None], ids, t)          # discard -> col t
+    scat = jnp.zeros((*ids.shape[:-1], t + 1), jnp.int32)
+    scat = jnp.put_along_axis(scat, sid, jnp.broadcast_to(slot, sid.shape),
+                              axis=-1, inplace=False)
+    return scat[..., :t]
 
 
 def active_indices(mask: jax.Array, capacity: int) -> tuple[jax.Array, jax.Array]:

@@ -23,7 +23,7 @@ from repro.core.engine import EngineConfig, is_update_step
 from repro.core.symbols import unpack_bits
 from repro.models import dit
 
-__all__ = ["SamplerConfig", "sample", "step_density"]
+__all__ = ["SamplerConfig", "sample", "step_density", "pair_sparsity"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,21 +32,30 @@ class SamplerConfig:
     dtype: Any = jnp.float32
 
 
-def step_density(states, cfg: ArchConfig, ecfg: EngineConfig, n_tokens: int) -> float:
-    """Fig. 7 density: fraction of (q-block, head) work still live."""
+def _density_device(states, ecfg: EngineConfig, n_tokens: int) -> jax.Array:
+    """Fig. 7 density as a DEVICE scalar (no host sync)."""
     t = ecfg.mask.n_blocks(n_tokens)
     m_c = unpack_bits(states.s_c, t)             # (L, B, H, T)
-    return float(jnp.mean(m_c.astype(jnp.float32)))
+    return jnp.mean(m_c.astype(jnp.float32))
+
+
+def _pair_sparsity_device(states, ecfg: EngineConfig, n_tokens: int) -> jax.Array:
+    t = ecfg.mask.n_blocks(n_tokens)
+    m_c = unpack_bits(states.s_c, t)
+    m_s = unpack_bits(states.s_s, t * t).reshape(*states.s_s.shape[:-1], t, t)
+    live = m_s & m_c[..., None]
+    return 1.0 - jnp.mean(live.astype(jnp.float32))
+
+
+def step_density(states, cfg: ArchConfig, ecfg: EngineConfig, n_tokens: int) -> float:
+    """Fig. 7 density: fraction of (q-block, head) work still live."""
+    return float(_density_device(states, ecfg, n_tokens))
 
 
 def pair_sparsity(states, cfg: ArchConfig, ecfg: EngineConfig, n_tokens: int) -> float:
     """Paper 'Sparsity' metric: skipped (Q_i K_j, P_ij V_j) pairs / total —
     combines feature caching (dead rows) and block-sparse skipping."""
-    t = ecfg.mask.n_blocks(n_tokens)
-    m_c = unpack_bits(states.s_c, t)
-    m_s = unpack_bits(states.s_s, t * t).reshape(*states.s_s.shape[:-1], t, t)
-    live = m_s & m_c[..., None]
-    return 1.0 - float(jnp.mean(live.astype(jnp.float32)))
+    return float(_pair_sparsity_device(states, ecfg, n_tokens))
 
 
 def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
@@ -71,9 +80,15 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
         p, cfg, ecfg, s, xv, te, t, mode="dispatch", dtype=scfg.dtype))
     dns = jax.jit(lambda p, s, xv, te, t: dit.denoise_step(
         p, cfg, ecfg, s, xv, te, t, mode="dense", dtype=scfg.dtype))
+    # Per-step efficiency metrics stay ON DEVICE during the loop; a single
+    # host sync after the last step materializes the whole trace (a
+    # per-step ``float(...)`` would serialize the async dispatch pipeline).
+    met = jax.jit(lambda s: (_density_device(s, ecfg, n_tokens),
+                             _pair_sparsity_device(s, ecfg, n_tokens)))
 
     x = x0
     dt = 1.0 / scfg.num_steps
+    pending: list = []
     for i in range(scfg.num_steps):
         t = jnp.full((b,), i * dt, scfg.dtype)
         xe = (x @ patch_embed).astype(scfg.dtype)
@@ -87,9 +102,11 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
             v, states = dsp(params, states, xe, text_emb, t)
             kind = "dispatch"
         if trace is not None:
-            trace.append({"step": i, "kind": kind,
-                          "density": step_density(states, cfg, ecfg, n_tokens),
-                          "pair_sparsity": pair_sparsity(states, cfg, ecfg,
-                                                         n_tokens)})
+            pending.append((i, kind, met(states)))
         x = x + v.astype(x.dtype) * dt
+    if trace is not None:
+        for i, kind, (dens, pair_s) in pending:
+            trace.append({"step": i, "kind": kind,
+                          "density": float(dens),
+                          "pair_sparsity": float(pair_s)})
     return x

@@ -1,0 +1,7 @@
+"""Version shims shared by the Pallas kernel modules."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax<=0.4.x names the TPU compiler-params struct TPUCompilerParams; newer
+# releases renamed it CompilerParams.  Resolve whichever exists.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 __all__ = ["flashomni_attention_csr", "flashomni_attention_symbols"]
 
 _NEG_INF = -1e30
@@ -47,7 +49,7 @@ _LANES = 128  # TPU vreg lane count: m/l scratch kept (bq, 128)-shaped.
 
 def _csr_kernel(
     # scalar prefetch
-    q_ids_ref, kv_ids_ref, kv_cnt_ref,
+    q_ids_ref, q_src_ids_ref, kv_ids_ref, kv_cnt_ref,
     # inputs
     q_ref, k_ref, v_ref, o_reuse_ref,   # o_reuse aliased to output (untouched)
     # outputs
@@ -92,11 +94,11 @@ def _csr_kernel(
 
 
 def flashomni_attention_csr(
-    q: jax.Array,             # (BH, N, d)
+    q: jax.Array,             # (BH, N_q, d) — full OR compact (layout fusion)
     k: jax.Array,             # (BH, N_kv, d)
     v: jax.Array,             # (BH, N_kv, d)
     o_reuse: jax.Array,       # (BH, N, d) — cached/forecast baseline (aliased)
-    q_ids: jax.Array,         # (BH, Cq) int32 live q-block ids
+    q_ids: jax.Array,         # (BH, Cq) int32 live q-block ids (output layout)
     kv_ids: jax.Array,        # (BH, Cq, Ckv) int32 per-row live kv-block ids
     kv_cnt: jax.Array,        # (BH, Cq) int32
     *,
@@ -104,33 +106,41 @@ def flashomni_attention_csr(
     block_kv: int,
     scale: Optional[float] = None,
     interpret: bool = False,
+    q_src_ids: Optional[jax.Array] = None,  # (BH, Cq) q-block ids in Q's layout
 ) -> jax.Array:
-    bhs, n, d = q.shape
+    """CSR sparse attention.  ``q_src_ids`` decouples where live Q blocks
+    are READ from where outputs are WRITTEN: pass the compact-slot ids of a
+    GEMM-Q ``(Cr·bm, F)`` output to chain the two kernels without a scatter
+    (the compact-layout fusion GEMM-Q was designed for).  Defaults to
+    ``q_ids`` (full-layout Q)."""
+    bhs, n_q, d = q.shape
     n_kv = k.shape[1]
-    assert n % block_q == 0 and n_kv % block_kv == 0
+    assert n_q % block_q == 0 and n_kv % block_kv == 0
+    assert o_reuse.shape[1] % block_q == 0
     cq, ckv = q_ids.shape[1], kv_ids.shape[2]
     scale = (d ** -0.5) if scale is None else scale
+    q_src_ids = q_ids if q_src_ids is None else q_src_ids
 
     grid = (bhs, cq, ckv)
     kernel = functools.partial(_csr_kernel, scale=scale, ckv=ckv)
     flat_kv = kv_ids.reshape(bhs, cq * ckv)
 
-    def q_map(bh, c, j, q_ids_ref, kv_ids_ref, kv_cnt_ref):
-        return (bh, q_ids_ref[bh, c], 0)
+    def q_map(bh, c, j, q_ids_ref, q_src_ids_ref, kv_ids_ref, kv_cnt_ref):
+        return (bh, q_src_ids_ref[bh, c], 0)
 
-    def kv_map(bh, c, j, q_ids_ref, kv_ids_ref, kv_cnt_ref):
+    def kv_map(bh, c, j, q_ids_ref, q_src_ids_ref, kv_ids_ref, kv_cnt_ref):
         # Clamp padded slots to the last live column (re-DMA of a resident
         # block — Mosaic elides the copy when the index is unchanged).
         jj = jnp.maximum(jnp.minimum(j, kv_cnt_ref[bh, c] - 1), 0)
         return (bh, kv_ids_ref[bh, c * ckv + jj], 0)
 
-    def o_map(bh, c, j, q_ids_ref, kv_ids_ref, kv_cnt_ref):
+    def o_map(bh, c, j, q_ids_ref, q_src_ids_ref, kv_ids_ref, kv_cnt_ref):
         return (bh, q_ids_ref[bh, c], 0)
 
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=4,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, block_q, d), q_map),
@@ -147,12 +157,12 @@ def flashomni_attention_csr(
         ),
         out_shape=jax.ShapeDtypeStruct(o_reuse.shape, o_reuse.dtype),
         # NB: alias indices count the scalar-prefetch operands too.
-        input_output_aliases={6: 0},                        # o_reuse -> out
-        compiler_params=pltpu.CompilerParams(
+        input_output_aliases={7: 0},                        # o_reuse -> out
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(q_ids, flat_kv, kv_cnt, q, k, v, o_reuse)
+    )(q_ids, q_src_ids, flat_kv, kv_cnt, q, k, v, o_reuse)
 
 
 # ---------------------------------------------------------------------------
@@ -262,7 +272,7 @@ def flashomni_attention_symbols(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct(o_reuse.shape, o_reuse.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 __all__ = ["gemm_o_sparse_kernel"]
 
 
@@ -42,7 +44,11 @@ def _kernel(row_ids_ref, head_ids_ref, head_cnt_ref,
             preferred_element_type=jnp.float32,
         )
 
-    @pl.when(hh == hc - 1)
+    # Padding slots (head_cnt == 0) duplicate the last live row id; they
+    # must not store: with the bias-aliased output, re-initializing from
+    # ``bias_ref`` would erase (interpret) or re-accumulate (TPU re-fetch
+    # across f-tiles) the live slot's already-written result.
+    @pl.when((hh == hc - 1) & (head_cnt_ref[c] > 0))
     def _done():
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
@@ -94,7 +100,7 @@ def gemm_o_sparse_kernel(
         ),
         out_shape=jax.ShapeDtypeStruct(bias.shape, bias.dtype),
         input_output_aliases={5: 0},                         # bias -> out
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

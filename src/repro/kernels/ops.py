@@ -138,6 +138,9 @@ def gemm_o(
     row_ids, row_cnt = active_indices(live_rows, cap_rows)
     rows = jnp.take(m_ch, row_ids, axis=0)                           # (Cr, H)
     head_ids, head_cnt = active_indices(rows, cap_heads)
+    # Padding slots duplicate the last live row; empty their head lists so
+    # the bias-aliased kernel skips them (see _kernel's _done guard).
+    head_cnt = jnp.where(jnp.arange(cap_rows) < row_cnt, head_cnt, 0)
     out = gemm_o_sparse_kernel(o_heads, w, bias, row_ids, head_ids, head_cnt,
                                block_rows=block_rows, interpret=interpret)
     return jnp.where(row_cnt > 0, out, bias)

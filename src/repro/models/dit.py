@@ -99,14 +99,33 @@ def engine_state_specs(cfg: ArchConfig, ecfg: EngineConfig) -> LayerState:
         taylor_feat = (None, None, "dp", "sp", "tp")   # (L, D+1, B, N, dm)
     else:
         taylor_feat = (None, None, "dp", None, "sp", None)
+    from repro.core.plan import DispatchPlan
     from repro.core.taylorseer import TaylorState
     # Packed symbols are tiny (uint8); replicate the head dim (24 heads do
-    # not divide the 16-wide model axis).
+    # not divide the 16-wide model axis).  The DispatchPlan index arrays are
+    # likewise small (int32 at block/pool granularity) and capacity-shaped;
+    # shard them on batch only so scalar-prefetch gathers stay local.
     return LayerState(
         s_c=(None, "dp", None, None),
         s_s=(None, "dp", None, None),
         taylor=TaylorState(derivs=taylor_feat, n_updates=(None,)),
         k_since=(None,),
+        plan=DispatchPlan(
+            q_ids=(None, "dp", None, None),
+            q_cnt=(None, "dp", None),
+            q_slots=(None, "dp", None, None),
+            kv_ids=(None, "dp", None, None),
+            kv_cnt=(None, "dp", None),
+            pair_live=(None, "dp", None, None, None),
+            kv_row_ids=(None, "dp", None, None, None),
+            kv_row_cnt=(None, "dp", None, None),
+            row_ids=(None, "dp", None),
+            row_cnt=(None, "dp"),
+            head_ids=(None, "dp", None, None),
+            head_cnt=(None, "dp", None),
+            head_mask=(None, "dp", None, None),
+            m_ch=(None, "dp", None, None),
+        ),
     )
 
 

@@ -1,0 +1,104 @@
+"""Hypothesis import shim: property tests degrade to fixed parameterized cases.
+
+``hypothesis`` is an optional test dependency (declared in pyproject.toml /
+requirements.txt).  When it is installed, this module re-exports the real
+``given``/``settings``/``st`` unchanged.  When it is NOT installed, the
+shims below run each ``@given`` test over a small deterministic sample of
+the requested strategies instead of failing collection — the suite stays
+green either way, just with fixed cases instead of property search.
+
+Only the strategy subset used by this repo's tests is implemented:
+``integers``, ``floats``, ``booleans``, ``lists``, ``data``.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    _N_CASES = 8  # deterministic draws per @given test
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _DataSentinel:
+        """Marks an ``st.data()`` argument (drawn lazily inside the test)."""
+
+    class _Data:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.example(self._rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def data():
+            return _DataSentinel()
+
+    st = _St()
+
+    def given(*strategies):
+        def decorate(fn):
+            # Deliberately NOT functools.wraps: the wrapper must expose a
+            # zero-arg signature so pytest does not mistake the strategy
+            # parameters for fixtures.
+            def wrapper():
+                for case in range(_N_CASES):
+                    rng = _np.random.default_rng(1000 + case)
+                    args = [
+                        _Data(rng) if isinstance(s, _DataSentinel)
+                        else s.example(rng)
+                        for s in strategies
+                    ]
+                    fn(*args)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return decorate
+
+    class settings:  # noqa: N801 — mirrors the hypothesis API
+        def __init__(self, *args, **kwargs):
+            pass
+
+        @staticmethod
+        def register_profile(name, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(name):
+            pass

@@ -1,0 +1,239 @@
+"""Backend routing + DispatchPlan tests (compile-once Dispatch engine).
+
+Covers the ISSUE-1 acceptance criteria:
+  * interpret-mode parity: the Pallas backend (CSR attention + GEMM-Q +
+    GEMM-O chained through the compact layout) matches the XLA structural
+    path and the ``masked_block_attention`` oracle, for ``"bias"`` and
+    ``"o_cache"`` cache modes, ragged kv/head counts and fully-cached rows;
+  * plan-reuse invariance: N dispatches with a frozen DispatchPlan equal
+    the legacy per-step rebuild path exactly;
+  * no index rebuild at Dispatch: the dispatch jaxpr contains no
+    sort/top-k work (``unpack_bits``→``clamp_mask_topk``→``active_indices``
+    all moved to Update).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AttnParams, EngineConfig, MaskConfig, dispatch_layer,
+                        get_backend, init_layer_state, plan_from_state,
+                        update_layer)
+from repro.core.attention import masked_block_attention
+from repro.core.backend import PallasBackend, XlaBackend
+from repro.core.plan import build_dispatch_plan
+
+
+def _engine_setup(mode="bias", backend="xla", tau_kv=0.0, capq=1.0, capkv=1.0,
+                  batch=2):
+    key = jax.random.PRNGKey(0)
+    B, H, N, dm, dh = batch, 2, 256, 64, 32
+    cfg = EngineConfig(
+        mask=MaskConfig(pool=32, block_q=16, block_kv=16, interval=4,
+                        order=1, warmup_steps=1, tau_kv=tau_kv, tau_q=0.5),
+        cache_mode=mode, cap_q_frac=capq, cap_kv_frac=capkv,
+        cache_dtype=jnp.float32, backend=backend)
+    ks = jax.random.split(key, 8)
+    p = AttnParams(
+        wq=jax.random.normal(ks[0], (dm, H * dh)) * 0.05,
+        wk=jax.random.normal(ks[1], (dm, H * dh)) * 0.05,
+        wv=jax.random.normal(ks[2], (dm, H * dh)) * 0.05,
+        wo=jax.random.normal(ks[3], (H * dh, dm)) * 0.05,
+        q_scale=jnp.ones(dh), k_scale=jnp.ones(dh))
+    x = jax.random.normal(ks[4], (B, N, dm))
+    state = init_layer_state(B, H, N, dm, dh, cfg)
+    return cfg, p, x, state, H
+
+
+# ---------------------------------------------------------------------------
+# Backend resolution
+# ---------------------------------------------------------------------------
+
+def test_get_backend_routing():
+    assert isinstance(get_backend(EngineConfig(backend="xla")), XlaBackend)
+    pb = get_backend(EngineConfig(backend="pallas"))
+    assert isinstance(pb, PallasBackend)
+    assert pb.interpret == (jax.default_backend() != "tpu")
+    auto = get_backend(EngineConfig(backend="auto"))
+    expect = PallasBackend if jax.default_backend() == "tpu" else XlaBackend
+    assert isinstance(auto, expect)
+    with pytest.raises(ValueError):
+        get_backend(EngineConfig(backend="cuda"))
+
+
+# ---------------------------------------------------------------------------
+# Interpret-mode parity: plan-driven backends vs the dense oracle
+# ---------------------------------------------------------------------------
+
+def _plan_inputs(seed, b, h, t, blk, n, d):
+    """Random masks with ragged rows, a fully-cached head and a row live in
+    only ONE head (ragged head_cnt), plus at least one kv block per row."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    q = jax.random.normal(ks[0], (b, h, n, d))
+    k = jax.random.normal(ks[1], (b, h, n, d))
+    v = jax.random.normal(ks[2], (b, h, n, d))
+    o_reuse = jax.random.normal(ks[3], (b, h, n, d))
+    m_c = jax.random.bernoulli(ks[4], 0.6, (b, h, t))
+    m_c = m_c.at[:, 0, :].set(False)           # head 0: fully cached rows
+    m_c = m_c.at[:, 1, 0].set(True)            # row 0 live in one head only
+    m_s = jax.random.bernoulli(ks[5], 0.5, (b, h, t, t))
+    m_s = m_s.at[..., 0].set(True)             # ragged but never-empty rows
+    return q, k, v, o_reuse, m_c, m_s
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_attention_backends_match_oracle(seed):
+    b, h, t, blk, d = 2, 3, 8, 16, 32
+    n = t * blk
+    # pool == block_q == block_kv so compressed == kernel granularity.
+    cfg = EngineConfig(mask=MaskConfig(pool=blk, block_q=blk, block_kv=blk),
+                       cap_q_frac=1.0, cap_kv_frac=1.0)
+    q, k, v, o_reuse, m_c, m_s = _plan_inputs(seed, b, h, t, blk, n, d)
+    plan = build_dispatch_plan(m_c, m_s, cfg, n)
+    spec = cfg.caps(n)
+
+    want = masked_block_attention(q, k, v, m_c, m_s, o_reuse,
+                                  block_q=blk, block_kv=blk)
+    got_xla = XlaBackend().attention(q, k, v, o_reuse, plan, spec)
+    got_pls = PallasBackend(interpret=True).attention(q, k, v, o_reuse,
+                                                      plan, spec)
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_pls), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["bias", "o_cache"])
+@pytest.mark.parametrize("tau_kv", [0.0, 0.15])
+def test_dispatch_backend_parity(mode, tau_kv):
+    """Full dispatch step (GEMM-Q → attention → GEMM-O, compact-fused on
+    Pallas) agrees across backends in both cache modes."""
+    cfg_x, p, x, state, H = _engine_setup(mode, "xla", tau_kv=tau_kv)
+    cfg_p = dataclasses.replace(cfg_x, backend="pallas", interpret=True)
+    _, st = update_layer(p, x, state, cfg_x, n_text=64, heads=H)
+    x2 = x + 0.01 * jax.random.normal(jax.random.PRNGKey(5), x.shape)
+    out_x, st_x = dispatch_layer(p, x2, st, cfg_x, n_text=64, heads=H)
+    out_p, st_p = dispatch_layer(p, x2, st, cfg_p, n_text=64, heads=H)
+    np.testing.assert_allclose(np.asarray(out_x), np.asarray(out_p),
+                               atol=1e-5, rtol=1e-5)
+    assert int(st_x.k_since) == int(st_p.k_since) == 1
+
+
+@pytest.mark.parametrize("mode", ["bias", "o_cache"])
+def test_dispatch_backend_parity_with_rope(mode):
+    """Compact-layout RoPE uses the ORIGINAL token positions of gathered
+    rows — parity must survive capacity-truncated (capq<1) gathers."""
+    from repro.core.engine import rope_freqs
+    cfg_x, p, x, state, H = _engine_setup(mode, "xla", tau_kv=0.1, capq=0.75)
+    cfg_p = dataclasses.replace(cfg_x, backend="pallas", interpret=True)
+    freqs = rope_freqs(x.shape[1], 32)
+    _, st = update_layer(p, x, state, cfg_x, n_text=64, heads=H, freqs=freqs)
+    out_x, _ = dispatch_layer(p, x, st, cfg_x, n_text=64, heads=H, freqs=freqs)
+    out_p, _ = dispatch_layer(p, x, st, cfg_p, n_text=64, heads=H, freqs=freqs)
+    np.testing.assert_allclose(np.asarray(out_x), np.asarray(out_p),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gemm_o_backends_with_padded_row_slots():
+    """row_cnt < cap ⇒ padding slots duplicate the last live row id.  Their
+    head lists must be EMPTY in the plan (bias-aliased Pallas GEMM-O would
+    otherwise re-accumulate that row once per padded slot on real TPU) and
+    both backends must still match the dense oracle."""
+    b, h, t, blk, dh, dm = 2, 3, 8, 16, 32, 48
+    n = t * blk
+    cfg = EngineConfig(mask=MaskConfig(pool=blk, block_q=blk, block_kv=blk),
+                       cap_q_frac=1.0, cap_kv_frac=1.0)
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    m_c = jax.random.bernoulli(ks[0], 0.6, (b, h, t))
+    m_c = m_c.at[:, :, 5:].set(False)          # rows 5..7 dead in ALL heads
+    m_c = m_c.at[:, 0, 0].set(True)
+    m_s = jnp.ones((b, h, t, t), bool)
+    plan = build_dispatch_plan(m_c, m_s, cfg, n)
+    cap = plan.row_ids.shape[-1]
+    assert cap == t and int(plan.row_cnt.max()) < cap   # padding slots exist
+    slot = np.arange(cap)[None, :]
+    padded = slot >= np.asarray(plan.row_cnt)[:, None]
+    assert (np.asarray(plan.head_cnt)[padded] == 0).all()
+    assert not np.asarray(plan.head_mask)[padded].any()
+
+    o_tok = jax.random.normal(ks[1], (b, n, h, dh))
+    w = jax.random.normal(ks[2], (h, dh, dm))
+    bias = jax.random.normal(ks[3], (b, n, dm))
+    got_x = XlaBackend().gemm_o(o_tok, w, plan, bias, block=blk)
+    got_p = PallasBackend(interpret=True).gemm_o(o_tok, w, plan, bias,
+                                                 block=blk)
+    m_tok = jnp.repeat(plan.m_ch, blk, axis=-2)[..., :n, :]
+    want = jnp.einsum("bnhd,hdf->bnf",
+                      jnp.where(m_tok[..., None], o_tok, 0), w) + bias
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Plan lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_plan_reuse_invariance(backend):
+    """N consecutive dispatches with the FROZEN plan produce outputs
+    identical to rebuilding the plan from the packed symbols every step
+    (the seed implementation's behaviour)."""
+    kw = dict(interpret=True) if backend == "pallas" else {}
+    cfg, p, x, state, H = _engine_setup("bias", backend, tau_kv=0.1,
+                                        capq=0.75, capkv=0.9, batch=1)
+    cfg = dataclasses.replace(cfg, **kw)
+    _, st = update_layer(p, x, state, cfg, n_text=64, heads=H)
+    st_frozen, st_rebuild = st, st
+    for k in range(1, 4):
+        x = x + 0.01 * jax.random.normal(jax.random.PRNGKey(k), x.shape)
+        out_f, st_frozen = dispatch_layer(p, x, st_frozen, cfg,
+                                          n_text=64, heads=H)
+        rebuilt = plan_from_state(st_rebuild, cfg, x.shape[1])
+        out_r, st_rebuild = dispatch_layer(p, x, st_rebuild, cfg,
+                                           n_text=64, heads=H, plan=rebuilt)
+        np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_r))
+
+
+def test_update_refreshes_plan():
+    cfg, p, x, state, H = _engine_setup("bias", "xla", tau_kv=0.1)
+    _, s1 = update_layer(p, x, state, cfg, n_text=64, heads=H)
+    _, s2 = dispatch_layer(p, x, s1, cfg, n_text=64, heads=H)
+    # Dispatch carries the plan through untouched...
+    for a, b in zip(jax.tree.leaves(s1.plan), jax.tree.leaves(s2.plan)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # ...and a new Update with different input rebuilds it.
+    x2 = x + jax.random.normal(jax.random.PRNGKey(9), x.shape)
+    _, s3 = update_layer(p, x2, s2, cfg, n_text=64, heads=H)
+    same = all(bool((np.asarray(a) == np.asarray(b)).all())
+               for a, b in zip(jax.tree.leaves(s1.plan),
+                               jax.tree.leaves(s3.plan)))
+    assert not same
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_dispatch_jaxpr_has_no_index_decode(backend):
+    """Acceptance criterion: a Dispatch step given a DispatchPlan performs
+    no ``unpack_bits``/``clamp_mask_topk``/``active_indices`` work — its
+    jaxpr contains no sort/top-k primitives (they all live in Update)."""
+    kw = dict(interpret=True) if backend == "pallas" else {}
+    cfg, p, x, state, H = _engine_setup("bias", backend, tau_kv=0.15,
+                                        capq=0.75, capkv=0.9, batch=1)
+    cfg = dataclasses.replace(cfg, **kw)
+    _, st = update_layer(p, x, state, cfg, n_text=64, heads=H)
+
+    disp = str(jax.make_jaxpr(
+        lambda xx, ss: dispatch_layer(p, xx, ss, cfg, n_text=64, heads=H)
+    )(x, st))
+    for prim in (" sort", "top_k"):
+        assert prim not in disp, f"dispatch jaxpr rebuilds indices ({prim})"
+
+    # Control: the Update step is where the index decode now lives.
+    upd = str(jax.make_jaxpr(
+        lambda xx, ss: update_layer(p, xx, ss, cfg, n_text=64, heads=H)
+    )(x, st))
+    assert " sort" in upd and "top_k" in upd

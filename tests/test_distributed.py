@@ -104,7 +104,11 @@ _SUBPROC_COLLECTIVE = textwrap.dedent("""
 def test_collective_matmul_subprocess():
     r = subprocess.run([sys.executable, "-c", _SUBPROC_COLLECTIVE],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            # Host-device simulation: force the CPU
+                            # platform so a baked-in libtpu cannot
+                            # hang TPU discovery in the clean env.
+                            "JAX_PLATFORMS": "cpu"})
     assert "COLLECTIVE_OK" in r.stdout, r.stdout + r.stderr
 
 
@@ -131,5 +135,9 @@ _SUBPROC_ELASTIC = textwrap.dedent("""
 def test_elastic_reshard_subprocess():
     r = subprocess.run([sys.executable, "-c", _SUBPROC_ELASTIC],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            # Host-device simulation: force the CPU
+                            # platform so a baked-in libtpu cannot
+                            # hang TPU discovery in the clean env.
+                            "JAX_PLATFORMS": "cpu"})
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
