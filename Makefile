@@ -1,12 +1,14 @@
 # FlashOmni reproduction — one-liner entry points.
 #
-#   make test    tier-1 test suite (ROADMAP verify command)
-#   make smoke   fast benchmark smoke (dispatch-plan amortization + micro rows)
-#   make bench   full paper-figure benchmark suite
+#   make test              tier-1 test suite (ROADMAP verify command)
+#   make smoke             fast benchmark smoke (dispatch-plan amortization + micro rows)
+#   make bench             full paper-figure benchmark suite
+#   make bench-strategies  sweep the strategy registry: density / pair-sparsity
+#                          / fidelity table per registered symbol producer
 
 PY ?= python
 
-.PHONY: test smoke bench
+.PHONY: test smoke bench bench-strategies
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -16,3 +18,6 @@ smoke:
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
+
+bench-strategies:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only "strategy registry"

@@ -17,11 +17,13 @@ from repro.diffusion.pipeline import SamplerConfig, sample
 from repro.models import dit
 
 
-def _ecfg(interval, order):
+def _ecfg(interval, order, strategy="flashomni"):
+    """Registry-named engine config (the ablation sweeps 𝒩/𝒟 over the
+    paper's own ``flashomni`` symbol producer)."""
     return EngineConfig(mask=MaskConfig(
         tau_q=0.5, tau_kv=0.15, interval=interval, order=order, degrade=0.0,
         block_q=16, block_kv=16, pool=32, warmup_steps=2),
-        cache_dtype=jnp.float32)
+        strategy=strategy, cache_dtype=jnp.float32)
 
 
 def run(csv: list, *, steps: int = 14, nv: int = 96):

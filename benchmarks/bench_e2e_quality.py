@@ -33,6 +33,8 @@ def run(csv: list, *, steps: int = 10, nv: int = 96):
                    force_dense=True)
 
     for name, ecfg in strategy_configs().items():
+        # Each baseline is a registry-named symbol producer behind the
+        # same engine (ecfg.strategy), not a threshold simulation.
         trace: list = []
         out = sample(params, cfg, ecfg, text_emb=text, x0=x0, scfg=scfg,
                      trace=trace)
@@ -47,6 +49,7 @@ def run(csv: list, *, steps: int = 10, nv: int = 96):
         csv.append({
             "name": f"table12_{name}",
             "us_per_call": 0.0,
-            "derived": (f"psnr={psnr(out, dense):.2f} rel_l2={rel:.4f}"
+            "derived": (f"strategy={ecfg.strategy}"
+                        f" psnr={psnr(out, dense):.2f} rel_l2={rel:.4f}"
                         f" sparsity={sparsity:.3f} density={mean_density:.3f}"),
         })

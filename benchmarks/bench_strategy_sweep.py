@@ -1,0 +1,62 @@
+"""Strategy-registry sweep: density / pair-sparsity / fidelity per producer.
+
+Runs EVERY registered :mod:`repro.core.strategy` entry through the same
+reduced MMDiT sampling loop (one ``EngineConfig`` differing only in
+``strategy``) and reports the paper's efficiency accounting per strategy:
+mean dispatch density (Fig. 7), run-averaged pair sparsity (Table 1's
+Sparsity column) and relative L2 vs the dense oracle.  ``make
+bench-strategies`` runs exactly this table.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import psnr
+from repro.configs.registry import get_smoke
+from repro.core.engine import EngineConfig
+from repro.core.masks import MaskConfig
+from repro.core.strategy import available_strategies
+from repro.diffusion.pipeline import SamplerConfig, sample
+from repro.models import dit
+
+
+def run(csv: list, *, steps: int = 10, nv: int = 96, smoke: bool = False):
+    cfg = get_smoke("flux-mmdit")
+    params = dit.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(21)
+    x0 = jax.random.normal(key, (1, nv, cfg.patch_dim))
+    text = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, cfg.n_text_tokens, cfg.d_model))
+    if smoke:
+        steps = 6
+    scfg = SamplerConfig(num_steps=steps)
+
+    def ecfg(name):
+        return EngineConfig(
+            mask=MaskConfig(tau_q=0.5, tau_kv=0.15, interval=4, order=1,
+                            degrade=0.0, block_q=16, block_kv=16, pool=16,
+                            warmup_steps=2),
+            strategy=name, cache_dtype=jnp.float32,
+            cap_q_frac=1.0, cap_kv_frac=1.0)
+
+    dense = sample(params, cfg, ecfg("flashomni"), text_emb=text, x0=x0,
+                   scfg=scfg, force_dense=True)
+    for name in available_strategies():
+        trace: list = []
+        out = sample(params, cfg, ecfg(name), text_emb=text, x0=x0,
+                     scfg=scfg, trace=trace)
+        dens = [t["density"] for t in trace if t["kind"] == "dispatch"]
+        pair_s = [t["pair_sparsity"] for t in trace if t["kind"] == "dispatch"]
+        mean_density = float(np.mean(dens)) if dens else 1.0
+        sparsity = (len(pair_s) * float(np.mean(pair_s)) / steps
+                    if pair_s else 0.0)
+        rel = float(jnp.linalg.norm(out - dense) / jnp.linalg.norm(dense))
+        csv.append({
+            "name": f"registry_{name}",
+            "us_per_call": 0.0,
+            "derived": (f"density={mean_density:.3f} sparsity={sparsity:.3f}"
+                        f" psnr={psnr(out, dense):.2f} rel_l2={rel:.4f}"),
+        })

@@ -21,10 +21,11 @@ def _suites():
                             bench_density, bench_dispatch_plan,
                             bench_e2e_quality, bench_e2e_speedup,
                             bench_gemm_o_interval, bench_sparse_gemm,
-                            bench_warmup)
+                            bench_strategy_sweep, bench_warmup)
 
     return [
         ("issue1 dispatch-plan amortization", bench_dispatch_plan.run),
+        ("issue2 strategy registry sweep", bench_strategy_sweep.run),
         ("fig6/fig10 attention", bench_attention_sparsity.run),
         ("fig6/fig11 sparse GEMMs", bench_sparse_gemm.run),
         ("fig8/A.1.2 GEMM-O interval", bench_gemm_o_interval.run),

@@ -1,17 +1,20 @@
-"""Baseline sparsity strategies (paper §4.1 comparison set), all expressed
-through the SAME engine config space — the unification claim in practice:
+"""Baseline sparsity strategies (paper §4.1 comparison set), each a REAL
+symbol producer from the :mod:`repro.core.strategy` registry riding the
+same Update–Dispatch engine — the unification claim in practice:
 
-  FORA          — cache everything, plain reuse (𝒟=0), refresh every 𝒩
-  TaylorSeer    — cache everything, order-𝒟 forecast
-  ToCa-like     — token-importance caching (column-mass metric only)
-  SpargeAttn    — block-sparse skipping only (no caching)
-  DiTFastAttnV2 — static sliding-window S_s only
-  FlashOmni     — C∧G caching + BSS + sparse GEMMs (the paper's engine)
+  FORA            — ``cache-all``, plain reuse (𝒟=0), refresh every 𝒩
+  TaylorSeer      — ``cache-all``, order-𝒟 forecast
+  ToCa-like       — ``flashomni`` caching arm only (τ_kv=0, looser τ_q)
+  SpargeAttn-like — ``skip-only`` block-sparse skipping (no caching)
+  DiTFastAttnV2   — ``sliding-window`` static S_s band
+  FlashOmni       — ``flashomni``: C∧G caching + BSS + sparse GEMMs
+  MultiGranularity— per-head table striping flashomni/sliding-window
+
+Before ISSUE 2 these baselines were SIMULATED by twiddling ``MaskConfig``
+thresholds; now each row names its strategy in ``EngineConfig.strategy``.
 """
 
 from __future__ import annotations
-
-import dataclasses
 
 import jax.numpy as jnp
 
@@ -29,15 +32,18 @@ def strategy_configs(interval: int = 4, order: int = 1) -> dict[str, EngineConfi
     # capacity fracs 1.0: let each strategy's OWN selection rule set the
     # sparsity level (the static-capacity clamp is a deployment knob, not
     # part of the algorithm comparison).
-    mk = lambda **kw: EngineConfig(
-        mask=MaskConfig(**{**base, **kw}), cache_dtype=jnp.float32,
-        cap_q_frac=1.0, cap_kv_frac=1.0)
+    mk = lambda strategy, **kw: EngineConfig(
+        mask=MaskConfig(**{**base, **kw}), strategy=strategy,
+        cache_dtype=jnp.float32, cap_q_frac=1.0, cap_kv_frac=1.0)
     return {
-        # cache-everything family: tau_q=1 selects all blocks by mass rule
-        "FORA": mk(tau_q=1.0, tau_kv=0.0, order=0),
-        "TaylorSeer": mk(tau_q=1.0, tau_kv=0.0, order=order),
-        "ToCa-like": mk(tau_q=0.6, tau_kv=0.0, order=0),
-        "SpargeAttn-like": mk(tau_q=0.0, tau_kv=0.2, order=0),
-        "FlashOmni": mk(tau_q=0.5, tau_kv=0.15, order=order),
-        "FlashOmni-aggressive": mk(tau_q=0.7, tau_kv=0.25, order=order),
+        "FORA": mk("cache-all", order=0),
+        "TaylorSeer": mk("cache-all", order=order),
+        "ToCa-like": mk("flashomni", tau_q=0.6, tau_kv=0.0, order=0),
+        "SpargeAttn-like": mk("skip-only", tau_kv=0.2, order=0),
+        "DiTFastAttnV2-like": mk("sliding-window", tau_kv=0.0, order=0),
+        "FlashOmni": mk("flashomni", tau_q=0.5, tau_kv=0.15, order=order),
+        "FlashOmni-aggressive": mk("flashomni", tau_q=0.7, tau_kv=0.25,
+                                   order=order),
+        "MultiGranularity": mk("multi-granularity", tau_q=0.5, tau_kv=0.15,
+                               order=order),
     }

@@ -7,24 +7,39 @@ Runs on CPU in a few seconds:
   4. shows the packed symbols, realized sparsity, and fidelity vs dense;
   5. cross-checks the Pallas kernel (interpret mode) against the oracle.
 
-Usage:  PYTHONPATH=src python examples/quickstart.py
+Usage:  PYTHONPATH=src python examples/quickstart.py [--strategy NAME]
+
+``--strategy`` swaps the sparse-symbol producer (any registry name —
+``flashomni``, ``cache-all``, ``skip-only``, ``sliding-window``,
+``multi-granularity``, ``hunyuan-1.5x``) behind the SAME engine.
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (AttnParams, EngineConfig, MaskConfig, dispatch_layer,
+from repro.core import (AttnParams, EngineConfig, MaskConfig,
+                        available_strategies, dispatch_layer,
                         init_layer_state, update_layer)
+from repro.core.strategy import strategy_summaries
 from repro.core.symbols import unpack_bits
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="flashomni",
+                    choices=available_strategies(),
+                    help="sparse-symbol producer (see repro.core.strategy)")
+    args = ap.parse_args()
+    print(f"strategy: {args.strategy} — {strategy_summaries()[args.strategy]}")
+
     key = jax.random.PRNGKey(0)
     B, H, N, dm, dh, n_text = 1, 4, 512, 128, 32, 128
     cfg = EngineConfig(
         mask=MaskConfig(tau_q=0.5, tau_kv=0.05, interval=5, order=1,
                         block_q=32, block_kv=32, pool=64, warmup_steps=1),
-        cache_dtype=jnp.float32)
+        strategy=args.strategy, cache_dtype=jnp.float32)
     ks = jax.random.split(key, 6)
     params = AttnParams(
         wq=jax.random.normal(ks[0], (dm, H * dh)) * dm ** -0.5,

@@ -16,6 +16,14 @@ from repro.core.engine import (
 from repro.core.attention import SparseAttentionSpec
 from repro.core.backend import get_backend
 from repro.core.plan import DispatchPlan, build_dispatch_plan
+from repro.core.strategy import (
+    SparsityStrategy,
+    StrategyContext,
+    SymbolSet,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
 
 __all__ = [
     "MaskConfig",
@@ -24,6 +32,9 @@ __all__ = [
     "LayerState",
     "DispatchPlan",
     "SparseAttentionSpec",
+    "SparsityStrategy",
+    "StrategyContext",
+    "SymbolSet",
     "init_layer_state",
     "is_update_step",
     "update_layer",
@@ -31,4 +42,7 @@ __all__ = [
     "plan_from_state",
     "build_dispatch_plan",
     "get_backend",
+    "get_strategy",
+    "register_strategy",
+    "available_strategies",
 ]

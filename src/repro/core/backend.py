@@ -48,6 +48,7 @@ class XlaBackend:
     def gemm_q(self, x: jax.Array, w: jax.Array, plan: DispatchPlan, *,
                block: int) -> jax.Array:
         """(B, N, d_in) @ (d_in, F) -> (B, N, F), zeros on cached rows."""
+        plan = plan.widen()
         return sparse_gemm.gemm_q_from_plan(
             x, w, plan.row_ids, plan.row_cnt, block=block)
 
@@ -55,6 +56,7 @@ class XlaBackend:
                   spec: SparseAttentionSpec, *, scale: Optional[float] = None,
                   compact_q: bool = False) -> jax.Array:
         """q (B,H,N_q,dh) [compact when ``compact_q``], k/v/o_reuse full."""
+        plan = plan.widen()
         return sparse_attention_from_plan(
             q, k, v, o_reuse, plan.q_ids, plan.q_cnt, plan.kv_ids,
             plan.kv_cnt, plan.pair_live, spec, scale=scale,
@@ -63,6 +65,7 @@ class XlaBackend:
     def gemm_o(self, o_tok, w, plan: DispatchPlan, bias: jax.Array, *,
                block: int) -> jax.Array:
         """o_tok (B,N,H,dh), w (H,dh,F), bias (B,N,F) -> (B,N,F)."""
+        plan = plan.widen()
         return sparse_gemm.gemm_o_from_plan(
             o_tok, w, plan.head_mask, plan.row_ids, plan.row_cnt, bias,
             block=block)
@@ -82,6 +85,7 @@ class PallasBackend:
     def gemm_q(self, x: jax.Array, w: jax.Array, plan: DispatchPlan, *,
                block: int) -> jax.Array:
         """COMPACT (B, Cr·block, F) projection of the live row blocks."""
+        plan = plan.widen()
         from repro.kernels.gemm_q import gemm_q_sparse_kernel
         outs = [
             gemm_q_sparse_kernel(x[b], w, plan.row_ids[b], block_rows=block,
@@ -93,6 +97,7 @@ class PallasBackend:
     def attention(self, q, k, v, o_reuse, plan: DispatchPlan,
                   spec: SparseAttentionSpec, *, scale: Optional[float] = None,
                   compact_q: bool = False) -> jax.Array:
+        plan = plan.widen()   # Pallas index maps require int32 scalar ids
         from repro.kernels.flashomni_attention import flashomni_attention_csr
         b, h, n_q, dh = q.shape
         n = o_reuse.shape[-2]
@@ -112,6 +117,7 @@ class PallasBackend:
 
     def gemm_o(self, o_tok, w, plan: DispatchPlan, bias: jax.Array, *,
                block: int) -> jax.Array:
+        plan = plan.widen()
         from repro.kernels.gemm_o import gemm_o_sparse_kernel
         outs = [
             gemm_o_sparse_kernel(

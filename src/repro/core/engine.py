@@ -24,12 +24,20 @@ kernel-block granularity on use.
 
 Update→plan→Dispatch dataflow (compile-once DispatchPlan):
 
-    update_layer ──► refresh_symbols ──► S_c, S_s        (packed uint8)
-                         │
+    update_layer ──► strategy.emit(q, k, ctx) ──► SymbolSet (S_c, S_s,
+                         │                         masks, clamp scores)
                          └─► build_dispatch_plan ──► DispatchPlan
                                (ALL unpack / expand / top-k / argsort
                                 index work happens HERE, once per 𝒩 steps)
                          LayerState = (S_c, S_s, taylor, k_since, plan)
+
+The symbol producer is pluggable (``EngineConfig.strategy`` — a
+:mod:`repro.core.strategy` registry name, resolved once at trace time):
+the paper's §3.3 rule is the ``"flashomni"`` strategy; ``"cache-all"``
+(FORA/TaylorSeer), ``"skip-only"`` (SpargeAttn), ``"sliding-window"``
+(DiTFastAttnV2) and ``"multi-granularity"`` tables ride the same engine
+and kernels unchanged.  :func:`refresh_symbols` keeps the seed §3.3 body
+verbatim as the bit-parity oracle for the ``flashomni`` strategy.
 
     dispatch_layer ──► get_backend(cfg) ──► backend.{gemm_q, attention,
                                                       gemm_o}(…, plan)
@@ -58,6 +66,7 @@ from repro.core.attention import SparseAttentionSpec, dense_attention
 from repro.core.backend import get_backend
 from repro.core.masks import MaskConfig
 from repro.core.plan import DispatchPlan, build_dispatch_plan, empty_plan_like
+from repro.core.strategy import SparsityStrategy, StrategyContext, get_strategy
 from repro.core.symbols import (
     capacity_for,
     clamp_mask_topk,
@@ -76,6 +85,7 @@ __all__ = [
     "update_layer",
     "dispatch_layer",
     "plan_from_state",
+    "refresh_symbols",
     "rms_norm",
     "apply_rope",
 ]
@@ -94,6 +104,7 @@ class EngineConfig:
     cache_dtype: jnp.dtype = jnp.bfloat16
     backend: str = "xla"              # "xla" | "pallas" | "auto"
     interpret: Optional[bool] = None  # Pallas interpret mode (None: off-TPU)
+    strategy: str = "flashomni"       # sparse-symbol producer (registry name)
 
     # Capacity bookkeeping.  The single source of truth is the COMPRESSED
     # granularity capacity (symbols live there); block-granularity caps are
@@ -205,10 +216,13 @@ def _qk(params: AttnParams, x: jax.Array, heads: int, freqs: Optional[jax.Array]
 
 def refresh_symbols(q: jax.Array, k: jax.Array, cfg: EngineConfig, n_text: int,
                     n_tokens: int) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Generate and pack fresh symbols from Update-step Q/K.
+    """LEGACY seed §3.3 rule, kept verbatim as the bit-parity oracle.
 
-    Returns ``(s_c, s_s, m_c, m_s)`` — packed uint8 symbols plus the
-    unpacked compressed-granularity masks (True = compute).
+    ``update_layer`` now calls the pluggable strategy resolved from
+    ``cfg.strategy`` instead; ``tests/test_strategy.py`` asserts the
+    ``"flashomni"`` strategy reproduces this function's packed symbols
+    bit-for-bit.  Returns ``(s_c, s_s, m_c, m_s)`` — packed uint8 symbols
+    plus the unpacked compressed-granularity masks (True = compute).
     """
     m = cfg.mask
     m_c = masklib.make_caching_mask(q, k, m, n_text)
@@ -238,9 +252,12 @@ def plan_from_state(state: LayerState, cfg: EngineConfig,
                     n_tokens: int) -> DispatchPlan:
     """Legacy rebuild path: re-derive the DispatchPlan from the packed
     symbols (what every Dispatch step used to do).  Kept for the
-    plan-reuse invariance tests and the amortization benchmark."""
+    plan-reuse invariance tests and the amortization benchmark.  The
+    stored ``row_score`` re-ranks the row-capacity truncation so the
+    rebuilt plan matches the frozen one exactly."""
     m_c, m_s = _unpack(state, cfg, n_tokens)
-    return build_dispatch_plan(m_c, m_s, cfg, n_tokens)
+    return build_dispatch_plan(m_c, m_s, cfg, n_tokens,
+                               row_score=state.plan.row_score)
 
 
 # ---------------------------------------------------------------------------
@@ -256,13 +273,25 @@ def update_layer(
     n_text: int = 0,
     heads: int,
     freqs: Optional[jax.Array] = None,
+    strategy: Optional[str | SparsityStrategy] = None,
+    layer_idx: Optional[int] = None,
 ) -> tuple[jax.Array, LayerState]:
-    """Full attention + symbol/cache refresh (paper *Update* phase)."""
+    """Full attention + symbol/cache refresh (paper *Update* phase).
+
+    The sparse-symbol producer is resolved ONCE here (Python/trace time)
+    from ``cfg.strategy``; ``strategy`` overrides it per call (the models
+    thread per-layer tables through this), and ``layer_idx`` reaches the
+    strategy's :class:`~repro.core.strategy.StrategyContext` when the
+    model unrolls layers (``None`` under ``lax.scan``).
+    """
     b, n, dm = x.shape
+    strat = get_strategy(cfg.strategy if strategy is None else strategy)
     q, k = _qk(params, x, heads, freqs)
     v = _project_heads(x, params.wv, heads)
     o = dense_attention(q, k, v)                               # (B,H,N,dh)
-    s_c, s_s, m_c, m_s = refresh_symbols(q, k, cfg, n_text, n)
+    syms = strat.emit(q, k, StrategyContext(
+        cfg=cfg, n_text=n_text, n_tokens=n, layer_idx=layer_idx))
+    s_c, s_s, m_c, m_s = syms.s_c, syms.s_s, syms.m_c, syms.m_s
 
     o_tok = o.transpose(0, 2, 1, 3)                            # (B,N,H,dh)
     dh = o_tok.shape[-1]
@@ -276,8 +305,12 @@ def update_layer(
     else:
         taylor = taylorseer.update(state.taylor, o.astype(cfg.cache_dtype))
     # Compile-once index plan: ALL index decoding for the coming Dispatch
-    # steps happens here, amortized over the next interval−1 steps.
-    plan = build_dispatch_plan(m_c, m_s, cfg, n)
+    # steps happens here, amortized over the next interval−1 steps.  Rows
+    # are ranked for the capacity truncation by the strategy's clamp
+    # scores (column mass), summed over the heads where the row is live.
+    row_score = jnp.sum(
+        jnp.where(m_c, syms.q_scores.astype(jnp.float32), 0.0), axis=-2)
+    plan = build_dispatch_plan(m_c, m_s, cfg, n, row_score=row_score)
     new_state = LayerState(s_c=s_c, s_s=s_s, taylor=taylor,
                            k_since=jnp.zeros((), jnp.int32), plan=plan)
     return out, new_state
@@ -305,7 +338,8 @@ def dispatch_layer(
     """
     b, n, dm = x.shape
     m = cfg.mask
-    plan = state.plan if plan is None else plan
+    plan_stored = state.plan if plan is None else plan
+    plan = plan_stored.widen()    # int16 id fields -> int32 for kernels/RoPE
     backend = get_backend(cfg)
     k_since = state.k_since + 1
     spec_c = cfg.caps(n)                                        # block granularity caps
@@ -357,5 +391,5 @@ def dispatch_layer(
     else:
         out = jnp.einsum("bnhd,hdf->bnf", o_tok, wo_h)
     new_state = LayerState(s_c=state.s_c, s_s=state.s_s, taylor=state.taylor,
-                           k_since=k_since, plan=plan)
+                           k_since=k_since, plan=plan_stored)
     return out, new_state

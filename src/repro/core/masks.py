@@ -172,16 +172,18 @@ def make_skip_mask(
     skipped = select_by_cummass(p_map, tau)               # rowwise over KV axis
     compute = ~skipped
     t = p_map.shape[-1]
+    if static_window is not None:
+        idx = jnp.arange(t)
+        win = jnp.abs(idx[:, None] - idx[None, :]) < static_window
+        compute = compute & win
+    # Text protection LAST so a static window can never narrow it (same
+    # semantics as strategy.SlidingWindowStrategy's band).
     if cfg.protect_text and n_text_tokens:
         n_t = -(-n_text_tokens // cfg.pool)
         idx = jnp.arange(t)
         is_text_row = (idx < n_t)[:, None]
         is_text_col = (idx < n_t)[None, :]
         compute = compute | is_text_row | is_text_col     # only v↔v may skip
-    if static_window is not None:
-        idx = jnp.arange(t)
-        win = jnp.abs(idx[:, None] - idx[None, :]) < static_window
-        compute = compute & win
     return compute
 
 

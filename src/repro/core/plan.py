@@ -34,18 +34,31 @@ kernels) consumes it verbatim:
 All shapes are static functions of ``(EngineConfig, n_tokens, heads)``, so
 a Dispatch step's jaxpr contains no sort/top-k/unpack work at all — see
 the jaxpr-inspection test in ``tests/test_backend.py``.
+
+Row-capacity truncation ranks by COLUMN MASS: ``row_score`` (the per-row
+attention mass the strategy's capacity clamp used, summed over live heads)
+decides which live rows survive when ``cap_q_frac`` truncates — the
+lowest-mass rows degrade to cache-reuse first.  The score is carried in
+the plan so the legacy rebuild path (:func:`~repro.core.engine.
+plan_from_state`) reproduces the exact same truncation.
+
+Plan memory (HunyuanVideo 33K-token scale): the two O(H·Cq·Ckv)-ish index
+fields — ``kv_row_ids`` and ``row_ids`` — are stored as int16 whenever
+every block index fits in 15 bits (33K tokens / 64-token blocks = 516
+blocks, far under 2¹⁵) and widened to int32 on use via :meth:`DispatchPlan.
+widen`, halving the dominant plan buffers.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import masks as masklib
 from repro.core.attention import attention_plan_indices
-from repro.core.symbols import active_indices, slot_positions
+from repro.core.symbols import active_indices, clamp_mask_topk, slot_positions
 
 __all__ = ["DispatchPlan", "build_dispatch_plan", "empty_plan_like"]
 
@@ -60,24 +73,46 @@ class DispatchPlan(NamedTuple):
     kv_ids: jax.Array      # (B, H, Ck) int32 KV-union ids (XLA path)
     kv_cnt: jax.Array      # (B, H)     int32
     pair_live: jax.Array   # (B, H, Cq, Ck) bool exact (i,j) mask in the union
-    kv_row_ids: jax.Array  # (B, H, Cq, Ck) int32 per-row CSR (Pallas path)
+    kv_row_ids: jax.Array  # (B, H, Cq, Ck) int16/int32 per-row CSR (Pallas)
     kv_row_cnt: jax.Array  # (B, H, Cq) int32
     # --- GEMM-Q / GEMM-O, pool granularity, per B ---
-    row_ids: jax.Array     # (B, Cr) int32 row blocks live in any head
+    row_ids: jax.Array     # (B, Cr) int16/int32 row blocks live in any head
     row_cnt: jax.Array     # (B,)    int32
     head_ids: jax.Array    # (B, Cr, H) int32 live heads per live row (CSR)
     head_cnt: jax.Array    # (B, Cr) int32
     head_mask: jax.Array   # (B, Cr, H) bool gathered (row, head) mask
     m_ch: jax.Array        # (B, T, H) bool compressed compute mask
+    row_score: jax.Array   # (B, T) f32 column-mass row ranking (truncation)
+
+    def widen(self) -> "DispatchPlan":
+        """Return a plan with the compact int16 id fields widened to int32.
+
+        Called once at Dispatch entry (and idempotent): kernels, gathers
+        and position arithmetic (RoPE ``row_ids · pool + offset`` can exceed
+        int16 at 33K tokens) always see int32 ids, while the stored plan
+        keeps the narrow dtype.
+        """
+        if self.kv_row_ids.dtype == jnp.int32 and self.row_ids.dtype == jnp.int32:
+            return self
+        return self._replace(kv_row_ids=self.kv_row_ids.astype(jnp.int32),
+                             row_ids=self.row_ids.astype(jnp.int32))
 
 
-def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg,
-                        n_tokens: int) -> DispatchPlan:
+def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
+                        row_score: Optional[jax.Array] = None,
+                        compact_ids: bool = True) -> DispatchPlan:
     """Derive the full index plan from fresh compressed-granularity masks.
 
     ``m_c``: (B, H, T) bool, ``m_s``: (B, H, T, T) bool — True = compute,
-    as produced by :func:`repro.core.engine.refresh_symbols`.  Runs ONCE
-    per Update step; every sort/top-k in the engine lives here.
+    as produced by a :class:`~repro.core.strategy.SparsityStrategy`.  Runs
+    ONCE per Update step; every sort/top-k in the engine lives here.
+
+    ``row_score`` (B, T) ranks rows for the capacity truncation (column
+    mass from the strategy's ``q_scores``); when ``None`` it falls back to
+    the mask-derived live-pair mass (the rebuild path reads the stored
+    score instead, so frozen vs rebuilt plans stay identical).
+    ``compact_ids=False`` disables the int16 id compaction (round-trip
+    reference in tests).
     """
     m = cfg.mask
     spec = cfg.caps(n_tokens)
@@ -94,6 +129,17 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg,
     # across backends; the seed XLA path silently attended with q = 0).
     cap_rows = cfg.cap_q_cmp(n_tokens)
     row_live = jnp.any(m_c, axis=-2)                               # (B, T)
+    if row_score is None:
+        # Mask-derived column-mass proxy: live (head, kv-block) pairs per
+        # row — rows doing the least live work are dropped first.
+        row_score = jnp.sum(
+            jnp.where(m_c, jnp.sum(m_s, axis=-1).astype(jnp.float32), 0.0),
+            axis=-2)
+    row_score = row_score.astype(jnp.float32)
+    # Ranked truncation (ROADMAP item): keep the top-`cap` rows by column
+    # mass, not the first `cap` in index order; `active_indices` then
+    # restores ascending id order for DMA-friendly gathers.
+    row_live = clamp_mask_topk(row_live, row_score, cap_rows)
     row_ids, row_cnt = active_indices(row_live, cap_rows)
     slot = jnp.arange(cap_rows, dtype=jnp.int32)
     sid = jnp.where(slot < row_cnt[..., None], row_ids, t_cmp)
@@ -138,13 +184,19 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg,
         q_ids // factor, axis=-1)
     q_slots = slot_of * factor + q_ids % factor
 
+    # Plan-memory compaction: the two dominant buffers store block ids that
+    # fit in 15 bits at any realistic scale; widen()ed to int32 on use.
+    if compact_ids and max(t_cmp, t_q, t_kv) < 2 ** 15:
+        kv_row_ids = kv_row_ids.astype(jnp.int16)
+        row_ids = row_ids.astype(jnp.int16)
+
     return DispatchPlan(
         q_ids=q_ids, q_cnt=q_cnt, q_slots=q_slots,
         kv_ids=kv_ids, kv_cnt=kv_cnt, pair_live=pair_live,
         kv_row_ids=kv_row_ids, kv_row_cnt=kv_row_cnt,
         row_ids=row_ids, row_cnt=row_cnt,
         head_ids=head_ids, head_cnt=head_cnt, head_mask=head_mask,
-        m_ch=m_ch,
+        m_ch=m_ch, row_score=row_score,
     )
 
 

@@ -1,0 +1,410 @@
+"""Pluggable sparsity strategies — first-class sparse-symbol producers.
+
+FlashOmni's central claim (paper §3.3) is that *flexible sparse symbols
+standardize the representation of a wide range of sparsity strategies*:
+anything that can emit a caching symbol ``S_c`` and a skipping symbol
+``S_s`` rides the same Update–Dispatch engine, DispatchPlan and kernels
+unchanged.  This module makes the producer side a real API:
+
+  * :class:`SparsityStrategy` — the protocol.  ``emit(q, k, ctx)`` maps the
+    Update-step Q/K (plus a :class:`StrategyContext`) to a
+    :class:`SymbolSet`: packed ``s_c``/``s_s``, the post-clamp boolean
+    masks, and the ranking scores the static-capacity clamp used (the
+    engine reuses them to rank the plan's row-capacity truncation).
+  * a string-keyed registry (:func:`register_strategy`,
+    :func:`get_strategy`, :func:`available_strategies`) resolved once at
+    ``update_layer`` trace time from ``EngineConfig.strategy``.
+
+Built-in strategies and the papers/baselines they reproduce:
+
+  ``flashomni``        — the paper's §3.3 rule (C∧G caching + cummass BSS),
+                         extracted VERBATIM from the seed
+                         ``engine.refresh_symbols`` (bit-identical symbols).
+  ``cache-all``        — FORA / TaylorSeer family: every vision block is
+                         cached and forecast; text rows refresh (Obs. 1).
+  ``skip-only``        — SpargeAttn-style: no caching, per-row cumulative-
+                         mass block skipping only.
+  ``sliding-window``   — DiTFastAttnV2-style static ``S_s`` band.
+  ``multi-granularity``— per-layer / per-head table of child strategies
+                         (Sparse VideoGen's spatial/temporal head classes,
+                         Sparse-vDiT's per-head fixed patterns).
+  ``hunyuan-1.5x``     — the paper's HunyuanVideo 1.5× configuration shape
+                         expressed as a multi-granularity table.
+
+All strategies are pure ``jnp`` and jit-safe; the clamp + packing step is
+shared (:func:`finalize_symbols`) so every producer honours the TPU
+static-capacity adaptation identically.
+"""
+
+from __future__ import annotations
+
+from typing import (Any, Callable, Mapping, NamedTuple, Optional, Protocol,
+                    Sequence, Union, runtime_checkable)
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masklib
+from repro.core.symbols import clamp_mask_topk, pack_bits
+
+__all__ = [
+    "StrategyContext",
+    "SymbolSet",
+    "SparsityStrategy",
+    "finalize_symbols",
+    "register_strategy",
+    "get_strategy",
+    "available_strategies",
+    "strategy_summaries",
+    "FlashOmniStrategy",
+    "CacheAllStrategy",
+    "SkipOnlyStrategy",
+    "SlidingWindowStrategy",
+    "MultiGranularityStrategy",
+]
+
+
+class StrategyContext(NamedTuple):
+    """Static per-call context handed to ``emit`` (part of the jit closure).
+
+    ``cfg`` is the :class:`~repro.core.engine.EngineConfig`; ``layer_idx``
+    is the Python-level layer index when the model unrolls layers (per-layer
+    strategy tables), ``None`` under ``lax.scan``.
+    """
+
+    cfg: Any
+    n_text: int
+    n_tokens: int
+    layer_idx: Optional[int] = None
+
+
+class SymbolSet(NamedTuple):
+    """What a strategy emits: packed symbols + masks + clamp-ranking scores.
+
+    ``s_c``/``s_s`` are the packed uint8 symbols (paper Fig. 5);
+    ``m_c`` (B, H, T) / ``m_s`` (B, H, T, T) the post-clamp boolean masks
+    (True = compute); ``q_scores`` (B, H, T) / ``kv_scores`` (B, H, T, T)
+    the ranking the static-capacity clamp used — the engine reuses
+    ``q_scores`` as the column-mass ranking for the DispatchPlan's
+    row-capacity truncation.
+    """
+
+    s_c: jax.Array
+    s_s: jax.Array
+    m_c: jax.Array
+    m_s: jax.Array
+    q_scores: jax.Array
+    kv_scores: jax.Array
+
+
+@runtime_checkable
+class SparsityStrategy(Protocol):
+    """Anything that can produce packed sparse symbols from Update Q/K."""
+
+    name: str
+
+    def emit(self, q: jax.Array, k: jax.Array,
+             ctx: StrategyContext) -> SymbolSet: ...
+
+
+def finalize_symbols(m_c: jax.Array, m_s: jax.Array, q_scores: jax.Array,
+                     kv_scores: jax.Array, ctx: StrategyContext) -> SymbolSet:
+    """Shared clamp + packing tail of every strategy.
+
+    Applies the TPU static-capacity clamps (DESIGN §2.5) ranked by the
+    strategy-provided scores, then packs to uint8 symbols — the exact
+    op order of the seed ``refresh_symbols`` so ``flashomni`` stays
+    bit-identical.
+    """
+    cfg = ctx.cfg
+    m_c = clamp_mask_topk(m_c, q_scores, cfg.cap_q_cmp(ctx.n_tokens))
+    m_s = clamp_mask_topk(m_s, kv_scores, cfg.cap_kv_cmp(ctx.n_tokens))
+    s_c = pack_bits(m_c)
+    s_s = pack_bits(m_s.reshape(*m_s.shape[:-2], -1))
+    return SymbolSet(s_c=s_c, s_s=s_s, m_c=m_c, m_s=m_s,
+                     q_scores=q_scores, kv_scores=kv_scores)
+
+
+def _full(q: jax.Array, t: int, value: bool = True) -> jax.Array:
+    """(B, H, T) constant mask matching q's batch/head dims."""
+    b, h = q.shape[0], q.shape[1]
+    return jnp.full((b, h, t), value, jnp.bool_)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], "SparsityStrategy"]] = {}
+_SUMMARIES: dict[str, str] = {}
+
+
+def register_strategy(name: str, factory: Callable[[], "SparsityStrategy"],
+                      summary: str = "") -> None:
+    """Register a zero-arg factory under ``name`` (EngineConfig.strategy)."""
+    _REGISTRY[name] = factory
+    _SUMMARIES[name] = summary
+
+
+def available_strategies() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def strategy_summaries() -> dict[str, str]:
+    """name -> one-line description (docs / --help / ROADMAP table)."""
+    return dict(_SUMMARIES)
+
+
+def get_strategy(spec: Union[str, "SparsityStrategy"]) -> "SparsityStrategy":
+    """Resolve an ``EngineConfig.strategy`` value to a strategy instance.
+
+    Accepts a registry name or an already-constructed strategy object
+    (ad-hoc strategies plug in without registration).
+    """
+    if not isinstance(spec, str):
+        return spec
+    try:
+        return _REGISTRY[spec]()
+    except KeyError:
+        raise ValueError(
+            f"unknown sparsity strategy {spec!r}; registered: "
+            f"{available_strategies()}") from None
+
+
+# ---------------------------------------------------------------------------
+# Built-in strategies
+# ---------------------------------------------------------------------------
+
+class FlashOmniStrategy:
+    """Paper §3.3 rule — the seed ``refresh_symbols`` body, verbatim.
+
+    C∧G cumulative-mass caching with S_q degradation (``S_c``) plus
+    SpargeAttn-style per-row cumulative-mass skipping (``S_s``), both
+    ranked for the capacity clamp by the compressed attention map.
+    ``tau_q``/``tau_kv`` default to the ``MaskConfig`` values; explicit
+    constructor values override (the ToCa-like / aggressive arms).
+    """
+
+    name = "flashomni"
+
+    def __init__(self, tau_q: Optional[float] = None,
+                 tau_kv: Optional[float] = None):
+        self.tau_q = tau_q
+        self.tau_kv = tau_kv
+
+    def emit(self, q, k, ctx: StrategyContext) -> SymbolSet:
+        m = ctx.cfg.mask
+        m_c = masklib.make_caching_mask(q, k, m, ctx.n_text, tau_q=self.tau_q)
+        m_c = masklib.apply_degradation(m_c, m.degrade)
+        p_map = masklib.compressed_attention_map(q, k, m.pool)
+        col_mass = jnp.sum(p_map, axis=-2)
+        m_s = masklib.make_skip_mask(q, k, m, ctx.n_text, tau_kv=self.tau_kv)
+        return finalize_symbols(m_c, m_s, col_mass, p_map, ctx)
+
+
+class CacheAllStrategy:
+    """FORA / TaylorSeer family: cache-and-forecast EVERY vision block.
+
+    No block skipping; text rows stay live (Observation 1 — text must
+    refresh every step).  The forecast order (plain reuse vs Taylor)
+    is the engine's ``MaskConfig.order``, not the strategy's concern.
+    """
+
+    name = "cache-all"
+
+    def emit(self, q, k, ctx: StrategyContext) -> SymbolSet:
+        m = ctx.cfg.mask
+        t = m.n_blocks(ctx.n_tokens)
+        n_t = -(-ctx.n_text // m.pool) if ctx.n_text else 0
+        text_row = jnp.arange(t) < n_t
+        m_c = _full(q, t) & text_row
+        m_s = _full(q, t)[..., None, :] & jnp.ones((t, t), jnp.bool_)
+        q_scores = m_c.astype(jnp.float32)
+        kv_scores = jnp.broadcast_to(jnp.ones((t, t), jnp.float32), m_s.shape)
+        return finalize_symbols(m_c, m_s, q_scores, kv_scores, ctx)
+
+
+class SkipOnlyStrategy:
+    """SpargeAttn-style: no feature caching, cumulative-mass BSS only."""
+
+    name = "skip-only"
+
+    def __init__(self, tau_kv: Optional[float] = None):
+        self.tau_kv = tau_kv
+
+    def emit(self, q, k, ctx: StrategyContext) -> SymbolSet:
+        m = ctx.cfg.mask
+        t = m.n_blocks(ctx.n_tokens)
+        p_map = masklib.compressed_attention_map(q, k, m.pool)
+        m_c = _full(q, t)
+        m_s = masklib.make_skip_mask(q, k, m, ctx.n_text, tau_kv=self.tau_kv)
+        return finalize_symbols(m_c, m_s, jnp.sum(p_map, axis=-2), p_map, ctx)
+
+
+class SlidingWindowStrategy:
+    """DiTFastAttnV2-style static band: ``S_s`` keeps |i−j| < window blocks.
+
+    Input-independent (the classic local-attention pattern expressed as a
+    sparse symbol); text rows/columns stay dense when the config protects
+    them.  The clamp ranking prefers the NEAREST diagonals, so a tight
+    ``cap_kv`` shrinks the band instead of truncating arbitrarily.
+    """
+
+    name = "sliding-window"
+
+    def __init__(self, window: int = 4):
+        self.window = int(window)
+
+    def emit(self, q, k, ctx: StrategyContext) -> SymbolSet:
+        m = ctx.cfg.mask
+        t = m.n_blocks(ctx.n_tokens)
+        idx = jnp.arange(t)
+        dist = jnp.abs(idx[:, None] - idx[None, :])
+        band = dist < self.window
+        protect = jnp.zeros((t, t), jnp.bool_)
+        if m.protect_text and ctx.n_text:
+            # Same text semantics as masklib.make_skip_mask: protection is
+            # applied ON TOP of the window, never narrowed by it.
+            n_t = -(-ctx.n_text // m.pool)
+            is_text = idx < n_t
+            protect = is_text[:, None] | is_text[None, :]
+            band = band | protect
+        m_c = _full(q, t)
+        m_s = _full(q, t)[..., None, :] & band
+        q_scores = jnp.ones(m_c.shape, jnp.float32)
+        # Rank protected text pairs above every band distance so a tight
+        # cap_kv shrinks the band from its far edge and never evicts the
+        # prompt (Observation 1) out from under vision queries.
+        kv_scores = jnp.broadcast_to(
+            jnp.where(protect, 1e9, -dist.astype(jnp.float32)), m_s.shape)
+        return finalize_symbols(m_c, m_s, q_scores, kv_scores, ctx)
+
+
+class MultiGranularityStrategy:
+    """Compose a per-layer / per-head table of child strategies.
+
+    Sparse VideoGen classifies heads into spatial vs. temporal sparsity
+    classes per step; Sparse-vDiT fixes a sparse pattern per head offline.
+    Both are tables ``(layer, head) -> strategy`` — exactly what this
+    strategy expresses over ANY registered children.
+
+    ``children``     — child strategy names/instances (index space of the
+                       tables).  Children must treat heads independently
+                       (true of every built-in): each child only ever sees
+                       the Q/K of the heads assigned to it.
+    ``head_assign``  — length-H (or shorter, tiled) template of child
+                       indices; default stripes heads across children.
+    ``layer_assign`` — ``{layer_idx: template | child_idx}`` overrides,
+                       active only when the model passes ``layer_idx``
+                       (i.e. unrolled via ``denoise_step``'s
+                       ``layer_strategies`` — use :meth:`per_layer` to
+                       expand this strategy into that table).  Under
+                       ``lax.scan`` one trace serves every layer, so
+                       ``layer_idx`` is ``None`` and a warning is issued.
+    """
+
+    name = "multi-granularity"
+
+    def __init__(self, children: Sequence[Union[str, SparsityStrategy]] = (
+                     "flashomni", "sliding-window"),
+                 head_assign: Optional[Sequence[int]] = None,
+                 layer_assign: Optional[Mapping[int, Any]] = None,
+                 name: Optional[str] = None):
+        self.children = tuple(get_strategy(c) for c in children)
+        self.head_assign = None if head_assign is None else tuple(head_assign)
+        self.layer_assign = dict(layer_assign or {})
+        if name is not None:
+            self.name = name          # registered presets keep their own name
+
+    def _template(self, layer_idx: Optional[int]) -> Optional[tuple[int, ...]]:
+        a: Any = None
+        if layer_idx is not None:
+            a = self.layer_assign.get(layer_idx)
+        if a is None:
+            a = self.head_assign
+        if a is None:
+            return None
+        return (a,) if isinstance(a, int) else tuple(a)
+
+    def _assignment(self, layer_idx: Optional[int], heads: int) -> list[int]:
+        a = self._template(layer_idx)
+        if a is None:
+            return [h % len(self.children) for h in range(heads)]
+        return [a[h % len(a)] for h in range(heads)]
+
+    def per_layer(self, n_layers: int) -> list["MultiGranularityStrategy"]:
+        """Expand the layer table into a ``layer_strategies`` list: one
+        strategy per layer with that layer's assignment pinned, for
+        ``dit.denoise_step(..., layer_strategies=mg.per_layer(L))``."""
+        return [MultiGranularityStrategy(children=self.children,
+                                         head_assign=self._template(i),
+                                         name=f"{self.name}[layer {i}]")
+                for i in range(n_layers)]
+
+    def emit(self, q, k, ctx: StrategyContext) -> SymbolSet:
+        if self.layer_assign and ctx.layer_idx is None:
+            import warnings
+            warnings.warn(
+                f"{self.name}: layer_assign is set but no layer_idx reached "
+                "the strategy (scanned layers share one trace); every layer "
+                "uses the head template.  Unroll with "
+                "denoise_step(layer_strategies=strategy.per_layer(L)) to "
+                "apply the per-layer table.", stacklevel=2)
+        heads = q.shape[1]
+        assign = self._assignment(ctx.layer_idx, heads)
+        groups: dict[int, list[int]] = {}
+        for h, a in enumerate(assign):
+            groups.setdefault(a, []).append(h)
+        # Each child emits ONLY over its assigned heads (children are
+        # per-head independent), so total symbol work stays one-emit-sized
+        # regardless of how many children the table mixes.
+        parts = {a: self.children[a].emit(q[:, jnp.asarray(hs)],
+                                          k[:, jnp.asarray(hs)], ctx)
+                 for a, hs in groups.items()}
+
+        def sel(field: str) -> jax.Array:
+            cols: list = [None] * heads
+            for a, hs in groups.items():
+                arr = getattr(parts[a], field)
+                for j, h in enumerate(hs):
+                    cols[h] = arr[:, j]
+            return jnp.stack(cols, axis=1)
+
+        m_c, m_s = sel("m_c"), sel("m_s")
+        # Children already clamped + capacity-ranked their own symbols; the
+        # per-head reassembly preserves the per-row True-count bounds, so
+        # only re-packing is needed here.
+        s_c = pack_bits(m_c)
+        s_s = pack_bits(m_s.reshape(*m_s.shape[:-2], -1))
+        return SymbolSet(s_c=s_c, s_s=s_s, m_c=m_c, m_s=m_s,
+                         q_scores=sel("q_scores"), kv_scores=sel("kv_scores"))
+
+
+register_strategy(
+    "flashomni", FlashOmniStrategy,
+    "paper §3.3: C∧G cummass caching + cummass BSS (seed rule, bit-exact)")
+register_strategy(
+    "cache-all", CacheAllStrategy,
+    "FORA / TaylorSeer: forecast every vision block, no skipping")
+register_strategy(
+    "skip-only", SkipOnlyStrategy,
+    "SpargeAttn: per-row cummass block skipping, no caching")
+register_strategy(
+    "sliding-window", SlidingWindowStrategy,
+    "DiTFastAttnV2: static |i-j|<w band as S_s, text protected")
+register_strategy(
+    "multi-granularity", MultiGranularityStrategy,
+    "per-layer/per-head table of child strategies (SVG / Sparse-vDiT)")
+register_strategy(
+    "hunyuan-1.5x",
+    lambda: MultiGranularityStrategy(
+        children=("flashomni", "skip-only", "sliding-window"),
+        # Boundary layers never cache (skip-only); interior layers run the
+        # full rule on 2 of 3 heads and a static band on the third — the
+        # shape of the paper's HunyuanVideo 1.5× deployment table.
+        head_assign=(0, 0, 2),
+        layer_assign={0: 1, 1: 1},
+        name="hunyuan-1.5x"),
+    "paper HunyuanVideo 1.5× table: flashomni/sliding-window striped "
+    "heads; skip-only boundary layers when expanded via per_layer() "
+    "into denoise_step(layer_strategies=...)")

@@ -62,11 +62,14 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
            text_emb: jax.Array, x0: jax.Array, scfg: SamplerConfig = SamplerConfig(),
            patch_embed: Optional[jax.Array] = None,
            trace: Optional[list] = None,
-           force_dense: bool = False):
+           force_dense: bool = False,
+           layer_strategies: Optional[list] = None):
     """Run the full sampling loop.  x0: (B, N_v, patch_dim) Gaussian noise.
 
     ``patch_embed``: (patch_dim, d_model) stub patchifier.  Returns the
-    denoised latents (B, N_v, patch_dim).
+    denoised latents (B, N_v, patch_dim).  ``layer_strategies`` threads a
+    per-layer sparse-symbol producer table into every Update step (see
+    :func:`repro.models.dit.denoise_step`).
     """
     b, nv, pd = x0.shape
     n_tokens = nv + text_emb.shape[1]
@@ -75,9 +78,11 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
         patch_embed = jax.random.normal(jax.random.PRNGKey(7), (pd, cfg.d_model)) * 0.2
 
     upd = jax.jit(lambda p, s, xv, te, t: dit.denoise_step(
-        p, cfg, ecfg, s, xv, te, t, mode="update", dtype=scfg.dtype))
+        p, cfg, ecfg, s, xv, te, t, mode="update", dtype=scfg.dtype,
+        layer_strategies=layer_strategies))
     dsp = jax.jit(lambda p, s, xv, te, t: dit.denoise_step(
-        p, cfg, ecfg, s, xv, te, t, mode="dispatch", dtype=scfg.dtype))
+        p, cfg, ecfg, s, xv, te, t, mode="dispatch", dtype=scfg.dtype,
+        layer_strategies=layer_strategies))
     dns = jax.jit(lambda p, s, xv, te, t: dit.denoise_step(
         p, cfg, ecfg, s, xv, te, t, mode="dense", dtype=scfg.dtype))
     # Per-step efficiency metrics stay ON DEVICE during the loop; a single

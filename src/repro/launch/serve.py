@@ -20,16 +20,19 @@ import jax.numpy as jnp
 from repro.configs.registry import get_config, get_smoke
 from repro.core.engine import EngineConfig
 from repro.core.masks import MaskConfig
+from repro.core.strategy import available_strategies
 from repro.diffusion.pipeline import SamplerConfig, sample
 from repro.models.registry import get_model
 
 
 def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
-                    batch: int = 2, n_vision: int = 96, num_steps: int = 12):
+                    batch: int = 2, n_vision: int = 96, num_steps: int = 12,
+                    strategy: str = "flashomni"):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     ecfg = EngineConfig(mask=MaskConfig(
         tau_q=0.5, tau_kv=0.15, interval=4, order=1, degrade=0.3,
-        block_q=16, block_kv=16, pool=32, warmup_steps=2))
+        block_q=16, block_kv=16, pool=32, warmup_steps=2),
+        strategy=strategy)
     from repro.models import dit as ditmod
     params = ditmod.init_params(cfg, jax.random.PRNGKey(0))
     results = []
@@ -43,7 +46,7 @@ def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
                      scfg=SamplerConfig(num_steps=num_steps), trace=trace)
         dt = time.time() - t0
         dens = [s["density"] for s in trace if s["kind"] == "dispatch"]
-        print(f"[serve] req {req}: {num_steps} steps in {dt:.2f}s  "
+        print(f"[serve] req {req} [{strategy}]: {num_steps} steps in {dt:.2f}s  "
               f"mean dispatch density {sum(dens)/max(len(dens),1):.3f}  "
               f"out {out.shape} finite={bool(jnp.isfinite(out).all())}")
         results.append(out)
@@ -84,9 +87,13 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--kind", default="lm", choices=["lm", "diffusion"])
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--strategy", default="flashomni",
+                    choices=available_strategies(),
+                    help="sparse-symbol producer for --kind diffusion")
     args = ap.parse_args()
     if args.kind == "diffusion":
-        serve_diffusion(args.arch, smoke=not args.full)
+        serve_diffusion(args.arch, smoke=not args.full,
+                        strategy=args.strategy)
     else:
         serve_lm(args.arch, smoke=not args.full)
 

@@ -125,6 +125,7 @@ def engine_state_specs(cfg: ArchConfig, ecfg: EngineConfig) -> LayerState:
             head_cnt=(None, "dp", None),
             head_mask=(None, "dp", None, None),
             m_ch=(None, "dp", None, None),
+            row_score=(None, "dp", None),
         ),
     )
 
@@ -134,7 +135,7 @@ def _modulate(x, shift, scale):
 
 
 def _block(cfg: ArchConfig, ecfg: EngineConfig, p, state, x, t_emb, *, mode: str,
-           n_text: int):
+           n_text: int, strategy=None, layer_idx=None):
     dtype = x.dtype
     mod = (jax.nn.silu(t_emb) @ p["adaln"].astype(dtype) + p["adaln_b"].astype(dtype))
     sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6, axis=-1)
@@ -144,7 +145,8 @@ def _block(cfg: ArchConfig, ecfg: EngineConfig, p, state, x, t_emb, *, mode: str
                         q_scale=p["q_scale"], k_scale=p["k_scale"])
     if mode == "update":
         o, new_state = E.update_layer(attn_p, xa, state, ecfg, n_text=n_text,
-                                      heads=cfg.n_heads)
+                                      heads=cfg.n_heads, strategy=strategy,
+                                      layer_idx=layer_idx)
     elif mode == "dispatch":
         o, new_state = E.dispatch_layer(attn_p, xa, state, ecfg, n_text=n_text,
                                         heads=cfg.n_heads)
@@ -165,11 +167,18 @@ def _block(cfg: ArchConfig, ecfg: EngineConfig, p, state, x, t_emb, *, mode: str
 
 def denoise_step(params, cfg: ArchConfig, ecfg: EngineConfig, states: LayerState,
                  x_vision: jax.Array, text_emb: jax.Array, t: jax.Array,
-                 *, mode: str, dtype=jnp.bfloat16):
+                 *, mode: str, dtype=jnp.bfloat16, layer_strategies=None):
     """One diffusion step: predicts the velocity field for ``x_vision``.
 
     x_vision (B, N_v, d_model) latent patch embeddings; text_emb (B, N_t, d);
     t (B,) diffusion time in [0, 1].  Returns (velocity, new_states).
+
+    ``layer_strategies`` optionally overrides ``ecfg.strategy`` per layer
+    (a length-``n_layers`` sequence of registry names / strategy objects,
+    ``None`` entries fall back to the config).  Per-layer producers need
+    per-layer trace bodies, so the block loop unrolls instead of scanning
+    — the compiled step is layer-count-sized, reserve it for deployment
+    tables (the paper's HunyuanVideo 1.5× configuration).
     """
     b = x_vision.shape[0]
     n_text = text_emb.shape[1]
@@ -179,14 +188,26 @@ def denoise_step(params, cfg: ArchConfig, ecfg: EngineConfig, states: LayerState
     t_emb = timestep_embedding(t * 1000.0, 256).astype(dtype) @ params["t_mlp1"].astype(dtype)
     t_emb = (jax.nn.silu(t_emb) @ params["t_mlp2"].astype(dtype)).astype(dtype)
 
+    if layer_strategies is not None and len(layer_strategies) != cfg.n_layers:
+        raise ValueError(
+            f"layer_strategies has {len(layer_strategies)} entries for "
+            f"{cfg.n_layers} layers")
+    # Only Update steps consume the strategy, so only they pay the unroll;
+    # dispatch/dense steps stay scanned (one-block-sized HLO at any depth).
+    unroll = layer_strategies is not None and mode == "update"
+    layer_counter = iter(range(cfg.n_layers))
+
     def body(x, sl):
         p, st = sl
-        x, new_st = _block(cfg, ecfg, p, st, x, t_emb, mode=mode, n_text=n_text)
+        i = next(layer_counter) if unroll else None
+        strategy = layer_strategies[i] if unroll else None
+        x, new_st = _block(cfg, ecfg, p, st, x, t_emb, mode=mode,
+                           n_text=n_text, strategy=strategy, layer_idx=i)
         return x, new_st
 
     from repro.models import layers as L
     x, new_states = L.maybe_scan(body, x, (params["blocks"], states),
-                                 scan=cfg.scan_layers)
+                                 scan=cfg.scan_layers and not unroll)
     mod = jax.nn.silu(t_emb) @ params["final_mod"].astype(dtype)
     sh, sc = jnp.split(mod, 2, axis=-1)
     x = _modulate(L.rms_norm(x, params["final_norm"], cfg.norm_eps), sh, sc)

@@ -1,0 +1,317 @@
+"""SparsityStrategy API tests (ISSUE 2 acceptance criteria).
+
+  * ``flashomni`` reproduces the seed ``refresh_symbols`` packed symbols
+    bit-for-bit and the pre-refactor DispatchPlan pytree exactly;
+  * every registered strategy runs one Update→Dispatch round-trip on BOTH
+    backends (``xla``, ``pallas`` interpret) with finite outputs and an
+    exactly-rebuildable plan;
+  * plan row-capacity truncation ranks by column mass (ROADMAP item);
+  * int16 plan ids round-trip to the int32 reference plan;
+  * per-layer strategy tables thread through ``dit.denoise_step``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AttnParams, EngineConfig, MaskConfig,
+                        available_strategies, dispatch_layer, get_strategy,
+                        init_layer_state, plan_from_state, update_layer)
+from repro.core.engine import _qk, refresh_symbols
+from repro.core.masks import compressed_attention_map
+from repro.core.plan import build_dispatch_plan
+from repro.core.strategy import (FlashOmniStrategy, MultiGranularityStrategy,
+                                 StrategyContext, strategy_summaries)
+
+N_TEXT = 64
+
+
+def _setup(strategy="flashomni", backend="xla", capq=1.0, capkv=1.0,
+           tau_kv=0.15, heads=3):
+    key = jax.random.PRNGKey(0)
+    B, H, N, dm, dh = 1, heads, 256, 64, 32
+    cfg = EngineConfig(
+        mask=MaskConfig(pool=32, block_q=16, block_kv=16, interval=4,
+                        order=1, warmup_steps=1, tau_kv=tau_kv, tau_q=0.5),
+        cap_q_frac=capq, cap_kv_frac=capkv, cache_dtype=jnp.float32,
+        backend=backend, strategy=strategy,
+        interpret=True if backend == "pallas" else None)
+    ks = jax.random.split(key, 8)
+    p = AttnParams(
+        wq=jax.random.normal(ks[0], (dm, H * dh)) * 0.05,
+        wk=jax.random.normal(ks[1], (dm, H * dh)) * 0.05,
+        wv=jax.random.normal(ks[2], (dm, H * dh)) * 0.05,
+        wo=jax.random.normal(ks[3], (H * dh, dm)) * 0.05,
+        q_scale=jnp.ones(dh), k_scale=jnp.ones(dh))
+    x = jax.random.normal(ks[4], (B, N, dm))
+    state = init_layer_state(B, H, N, dm, dh, cfg)
+    return cfg, p, x, state, H, N
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    names = available_strategies()
+    assert len(names) >= 5
+    for required in ("flashomni", "cache-all", "skip-only", "sliding-window",
+                     "multi-granularity"):
+        assert required in names
+        assert strategy_summaries()[required]
+    with pytest.raises(ValueError, match="unknown sparsity strategy"):
+        get_strategy("no-such-strategy")
+    # Ad-hoc (unregistered) strategy objects pass through unchanged.
+    obj = FlashOmniStrategy(tau_q=0.9)
+    assert get_strategy(obj) is obj
+
+
+# ---------------------------------------------------------------------------
+# flashomni == seed refresh_symbols, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("capq,capkv", [(1.0, 1.0), (0.75, 0.9)])
+def test_flashomni_bit_parity_with_seed_rule(capq, capkv):
+    cfg, p, x, _, H, N = _setup(capq=capq, capkv=capkv)
+    q, k = _qk(p, x, H, None)
+    s_c, s_s, m_c, m_s = refresh_symbols(q, k, cfg, N_TEXT, N)
+    syms = get_strategy("flashomni").emit(
+        q, k, StrategyContext(cfg=cfg, n_text=N_TEXT, n_tokens=N))
+    np.testing.assert_array_equal(np.asarray(s_c), np.asarray(syms.s_c))
+    np.testing.assert_array_equal(np.asarray(s_s), np.asarray(syms.s_s))
+    np.testing.assert_array_equal(np.asarray(m_c), np.asarray(syms.m_c))
+    np.testing.assert_array_equal(np.asarray(m_s), np.asarray(syms.m_s))
+
+    # ...and the DispatchPlan built through update_layer matches the plan
+    # built from the seed rule's masks with the same column-mass ranking.
+    p_map = compressed_attention_map(q, k, cfg.mask.pool)
+    col_mass = jnp.sum(p_map, axis=-2)
+    row_score = jnp.sum(jnp.where(m_c, col_mass, 0.0), axis=-2)
+    want = build_dispatch_plan(m_c, m_s, cfg, N, row_score=row_score)
+    _, st = update_layer(p, x, init_layer_state(1, H, N, 64, 32, cfg), cfg,
+                         n_text=N_TEXT, heads=H)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(st.plan)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(st.s_c), np.asarray(s_c))
+    np.testing.assert_array_equal(np.asarray(st.s_s), np.asarray(s_s))
+
+
+# ---------------------------------------------------------------------------
+# Every registered strategy: Update→Dispatch round-trip on both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("name", available_strategies())
+def test_strategy_update_dispatch_roundtrip(name, backend):
+    cfg, p, x, state, H, N = _setup(name, backend, capq=0.75, capkv=0.9)
+    out_u, st = update_layer(p, x, state, cfg, n_text=N_TEXT, heads=H)
+    assert bool(jnp.isfinite(out_u).all())
+    x2 = x + 0.01 * jax.random.normal(jax.random.PRNGKey(5), x.shape)
+    out_d, st2 = dispatch_layer(p, x2, st, cfg, n_text=N_TEXT, heads=H)
+    assert bool(jnp.isfinite(out_d).all())
+    assert int(st2.k_since) == 1
+    # The plan rebuilt from the packed symbols (+ stored row ranking)
+    # reproduces the frozen plan exactly — symbols stay canonical.
+    rebuilt = plan_from_state(st2, cfg, N)
+    for a, b in zip(jax.tree.leaves(rebuilt), jax.tree.leaves(st2.plan)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_strategy_backend_outputs_match():
+    """The same strategy's dispatch agrees across backends (interpret)."""
+    for name in available_strategies():
+        cfg_x, p, x, state, H, _ = _setup(name, "xla")
+        cfg_p = dataclasses.replace(cfg_x, backend="pallas", interpret=True)
+        _, st = update_layer(p, x, state, cfg_x, n_text=N_TEXT, heads=H)
+        out_x, _ = dispatch_layer(p, x, st, cfg_x, n_text=N_TEXT, heads=H)
+        out_p, _ = dispatch_layer(p, x, st, cfg_p, n_text=N_TEXT, heads=H)
+        np.testing.assert_allclose(np.asarray(out_x), np.asarray(out_p),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+
+
+def test_cache_all_is_pure_forecast():
+    """cache-all: every vision block cached ⇒ identical input reproduces
+    the Update output exactly (pure reuse of the frozen bias/outputs)."""
+    cfg, p, x, state, H, N = _setup("cache-all")
+    out_u, st = update_layer(p, x, state, cfg, n_text=N_TEXT, heads=H)
+    out_d, _ = dispatch_layer(p, x, st, cfg, n_text=N_TEXT, heads=H)
+    err = float(jnp.linalg.norm(out_d - out_u) / jnp.linalg.norm(out_u))
+    assert err < 1e-5, err
+    # Vision rows carry no live bits; text rows stay live (Observation 1).
+    t = cfg.mask.n_blocks(N)
+    n_t = N_TEXT // cfg.mask.pool
+    from repro.core.symbols import unpack_bits
+    m_c = unpack_bits(st.s_c, t)
+    assert bool(m_c[..., :n_t].all()) and not bool(m_c[..., n_t:].any())
+
+
+def test_sliding_window_static_band():
+    cfg, p, x, _, H, N = _setup("sliding-window", tau_kv=0.0)
+    q, k = _qk(p, x, H, None)
+    syms = get_strategy("sliding-window").emit(
+        q, k, StrategyContext(cfg=cfg, n_text=0, n_tokens=N))
+    t = cfg.mask.n_blocks(N)
+    idx = np.arange(t)
+    want = np.abs(idx[:, None] - idx[None, :]) < 4
+    np.testing.assert_array_equal(
+        np.asarray(syms.m_s[0, 0]), want)   # input-independent band
+    assert bool(syms.m_c.all())             # no caching
+
+
+def test_sliding_window_clamp_keeps_protected_text():
+    """A tight cap_kv shrinks the band from its far edge; protected text
+    columns outrank every band distance and are never evicted."""
+    cfg, p, x, _, H, N = _setup("sliding-window", capkv=0.5)  # cap_kv = 4
+    q, k = _qk(p, x, H, None)
+    syms = get_strategy("sliding-window").emit(
+        q, k, StrategyContext(cfg=cfg, n_text=N_TEXT, n_tokens=N))
+    t = cfg.mask.n_blocks(N)
+    n_t = N_TEXT // cfg.mask.pool
+    m_s = np.asarray(syms.m_s)
+    assert m_s[..., :n_t].all()          # every row still sees the prompt
+    # ...and the band survivors are the NEAREST vision diagonals.
+    row = t - 1
+    vis_live = np.flatnonzero(m_s[0, 0, row, n_t:]) + n_t
+    assert vis_live.tolist() == sorted(range(t - 1, t - 1 - (4 - n_t), -1))
+
+
+def test_registered_preset_keeps_its_name():
+    assert get_strategy("hunyuan-1.5x").name == "hunyuan-1.5x"
+    assert get_strategy("multi-granularity").name == "multi-granularity"
+
+
+def test_multi_granularity_head_table():
+    """Striped heads: each head's symbols equal the assigned child's."""
+    cfg, p, x, _, H, N = _setup("multi-granularity", heads=4)
+    q, k = _qk(p, x, H, None)
+    ctx = StrategyContext(cfg=cfg, n_text=N_TEXT, n_tokens=N)
+    mg = MultiGranularityStrategy(children=("flashomni", "sliding-window"))
+    got = mg.emit(q, k, ctx)
+    fo = get_strategy("flashomni").emit(q, k, ctx)
+    sw = get_strategy("sliding-window").emit(q, k, ctx)
+    for h in range(H):
+        child = fo if h % 2 == 0 else sw
+        np.testing.assert_array_equal(np.asarray(got.m_c[:, h]),
+                                      np.asarray(child.m_c[:, h]))
+        np.testing.assert_array_equal(np.asarray(got.m_s[:, h]),
+                                      np.asarray(child.m_s[:, h]))
+    # layer_assign overrides the head template when layer_idx is known.
+    mg2 = MultiGranularityStrategy(children=("flashomni", "sliding-window"),
+                                   layer_assign={0: 1})
+    got0 = mg2.emit(q, k, ctx._replace(layer_idx=0))
+    np.testing.assert_array_equal(np.asarray(got0.m_s), np.asarray(sw.m_s))
+    # ...and warns when the table exists but no layer_idx reaches it
+    # (scanned layers), instead of silently applying the head template.
+    with pytest.warns(UserWarning, match="layer_assign"):
+        mg2.emit(q, k, ctx)
+    # per_layer expands the table into a denoise_step layer_strategies list.
+    expanded = mg2.per_layer(3)
+    assert len(expanded) == 3
+    e0 = expanded[0].emit(q, k, ctx)
+    np.testing.assert_array_equal(np.asarray(e0.m_s), np.asarray(got0.m_s))
+    e1 = expanded[1].emit(q, k, ctx)
+    np.testing.assert_array_equal(np.asarray(e1.m_s), np.asarray(got.m_s))
+
+
+# ---------------------------------------------------------------------------
+# Plan satellites: mass-ranked row truncation + int16 id round-trip
+# ---------------------------------------------------------------------------
+
+def test_row_capacity_truncation_ranks_by_column_mass():
+    """cap < live rows ⇒ the LOWEST-mass rows are dropped, not the last
+    ones in index order (the seed kept the first `cap` rows)."""
+    b, h, t, blk = 1, 2, 8, 16
+    n = t * blk
+    cfg = EngineConfig(mask=MaskConfig(pool=blk, block_q=blk, block_kv=blk),
+                       cap_q_frac=0.5)                     # cap_rows = 4
+    m_c = jnp.ones((b, h, t), bool)
+    m_s = jnp.ones((b, h, t, t), bool)
+    score = jnp.arange(t, dtype=jnp.float32)[None, :]      # mass grows with id
+    plan = build_dispatch_plan(m_c, m_s, cfg, n, row_score=score)
+    assert sorted(np.asarray(plan.row_ids[0]).tolist()) == [4, 5, 6, 7]
+    assert int(plan.row_cnt[0]) == 4
+    # Reversed mass keeps the first four rows instead.
+    plan2 = build_dispatch_plan(m_c, m_s, cfg, n, row_score=score[..., ::-1])
+    assert sorted(np.asarray(plan2.row_ids[0]).tolist()) == [0, 1, 2, 3]
+    # Dropped rows degrade to cache-reuse: no compute bits left for them.
+    m_ch = np.asarray(plan.m_ch)                            # (B, T, H)
+    assert not m_ch[:, :4].any() and m_ch[:, 4:].all()
+
+
+def test_fallback_row_score_is_mask_mass():
+    """Without an explicit score the ranking uses live-pair mass, so rows
+    with more live (head, kv) work survive truncation."""
+    b, h, t, blk = 1, 2, 8, 16
+    cfg = EngineConfig(mask=MaskConfig(pool=blk, block_q=blk, block_kv=blk),
+                       cap_q_frac=0.5)
+    m_c = jnp.ones((b, h, t), bool)
+    m_s = jnp.zeros((b, h, t, t), bool).at[..., :1].set(True)
+    # Rows 3..6 attend to every kv block in every head; others to one.
+    m_s = m_s.at[..., 3:7, :].set(True)
+    plan = build_dispatch_plan(m_c, m_s, cfg, t * blk)
+    assert sorted(np.asarray(plan.row_ids[0]).tolist()) == [3, 4, 5, 6]
+
+
+def test_plan_int16_ids_roundtrip():
+    cfg, p, x, state, H, N = _setup(capq=0.75, capkv=0.9)
+    q, k = _qk(p, x, H, None)
+    syms = get_strategy("flashomni").emit(
+        q, k, StrategyContext(cfg=cfg, n_text=N_TEXT, n_tokens=N))
+    narrow = build_dispatch_plan(syms.m_c, syms.m_s, cfg, N)
+    wide = build_dispatch_plan(syms.m_c, syms.m_s, cfg, N, compact_ids=False)
+    assert narrow.row_ids.dtype == jnp.int16
+    assert narrow.kv_row_ids.dtype == jnp.int16
+    assert wide.row_ids.dtype == jnp.int32
+    widened = narrow.widen()
+    for a, b in zip(jax.tree.leaves(widened), jax.tree.leaves(wide)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # widen() is idempotent and a no-op on an already-wide plan.
+    assert widened.widen() is widened
+    assert wide.widen() is wide
+
+
+# ---------------------------------------------------------------------------
+# Per-layer strategy tables through the model
+# ---------------------------------------------------------------------------
+
+def test_denoise_step_per_layer_strategies():
+    from repro.configs.registry import get_smoke
+    from repro.models import dit
+    cfg = get_smoke("flux-mmdit")
+    ecfg = EngineConfig(
+        mask=MaskConfig(tau_q=0.5, tau_kv=0.15, interval=4, order=1,
+                        degrade=0.0, block_q=16, block_kv=16, pool=16,
+                        warmup_steps=1),
+        cache_dtype=jnp.float32, cap_q_frac=1.0, cap_kv_frac=1.0)
+    params = dit.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    xv = jax.random.normal(key, (1, 64, cfg.d_model))
+    text = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, cfg.n_text_tokens, cfg.d_model))
+    t = jnp.zeros((1,))
+    n_tokens = 64 + cfg.n_text_tokens
+    states = dit.init_engine_states(cfg, ecfg, 1, n_tokens)
+
+    table = ["cache-all"] * cfg.n_layers
+    table[0] = "flashomni"
+    v, new_states = dit.denoise_step(params, cfg, ecfg, states, xv, text, t,
+                                     mode="update", dtype=jnp.float32,
+                                     layer_strategies=table)
+    assert bool(jnp.isfinite(v).all())
+    t_blocks = ecfg.mask.n_blocks(n_tokens)
+    n_t = -(-cfg.n_text_tokens // ecfg.mask.pool)
+    from repro.core.symbols import unpack_bits
+    m_c = unpack_bits(new_states.s_c, t_blocks)            # (L, B, H, T)
+    # cache-all layers: no vision bits live; flashomni layer 0: some live.
+    assert not bool(m_c[1:, ..., n_t:].any())
+    assert bool(m_c[0].any())
+    with pytest.raises(ValueError, match="layer_strategies"):
+        dit.denoise_step(params, cfg, ecfg, states, xv, text, t,
+                         mode="update", dtype=jnp.float32,
+                         layer_strategies=["flashomni"])
