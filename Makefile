@@ -1,23 +1,29 @@
 # FlashOmni reproduction — one-liner entry points.
 #
 #   make test              tier-1 test suite (ROADMAP verify command)
-#   make smoke             fast benchmark smoke (dispatch-plan amortization + micro rows)
+#   make smoke             fast benchmark smoke (dispatch-plan amortization +
+#                          schedule scan + micro rows); writes bench-smoke.json
 #   make bench             full paper-figure benchmark suite
-#   make bench-strategies  sweep the strategy registry: density / pair-sparsity
-#                          / fidelity table per registered symbol producer
+#   make bench-strategies  sweep the strategy + schedule registries: density /
+#                          pair-sparsity / fidelity table per producer
+#   make bench-schedule    single-scan sampler vs the legacy three-jit loop
+#                          (compile time + µs/step)
 
 PY ?= python
 
-.PHONY: test smoke bench bench-strategies
+.PHONY: test smoke bench bench-strategies bench-schedule
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 smoke:
-	PYTHONPATH=src $(PY) -m benchmarks.run --smoke
+	PYTHONPATH=src $(PY) -m benchmarks.run --smoke --json bench-smoke.json
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
 bench-strategies:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only "strategy registry"
+
+bench-schedule:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only "schedule scan"

@@ -1,0 +1,116 @@
+"""Single-scan sampler vs the legacy three-jit Python step loop (ISSUE 3).
+
+Before the scan-native SparsitySchedule, ``pipeline.sample`` was a Python
+loop dispatching per step into one of THREE separately-jitted
+``denoise_step`` instantiations (dense / update / dispatch).  Now the
+whole denoise loop is one ``lax.scan`` whose body ``lax.switch``es on the
+schedule's traced mode array.  This benchmark measures both ends:
+
+  * cold-start: wall-clock of the first full run (compile + execute) —
+    the scan pays ONE compile, the legacy loop pays one per mode;
+  * steady-state µs/step over repeated runs (same executables);
+  * the executable count witness (1 vs 2).
+
+``make bench-schedule`` runs exactly this table.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.configs.registry import get_smoke
+from repro.core.engine import EngineConfig, is_update_step
+from repro.core.masks import MaskConfig
+from repro.diffusion.pipeline import SamplerConfig, sample
+from repro.models import dit
+
+
+def _legacy_sample(params, cfg, ecfg, *, text_emb, x0, num_steps,
+                   patch_embed, jits=None):
+    """The pre-ISSUE-3 sampler: Python step loop over per-mode jits."""
+    b = x0.shape[0]
+    n_tokens = x0.shape[1] + text_emb.shape[1]
+    states = dit.init_engine_states(cfg, ecfg, b, n_tokens)
+    if jits is None:
+        jits = {m: jax.jit(lambda p, s, xv, te, t, m=m: dit.denoise_step(
+            p, cfg, ecfg, s, xv, te, t, mode=m, dtype=jnp.float32))
+            for m in ("update", "dispatch")}
+    x = x0
+    dt = 1.0 / num_steps
+    for i in range(num_steps):
+        t = jnp.full((b,), i * dt, jnp.float32)
+        xe = (x @ patch_embed).astype(jnp.float32)
+        mode = "update" if is_update_step(i, ecfg) else "dispatch"
+        v, states = jits[mode](params, states, xe, text_emb, t)
+        x = x + v.astype(x.dtype) * dt
+    return x, jits
+
+
+def run(csv: list, *, steps: int = 12, nv: int = 96, smoke: bool = False):
+    if smoke:
+        steps = 8
+    cfg = get_smoke("flux-mmdit")
+    params = dit.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(33)
+    x0 = jax.random.normal(key, (1, nv, cfg.patch_dim))
+    text = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, cfg.n_text_tokens, cfg.d_model))
+    patch_embed = jax.random.normal(jax.random.PRNGKey(7),
+                                    (cfg.patch_dim, cfg.d_model)) * 0.2
+    ecfg = EngineConfig(
+        mask=MaskConfig(tau_q=0.5, tau_kv=0.15, interval=4, order=1,
+                        degrade=0.0, block_q=16, block_kv=16, pool=16,
+                        warmup_steps=2),
+        cache_dtype=jnp.float32, cap_q_frac=1.0, cap_kv_frac=1.0)
+    scfg = SamplerConfig(num_steps=steps)
+
+    # --- cold start (fresh executables) ---
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    stats: dict = {}
+    out_scan = jax.block_until_ready(sample(
+        params, cfg, ecfg, text_emb=text, x0=x0, scfg=scfg,
+        patch_embed=patch_embed, stats=stats))
+    cold_scan = time.perf_counter() - t0
+
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    out_legacy, jits = _legacy_sample(params, cfg, ecfg, text_emb=text,
+                                      x0=x0, num_steps=steps,
+                                      patch_embed=patch_embed)
+    jax.block_until_ready(out_legacy)
+    cold_legacy = time.perf_counter() - t0
+
+    rel = float(jnp.linalg.norm(out_scan - out_legacy)
+                / jnp.linalg.norm(out_legacy))
+
+    # --- steady state (executables warm) ---
+    t_scan = time_fn(lambda: sample(params, cfg, ecfg, text_emb=text, x0=x0,
+                                    scfg=scfg, patch_embed=patch_embed),
+                     iters=5 if smoke else 9)
+    t_legacy = time_fn(lambda: _legacy_sample(params, cfg, ecfg,
+                                              text_emb=text, x0=x0,
+                                              num_steps=steps,
+                                              patch_embed=patch_embed,
+                                              jits=jits)[0],
+                       iters=5 if smoke else 9)
+
+    csv.append({
+        "name": f"schedule_scan_sample/steps{steps}",
+        "us_per_call": t_scan / steps * 1e6,
+        "derived": (f"cold_start_s={cold_scan:.2f}"
+                    f" executables={stats['executables']}"
+                    f" rel_l2_vs_legacy={rel:.2e}"),
+    })
+    csv.append({
+        "name": f"schedule_legacy_three_jit/steps{steps}",
+        "us_per_call": t_legacy / steps * 1e6,
+        "derived": (f"cold_start_s={cold_legacy:.2f}"
+                    f" executables={len(jits)}"
+                    f" compile_speedup={cold_legacy / max(cold_scan, 1e-9):.2f}"
+                    f" step_speedup={t_legacy / max(t_scan, 1e-9):.2f}"),
+    })

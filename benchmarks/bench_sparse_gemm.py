@@ -4,6 +4,14 @@ GEMM-Q sparsity lives on the spatial axis (skip cached row blocks);
 GEMM-O on the reduction axis (cached heads arrive via the bias).  Measured
 on the structural XLA paths; theory = 1/(1−s) for GEMM-Q and for a single
 GEMM-O invocation.
+
+Each point carries a PLAN-LEVEL companion row (``*_plan_*``): the same
+GEMM over precomputed DispatchPlan indices (``gemm_q_from_plan`` /
+``gemm_o_from_plan`` — what a Dispatch step actually traces), so
+kernel-vs-XLA comparisons are apples-to-apples with the engine's
+compile-once path.  On real TPUs a ``*_kernel_*`` row times the Pallas
+kernel over the same indices (interpret mode timings are meaningless, so
+the row is skipped off-TPU).
 """
 
 from __future__ import annotations
@@ -12,11 +20,14 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import flops_of, time_fn
-from repro.core.sparse_gemm import gemm_o_sparse, gemm_q_sparse
+from repro.core.sparse_gemm import (gemm_o_from_plan, gemm_o_sparse,
+                                    gemm_q_from_plan, gemm_q_sparse)
+from repro.core.symbols import active_indices
 
 
 def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128):
     t = n // block
+    on_tpu = jax.default_backend() == "tpu"
     key = jax.random.PRNGKey(1)
     ks = jax.random.split(key, 6)
     x = jax.random.normal(ks[0], (1, n, d), jnp.float32)
@@ -35,6 +46,26 @@ def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128):
                     "derived": (f"sparsity={s_real:.3f}"
                                 f" speedup_time={t_dense / t_s:.2f}"
                                 f" theory={1 / max(1 - s_real, 1e-9):.2f}")})
+        # Plan-level row: live-row indices precomputed once (Update time).
+        ids, cnt = jax.jit(lambda m: active_indices(m, keep))(mask)
+        plan_fn = jax.jit(lambda x, w, i, c: gemm_q_from_plan(
+            x, w, i, c, block=block))
+        t_p = time_fn(plan_fn, x, w, ids, cnt)
+        csv.append({"name": f"fig6_gemm_q_plan_s{s}", "us_per_call": t_p * 1e6,
+                    "derived": (f"sparsity={s_real:.3f}"
+                                f" speedup_time={t_dense / t_p:.2f}"
+                                f" index_decode_overhead_us="
+                                f"{(t_s - t_p) * 1e6:.1f}")})
+        if on_tpu:
+            from repro.kernels.gemm_q import gemm_q_sparse_kernel
+            kern = jax.jit(lambda x, w, i: gemm_q_sparse_kernel(
+                x, w, i, block_rows=block))
+            t_k = time_fn(kern, x, w, ids)
+            csv.append({"name": f"fig6_gemm_q_kernel_s{s}",
+                        "us_per_call": t_k * 1e6,
+                        "derived": (f"sparsity={s_real:.3f}"
+                                    f" speedup_time={t_dense / t_k:.2f}"
+                                    f" vs_plan_xla={t_p / t_k:.2f}")})
 
     # GEMM-O: reduction-axis (head) sparsity + spatial sparsity of dead rows.
     dh = d // h
@@ -54,6 +85,31 @@ def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128):
                     "derived": (f"sparsity={s_real:.3f}"
                                 f" speedup_time={t_dense_o / t_s:.2f}"
                                 f" theory={1 / max(1 - s_real, 1e-9):.2f}")})
+        # Plan-level row: row/head lists precomputed once (Update time).
+        ids, cnt = jax.jit(lambda m: active_indices(
+            jnp.any(m, -1), keep_rows))(m_ch)
+        head_mask = jnp.take_along_axis(m_ch, ids[..., None], axis=-2)
+        plan_fn = jax.jit(lambda o, w, hm, i, c, b: gemm_o_from_plan(
+            o, w, hm, i, c, b, block=block))
+        t_p = time_fn(plan_fn, oh, wh, head_mask, ids, cnt, bias)
+        csv.append({"name": f"fig6_gemm_o_plan_s{s}", "us_per_call": t_p * 1e6,
+                    "derived": (f"sparsity={s_real:.3f}"
+                                f" speedup_time={t_dense_o / t_p:.2f}"
+                                f" index_decode_overhead_us="
+                                f"{(t_s - t_p) * 1e6:.1f}")})
+        if on_tpu:
+            from repro.kernels.gemm_o import gemm_o_sparse_kernel
+            head_ids, head_cnt = active_indices(head_mask, h)
+            head_cnt = jnp.where(jnp.arange(keep_rows) < cnt[..., None],
+                                 head_cnt, 0)
+            kern = jax.jit(lambda o, w, b, i, hi, hc: gemm_o_sparse_kernel(
+                o.transpose(0, 2, 1, 3), w, b, i, hi, hc, block_rows=block))
+            t_k = time_fn(kern, oh, wh, bias, ids, head_ids, head_cnt)
+            csv.append({"name": f"fig6_gemm_o_kernel_s{s}",
+                        "us_per_call": t_k * 1e6,
+                        "derived": (f"sparsity={s_real:.3f}"
+                                    f" speedup_time={t_dense_o / t_k:.2f}"
+                                    f" vs_plan_xla={t_p / t_k:.2f}")})
     csv.append({"name": "fig6_gemm_dense_baselines",
                 "us_per_call": t_dense * 1e6,
                 "derived": f"gemm_o_dense_us={t_dense_o * 1e6:.1f}"})

@@ -1,11 +1,14 @@
-"""Strategy-registry sweep: density / pair-sparsity / fidelity per producer.
+"""Strategy-registry + schedule-registry sweep: density / pair-sparsity /
+fidelity per producer.
 
-Runs EVERY registered :mod:`repro.core.strategy` entry through the same
-reduced MMDiT sampling loop (one ``EngineConfig`` differing only in
-``strategy``) and reports the paper's efficiency accounting per strategy:
-mean dispatch density (Fig. 7), run-averaged pair sparsity (Table 1's
-Sparsity column) and relative L2 vs the dense oracle.  ``make
-bench-strategies`` runs exactly this table.
+Runs EVERY registered :mod:`repro.core.strategy` entry — and every named
+:mod:`repro.core.schedule` preset — through the same reduced MMDiT
+sampling loop (one ``EngineConfig`` differing only in ``strategy`` /
+``schedule``) and reports the paper's efficiency accounting per row: mean
+dispatch density (Fig. 7), run-averaged pair sparsity (Table 1's Sparsity
+column) and relative L2 vs the dense oracle.  Every row runs the
+SINGLE-SCAN sampler (one compiled executable per config — asserted).
+``make bench-strategies`` runs exactly this table.
 """
 
 from __future__ import annotations
@@ -18,6 +21,7 @@ from benchmarks.common import psnr
 from repro.configs.registry import get_smoke
 from repro.core.engine import EngineConfig
 from repro.core.masks import MaskConfig
+from repro.core.schedule import available_schedules
 from repro.core.strategy import available_strategies
 from repro.diffusion.pipeline import SamplerConfig, sample
 from repro.models import dit
@@ -34,20 +38,23 @@ def run(csv: list, *, steps: int = 10, nv: int = 96, smoke: bool = False):
         steps = 6
     scfg = SamplerConfig(num_steps=steps)
 
-    def ecfg(name):
+    def ecfg(name, schedule=None):
         return EngineConfig(
             mask=MaskConfig(tau_q=0.5, tau_kv=0.15, interval=4, order=1,
                             degrade=0.0, block_q=16, block_kv=16, pool=16,
                             warmup_steps=2),
-            strategy=name, cache_dtype=jnp.float32,
+            strategy=name, schedule=schedule, cache_dtype=jnp.float32,
             cap_q_frac=1.0, cap_kv_frac=1.0)
 
     dense = sample(params, cfg, ecfg("flashomni"), text_emb=text, x0=x0,
                    scfg=scfg, force_dense=True)
-    for name in available_strategies():
+
+    def row(label, config):
         trace: list = []
-        out = sample(params, cfg, ecfg(name), text_emb=text, x0=x0,
-                     scfg=scfg, trace=trace)
+        stats: dict = {}
+        out = sample(params, cfg, config, text_emb=text, x0=x0,
+                     scfg=scfg, trace=trace, stats=stats)
+        assert stats["executables"] in (1, -1), (label, stats)
         dens = [t["density"] for t in trace if t["kind"] == "dispatch"]
         pair_s = [t["pair_sparsity"] for t in trace if t["kind"] == "dispatch"]
         mean_density = float(np.mean(dens)) if dens else 1.0
@@ -55,8 +62,13 @@ def run(csv: list, *, steps: int = 10, nv: int = 96, smoke: bool = False):
                     if pair_s else 0.0)
         rel = float(jnp.linalg.norm(out - dense) / jnp.linalg.norm(dense))
         csv.append({
-            "name": f"registry_{name}",
+            "name": label,
             "us_per_call": 0.0,
             "derived": (f"density={mean_density:.3f} sparsity={sparsity:.3f}"
                         f" psnr={psnr(out, dense):.2f} rel_l2={rel:.4f}"),
         })
+
+    for name in available_strategies():
+        row(f"registry_{name}", ecfg(name))
+    for name in available_schedules():
+        row(f"schedule_{name}", ecfg("flashomni", schedule=name))

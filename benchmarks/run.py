@@ -3,15 +3,18 @@
 Prints ``name,us_per_call,derived`` CSV (task spec).
 
 ``--smoke`` runs a fast subset (the dispatch-plan amortization benchmark
-at its smallest shape plus the sparse-GEMM micro rows) so CI and
-``make smoke`` get a signal in seconds rather than minutes.
-``--only SUBSTR`` filters suites by label.
+at its smallest shape, the sparse-GEMM micro rows and the single-scan
+schedule comparison) so CI and ``make smoke`` get a signal in seconds
+rather than minutes.  ``--only SUBSTR`` filters suites by label;
+``--json PATH`` additionally writes the rows (plus suite wall-times) as a
+JSON document — CI uploads the smoke run's JSON as a workflow artifact.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import time
 
@@ -20,12 +23,14 @@ def _suites():
     from benchmarks import (bench_ablation, bench_attention_sparsity,
                             bench_density, bench_dispatch_plan,
                             bench_e2e_quality, bench_e2e_speedup,
-                            bench_gemm_o_interval, bench_sparse_gemm,
-                            bench_strategy_sweep, bench_warmup)
+                            bench_gemm_o_interval, bench_schedule,
+                            bench_sparse_gemm, bench_strategy_sweep,
+                            bench_warmup)
 
     return [
         ("issue1 dispatch-plan amortization", bench_dispatch_plan.run),
         ("issue2 strategy registry sweep", bench_strategy_sweep.run),
+        ("issue3 schedule scan vs three-jit", bench_schedule.run),
         ("fig6/fig10 attention", bench_attention_sparsity.run),
         ("fig6/fig11 sparse GEMMs", bench_sparse_gemm.run),
         ("fig8/A.1.2 GEMM-O interval", bench_gemm_o_interval.run),
@@ -38,7 +43,9 @@ def _suites():
 
 
 # Labels included in --smoke mode (fast, CPU-friendly).
-SMOKE_SUITES = ("issue1 dispatch-plan amortization", "fig6/fig11 sparse GEMMs")
+SMOKE_SUITES = ("issue1 dispatch-plan amortization",
+                "issue3 schedule scan vs three-jit",
+                "fig6/fig11 sparse GEMMs")
 
 
 def main(argv=None) -> None:
@@ -47,6 +54,8 @@ def main(argv=None) -> None:
                     help="fast subset with reduced shapes")
     ap.add_argument("--only", default=None,
                     help="substring filter on suite labels")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + suite timings as JSON")
     args = ap.parse_args(argv)
 
     suites = _suites()
@@ -59,6 +68,7 @@ def main(argv=None) -> None:
         return
 
     csv: list[dict] = []
+    timings: list[dict] = []
     print("name,us_per_call,derived")
     for label, fn in suites:
         t0 = time.time()
@@ -67,10 +77,19 @@ def main(argv=None) -> None:
             fn(csv, smoke=args.smoke)
         else:
             fn(csv)
+        dt = time.time() - t0
         for row in csv[start:]:
+            row["suite"] = label
             print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
-        print(f"# suite [{label}] done in {time.time() - t0:.1f}s",
-              file=sys.stderr)
+        timings.append({"suite": label, "seconds": round(dt, 2),
+                        "rows": len(csv) - start})
+        print(f"# suite [{label}] done in {dt:.1f}s", file=sys.stderr)
+
+    if args.json:
+        doc = {"smoke": args.smoke, "rows": csv, "suites": timings}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {len(csv)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -9,9 +9,14 @@ same Update–Dispatch engine — the unification claim in practice:
   DiTFastAttnV2   — ``sliding-window`` static S_s band
   FlashOmni       — ``flashomni``: C∧G caching + BSS + sparse GEMMs
   MultiGranularity— per-head table striping flashomni/sliding-window
+  Hunyuan-1.5x    — named ``hunyuan-1.5x`` SparsitySchedule (per-layer
+                    deployment table traced through the scanned blocks)
+  StepRamp        — named ``step-ramp`` schedule (per-step strategy ramp)
 
 Before ISSUE 2 these baselines were SIMULATED by twiddling ``MaskConfig``
-thresholds; now each row names its strategy in ``EngineConfig.strategy``.
+thresholds; now each row names its strategy in ``EngineConfig.strategy``
+— or a whole named schedule in ``EngineConfig.schedule`` (ISSUE 3), which
+the single-scan sampler resolves into a traced (step × layer) table.
 """
 
 from __future__ import annotations
@@ -32,9 +37,10 @@ def strategy_configs(interval: int = 4, order: int = 1) -> dict[str, EngineConfi
     # capacity fracs 1.0: let each strategy's OWN selection rule set the
     # sparsity level (the static-capacity clamp is a deployment knob, not
     # part of the algorithm comparison).
-    mk = lambda strategy, **kw: EngineConfig(
+    mk = lambda strategy, schedule=None, **kw: EngineConfig(
         mask=MaskConfig(**{**base, **kw}), strategy=strategy,
-        cache_dtype=jnp.float32, cap_q_frac=1.0, cap_kv_frac=1.0)
+        schedule=schedule, cache_dtype=jnp.float32,
+        cap_q_frac=1.0, cap_kv_frac=1.0)
     return {
         "FORA": mk("cache-all", order=0),
         "TaylorSeer": mk("cache-all", order=order),
@@ -46,4 +52,8 @@ def strategy_configs(interval: int = 4, order: int = 1) -> dict[str, EngineConfi
                                    order=order),
         "MultiGranularity": mk("multi-granularity", tau_q=0.5, tau_kv=0.15,
                                order=order),
+        "Hunyuan-1.5x": mk("flashomni", schedule="hunyuan-1.5x",
+                           tau_q=0.5, tau_kv=0.15, order=order),
+        "StepRamp": mk("flashomni", schedule="step-ramp",
+                       tau_q=0.5, tau_kv=0.15, order=order),
     }

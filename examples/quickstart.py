@@ -8,10 +8,14 @@ Runs on CPU in a few seconds:
   5. cross-checks the Pallas kernel (interpret mode) against the oracle.
 
 Usage:  PYTHONPATH=src python examples/quickstart.py [--strategy NAME]
+                                                     [--schedule NAME]
 
 ``--strategy`` swaps the sparse-symbol producer (any registry name —
 ``flashomni``, ``cache-all``, ``skip-only``, ``sliding-window``,
-``multi-granularity``, ``hunyuan-1.5x``) behind the SAME engine.
+``multi-granularity``, ``step-phased``, ``hunyuan-1.5x``) behind the SAME
+engine.  ``--schedule`` additionally demos a named SparsitySchedule
+(``hunyuan-1.5x``, ``step-ramp``) driving the ONE-compile scanned sampling
+loop on a tiny MMDiT.
 """
 
 import argparse
@@ -20,10 +24,42 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (AttnParams, EngineConfig, MaskConfig,
-                        available_strategies, dispatch_layer,
-                        init_layer_state, update_layer)
+                        available_schedules, available_strategies,
+                        dispatch_layer, init_layer_state, update_layer)
+from repro.core.schedule import MODE_NAMES, schedule_summaries
 from repro.core.strategy import strategy_summaries
 from repro.core.symbols import unpack_bits
+
+
+def demo_schedule(name: str):
+    """Named schedule -> one compiled scan over a tiny MMDiT sampler."""
+    from repro.configs.registry import get_smoke
+    from repro.diffusion.pipeline import SamplerConfig, sample
+    from repro.models import dit
+    print(f"\nschedule: {name} — {schedule_summaries()[name]}")
+    cfg = get_smoke("flux-mmdit")
+    ecfg = EngineConfig(
+        mask=MaskConfig(tau_q=0.5, tau_kv=0.15, interval=4, order=1,
+                        degrade=0.0, block_q=16, block_kv=16, pool=16,
+                        warmup_steps=2),
+        schedule=name, cache_dtype=jnp.float32,
+        cap_q_frac=1.0, cap_kv_frac=1.0)
+    params = dit.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    x0 = jax.random.normal(key, (1, 64, cfg.patch_dim))
+    text = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, cfg.n_text_tokens, cfg.d_model))
+    stats: dict = {}
+    out = sample(params, cfg, ecfg, text_emb=text, x0=x0,
+                 scfg=SamplerConfig(num_steps=8), stats=stats)
+    sched = stats["schedule"]
+    print(f"  strategies: {[s.name for s in sched.strategies]}")
+    print(f"  mode       : {[MODE_NAMES[int(m)][0].upper() for m in sched.mode]}")
+    for i in range(sched.num_steps):
+        print(f"  step {i} ids: {sched.strategy_ids[i].tolist()}")
+    print(f"  compiled executables: {stats['executables']} (one scan, "
+          f"lax.switch on the mode array)")
+    print(f"  out {out.shape} finite={bool(jnp.isfinite(out).all())}")
 
 
 def main():
@@ -31,6 +67,10 @@ def main():
     ap.add_argument("--strategy", default="flashomni",
                     choices=available_strategies(),
                     help="sparse-symbol producer (see repro.core.strategy)")
+    ap.add_argument("--schedule", default=None,
+                    choices=available_schedules(),
+                    help="also demo a named SparsitySchedule through the "
+                         "single-scan sampling loop")
     args = ap.parse_args()
     print(f"strategy: {args.strategy} — {strategy_summaries()[args.strategy]}")
 
@@ -84,6 +124,9 @@ def main():
                               block_q=32, block_kv=32)
     print(f"Pallas CSR kernel max |err| vs oracle: "
           f"{float(jnp.max(jnp.abs(got - want))):.2e}")
+
+    if args.schedule:
+        demo_schedule(args.schedule)
     print("quickstart OK")
 
 

@@ -11,16 +11,24 @@ from repro.core.engine import (
     init_layer_state,
     is_update_step,
     plan_from_state,
+    resolve_schedule,
     update_layer,
 )
 from repro.core.attention import SparseAttentionSpec
 from repro.core.backend import get_backend
 from repro.core.plan import DispatchPlan, build_dispatch_plan
+from repro.core.schedule import (
+    SparsitySchedule,
+    available_schedules,
+    get_schedule,
+    register_schedule,
+)
 from repro.core.strategy import (
     SparsityStrategy,
     StrategyContext,
     SymbolSet,
     available_strategies,
+    emit_switch,
     get_strategy,
     register_strategy,
 )
@@ -32,17 +40,23 @@ __all__ = [
     "LayerState",
     "DispatchPlan",
     "SparseAttentionSpec",
+    "SparsitySchedule",
     "SparsityStrategy",
     "StrategyContext",
     "SymbolSet",
     "init_layer_state",
     "is_update_step",
+    "resolve_schedule",
     "update_layer",
     "dispatch_layer",
     "plan_from_state",
     "build_dispatch_plan",
     "get_backend",
     "get_strategy",
+    "get_schedule",
     "register_strategy",
+    "register_schedule",
     "available_strategies",
+    "available_schedules",
+    "emit_switch",
 ]

@@ -12,8 +12,11 @@ interchangeable implementations sit behind a common interface:
     ``gemm_o_sparse_kernel``), chained through the COMPACT GEMM-Q layout:
     the ``(Cr·bm, F)`` live-row projection feeds the CSR attention kernel
     directly via ``plan.q_slots`` — no scatter between the two kernels.
-    Off-TPU the kernels run with ``interpret=True`` so tests and CI
-    exercise the exact same code path.
+    Batch is part of every kernel's GRID (attention folds it into the
+    flattened ``B·H`` leading axis; the GEMMs carry a leading batch grid
+    dimension over per-sample scalar-prefetched index lists), so one
+    ``pallas_call`` covers the whole batch.  Off-TPU the kernels run with
+    ``interpret=True`` so tests and CI exercise the exact same code path.
 
 Selection lives on ``EngineConfig.backend``: ``"xla"`` | ``"pallas"`` |
 ``"auto"`` (Pallas on real TPUs, XLA elsewhere).
@@ -84,15 +87,14 @@ class PallasBackend:
 
     def gemm_q(self, x: jax.Array, w: jax.Array, plan: DispatchPlan, *,
                block: int) -> jax.Array:
-        """COMPACT (B, Cr·block, F) projection of the live row blocks."""
+        """COMPACT (B, Cr·block, F) projection of the live row blocks.
+
+        Batch is a kernel-grid dimension — ONE ``pallas_call`` covers the
+        whole batch (ROADMAP item: no Python unroll over B)."""
         plan = plan.widen()
         from repro.kernels.gemm_q import gemm_q_sparse_kernel
-        outs = [
-            gemm_q_sparse_kernel(x[b], w, plan.row_ids[b], block_rows=block,
-                                 interpret=self.interpret)
-            for b in range(x.shape[0])
-        ]
-        return jnp.stack(outs)
+        return gemm_q_sparse_kernel(x, w, plan.row_ids, block_rows=block,
+                                    interpret=self.interpret)
 
     def attention(self, q, k, v, o_reuse, plan: DispatchPlan,
                   spec: SparseAttentionSpec, *, scale: Optional[float] = None,
@@ -117,16 +119,13 @@ class PallasBackend:
 
     def gemm_o(self, o_tok, w, plan: DispatchPlan, bias: jax.Array, *,
                block: int) -> jax.Array:
+        """Batched in the kernel grid, like :meth:`gemm_q`."""
         plan = plan.widen()
         from repro.kernels.gemm_o import gemm_o_sparse_kernel
-        outs = [
-            gemm_o_sparse_kernel(
-                o_tok[b].transpose(1, 0, 2), w, bias[b], plan.row_ids[b],
-                plan.head_ids[b], plan.head_cnt[b], block_rows=block,
-                interpret=self.interpret)
-            for b in range(o_tok.shape[0])
-        ]
-        return jnp.stack(outs)
+        return gemm_o_sparse_kernel(
+            o_tok.transpose(0, 2, 1, 3), w, bias, plan.row_ids,
+            plan.head_ids, plan.head_cnt, block_rows=block,
+            interpret=self.interpret)
 
 
 _XLA = XlaBackend()

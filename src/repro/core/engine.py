@@ -35,9 +35,15 @@ The symbol producer is pluggable (``EngineConfig.strategy`` — a
 :mod:`repro.core.strategy` registry name, resolved once at trace time):
 the paper's §3.3 rule is the ``"flashomni"`` strategy; ``"cache-all"``
 (FORA/TaylorSeer), ``"skip-only"`` (SpargeAttn), ``"sliding-window"``
-(DiTFastAttnV2) and ``"multi-granularity"`` tables ride the same engine
-and kernels unchanged.  :func:`refresh_symbols` keeps the seed §3.3 body
-verbatim as the bit-parity oracle for the ``flashomni`` strategy.
+(DiTFastAttnV2), ``"multi-granularity"`` tables and ``"step-phased"``
+(per-step re-classification) ride the same engine and kernels unchanged.
+:func:`refresh_symbols` keeps the seed §3.3 body verbatim as the
+bit-parity oracle for the ``flashomni`` strategy.  Whole (step × layer)
+deployment plans are TRACED data: :func:`resolve_schedule` canonicalizes
+the config into a :class:`~repro.core.schedule.SparsitySchedule`, and
+``update_layer`` accepts a traced ``strategy_id`` over a schedule's
+static strategy set (``strategy.emit_switch``) plus traced
+``layer_idx``/``step_idx`` context.
 
     dispatch_layer ──► get_backend(cfg) ──► backend.{gemm_q, attention,
                                                       gemm_o}(…, plan)
@@ -66,7 +72,8 @@ from repro.core.attention import SparseAttentionSpec, dense_attention
 from repro.core.backend import get_backend
 from repro.core.masks import MaskConfig
 from repro.core.plan import DispatchPlan, build_dispatch_plan, empty_plan_like
-from repro.core.strategy import SparsityStrategy, StrategyContext, get_strategy
+from repro.core.strategy import (SparsityStrategy, StrategyContext,
+                                 emit_switch, get_strategy)
 from repro.core.symbols import (
     capacity_for,
     clamp_mask_topk,
@@ -82,6 +89,7 @@ __all__ = [
     "DispatchPlan",
     "init_layer_state",
     "is_update_step",
+    "resolve_schedule",
     "update_layer",
     "dispatch_layer",
     "plan_from_state",
@@ -105,6 +113,9 @@ class EngineConfig:
     backend: str = "xla"              # "xla" | "pallas" | "auto"
     interpret: Optional[bool] = None  # Pallas interpret mode (None: off-TPU)
     strategy: str = "flashomni"       # sparse-symbol producer (registry name)
+    schedule: Optional[str] = None    # named SparsitySchedule preset (overrides
+                                      # the strategy/interval mapping in
+                                      # resolve_schedule; see core.schedule)
 
     # Capacity bookkeeping.  The single source of truth is the COMPRESSED
     # granularity capacity (symbols live there); block-granularity caps are
@@ -170,11 +181,58 @@ def init_layer_state(
 
 
 def is_update_step(step: int, cfg: EngineConfig) -> bool:
-    """Python-level Update/Dispatch schedule (steps are separate jit calls)."""
+    """Update/Dispatch phase of one step (warmup + every ``interval``).
+
+    :func:`resolve_schedule` bakes this rule into the per-step ``mode``
+    array of a :class:`~repro.core.schedule.SparsitySchedule`, which the
+    single-scan sampler switches on; this Python predicate remains for
+    host-side schedule construction and diagnostics.
+    """
     m = cfg.mask
     if step < m.warmup_steps:
         return True
     return (step - m.warmup_steps) % m.interval == 0
+
+
+_SCHEDULE_CACHE: dict = {}
+
+
+def resolve_schedule(cfg: EngineConfig, num_steps: int, n_layers: int, *,
+                     schedule=None, layer_strategies=None,
+                     force_dense: bool = False):
+    """Resolve the engine config into a canonical SparsitySchedule.
+
+    ``EngineConfig.strategy`` / ``layer_strategies`` / ``mask.interval`` /
+    ``mask.warmup_steps`` (and the ``EngineConfig.schedule`` named preset)
+    collapse into one (step × layer) traced table — see
+    :mod:`repro.core.schedule`.  An explicit ``schedule`` argument (name or
+    prebuilt :class:`SparsitySchedule`) wins over everything.
+
+    Resolution is MEMOIZED for hashable specs (registry names + frozen
+    configs) so repeated calls return the SAME schedule object — the
+    sampler's jit cache keys on the schedule's strategy identities, and a
+    stable resolution means the second request reuses the first request's
+    compiled executable instead of re-tracing.
+    """
+    from repro.core.schedule import SparsitySchedule, get_schedule
+    try:
+        key = (cfg, num_steps, n_layers, schedule,
+               None if layer_strategies is None else tuple(layer_strategies),
+               force_dense)
+        hash(key)
+    except TypeError:
+        key = None              # unhashable spec (ad-hoc objects): no memo
+    if key is not None and key in _SCHEDULE_CACHE:
+        return _SCHEDULE_CACHE[key]
+    if schedule is not None and not force_dense:
+        sched = get_schedule(schedule, cfg, num_steps, n_layers)
+    else:
+        sched = SparsitySchedule.from_config(cfg, num_steps, n_layers,
+                                             layer_strategies=layer_strategies,
+                                             force_dense=force_dense)
+    if key is not None:
+        _SCHEDULE_CACHE[key] = sched
+    return sched
 
 
 # ---------------------------------------------------------------------------
@@ -274,23 +332,40 @@ def update_layer(
     heads: int,
     freqs: Optional[jax.Array] = None,
     strategy: Optional[str | SparsityStrategy] = None,
-    layer_idx: Optional[int] = None,
+    layer_idx: Optional[jax.Array] = None,
+    strategy_id: Optional[jax.Array] = None,
+    strategies: Optional[tuple] = None,
+    step_idx: Optional[jax.Array] = None,
+    num_steps: Optional[int] = None,
 ) -> tuple[jax.Array, LayerState]:
     """Full attention + symbol/cache refresh (paper *Update* phase).
 
-    The sparse-symbol producer is resolved ONCE here (Python/trace time)
-    from ``cfg.strategy``; ``strategy`` overrides it per call (the models
-    thread per-layer tables through this), and ``layer_idx`` reaches the
-    strategy's :class:`~repro.core.strategy.StrategyContext` when the
-    model unrolls layers (``None`` under ``lax.scan``).
+    Two ways to pick the sparse-symbol producer:
+
+      * static — resolved ONCE at trace time from ``cfg.strategy``
+        (``strategy`` overrides it per call);
+      * scheduled — ``strategies`` (a schedule's static active set) plus a
+        TRACED ``strategy_id`` scalar, dispatched via
+        :func:`~repro.core.strategy.emit_switch`.  This is how the scanned
+        block body threads per-layer deployment tables without unrolling.
+
+    ``layer_idx`` / ``step_idx`` (traced scalars under the model/pipeline
+    scans) and the static ``num_steps`` reach the strategy's
+    :class:`~repro.core.strategy.StrategyContext`.
     """
     b, n, dm = x.shape
-    strat = get_strategy(cfg.strategy if strategy is None else strategy)
     q, k = _qk(params, x, heads, freqs)
     v = _project_heads(x, params.wv, heads)
     o = dense_attention(q, k, v)                               # (B,H,N,dh)
-    syms = strat.emit(q, k, StrategyContext(
-        cfg=cfg, n_text=n_text, n_tokens=n, layer_idx=layer_idx))
+    ctx = StrategyContext(cfg=cfg, n_text=n_text, n_tokens=n,
+                          layer_idx=layer_idx, step_idx=step_idx,
+                          num_steps=num_steps)
+    if strategies is not None:
+        sid = jnp.zeros((), jnp.int32) if strategy_id is None else strategy_id
+        syms = emit_switch(sid, q, k, ctx, strategies)
+    else:
+        strat = get_strategy(cfg.strategy if strategy is None else strategy)
+        syms = strat.emit(q, k, ctx)
     s_c, s_s, m_c, m_s = syms.s_c, syms.s_s, syms.m_c, syms.m_s
 
     o_tok = o.transpose(0, 2, 1, 3)                            # (B,N,H,dh)

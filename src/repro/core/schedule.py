@@ -1,0 +1,307 @@
+"""Scan-native sparsity schedules — the (step × layer) plan as traced data.
+
+FlashOmni's Update–Dispatch schedule (paper §3.2) and its deployment
+tables (the HunyuanVideo 1.5× per-layer configuration, Sparse VideoGen's
+per-step head re-classification) used to live OUTSIDE the compiled
+program: ``pipeline.sample`` was a Python loop juggling three separate
+jits, and any per-layer strategy table unrolled the block scan, so the
+HLO grew with model depth.  :class:`SparsitySchedule` turns the whole
+schedule into a pytree the compiled program scans over:
+
+  * ``mode``          — ``(num_steps,)`` int32 per-step phase array
+    (``MODE_DENSE`` / ``MODE_UPDATE`` / ``MODE_DISPATCH``), generalizing
+    the Python-level ``is_update_step`` decision into data that a single
+    ``lax.switch`` consumes inside one ``lax.scan`` over steps.
+  * ``strategy_ids``  — ``(num_steps, n_layers)`` int32 table over
+    ``strategies``, the schedule's static active set of sparse-symbol
+    producers.  ``models.dit`` threads one traced row per step through the
+    scanned block body (``strategy.emit_switch``), so a Hunyuan-depth
+    per-layer table keeps a one-block-sized HLO.
+  * ``strategies``    — the static tuple of resolved
+    :class:`~repro.core.strategy.SparsityStrategy` instances the id table
+    indexes (pytree aux data — part of the jit closure, not traced).
+
+Construction: :meth:`SparsitySchedule.from_config` canonicalizes an
+:class:`~repro.core.engine.EngineConfig` — ``strategy`` /
+``layer_strategies`` / ``interval`` / ``warmup_steps`` — into a schedule.
+A ``multi-granularity`` strategy with a ``layer_assign`` table is expanded
+into per-layer variants (deduplicated by head template) with the id table
+pointing each layer at its variant: the deployment table IS the schedule.
+
+Named schedules (``register_schedule`` / ``get_schedule``) package whole
+deployment recipes; built-ins:
+
+  ``hunyuan-1.5x`` — the paper's HunyuanVideo 1.5× table: skip-only
+                     boundary layers, flashomni/sliding-window striped
+                     heads in the interior, expanded per layer.
+  ``step-ramp``    — denoising-phase ramp: conservative ``skip-only``
+                     while structure forms, the full ``flashomni`` rule in
+                     the middle, ``cache-all`` for the late near-static
+                     steps (the direction of the paper's Fig. 7 density
+                     trend).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.strategy import (MultiGranularityStrategy, SparsityStrategy,
+                                 get_strategy)
+
+__all__ = [
+    "MODE_DENSE",
+    "MODE_UPDATE",
+    "MODE_DISPATCH",
+    "MODE_NAMES",
+    "SparsitySchedule",
+    "strategy_table",
+    "register_schedule",
+    "get_schedule",
+    "available_schedules",
+    "schedule_summaries",
+]
+
+MODE_DENSE, MODE_UPDATE, MODE_DISPATCH = 0, 1, 2
+MODE_NAMES = ("dense", "update", "dispatch")
+
+
+def _mode_array(cfg, num_steps: int) -> np.ndarray:
+    """Per-step Update/Dispatch phases from the config's warmup/interval."""
+    from repro.core.engine import is_update_step
+    return np.asarray([MODE_UPDATE if is_update_step(i, cfg) else MODE_DISPATCH
+                       for i in range(num_steps)], np.int32)
+
+
+def _expand_layer_table(spec: Union[str, SparsityStrategy], n_layers: int):
+    """Resolve one strategy spec into ``(strategies, per-layer ids)``.
+
+    A ``multi-granularity`` strategy carrying a ``layer_assign`` table is
+    expanded into per-layer variants — deduplicated by head template so
+    e.g. the ``hunyuan-1.5x`` preset yields two entries (boundary,
+    interior) rather than ``n_layers`` — with the id list pointing each
+    layer at its variant.  Everything else maps every layer to one entry.
+    """
+    strat = get_strategy(spec)
+    if isinstance(strat, MultiGranularityStrategy) and strat.layer_assign:
+        uniq: list = []
+        ids: list[int] = []
+        by_template: dict = {}
+        variants = strat.per_layer(n_layers)
+        for i in range(n_layers):
+            key = strat._template(i)
+            if key not in by_template:
+                by_template[key] = len(uniq)
+                uniq.append(variants[i])
+            ids.append(by_template[key])
+        return tuple(uniq), ids
+    return (strat,), [0] * n_layers
+
+
+def strategy_table(layer_strategies: Sequence, cfg, n_layers: int):
+    """Canonicalize a per-layer spec table into ``(strategies, id row)``.
+
+    ``layer_strategies`` is a length-``n_layers`` sequence of registry
+    names / strategy instances; ``None`` entries fall back to
+    ``cfg.strategy``.  Specs are deduplicated (by name for registry
+    strings, by identity for instances) so the returned active set stays
+    one-entry-per-distinct-producer and the int32 id row indexes it.
+
+    An entry that is itself a ``multi-granularity`` strategy carrying a
+    ``layer_assign`` table is pinned to ITS POSITION's template (the list
+    position is the layer index), matching what the old unrolled path's
+    ``layer_idx`` threading produced — pinned variants are deduplicated by
+    template like :func:`_expand_layer_table`.
+    """
+    if len(layer_strategies) != n_layers:
+        raise ValueError(
+            f"layer_strategies has {len(layer_strategies)} entries for "
+            f"{n_layers} layers")
+    uniq: list = []
+    ids: list[int] = []
+    by_spec: dict = {}
+    for i, s in enumerate(layer_strategies):
+        spec = cfg.strategy if s is None else s
+        strat = get_strategy(spec)
+        key = spec if isinstance(spec, str) else id(spec)
+        if isinstance(strat, MultiGranularityStrategy) and strat.layer_assign:
+            tmpl = strat._template(i)
+            key = (key, tmpl)
+            if key not in by_spec:
+                by_spec[key] = len(uniq)
+                uniq.append(MultiGranularityStrategy(
+                    children=strat.children, head_assign=tmpl,
+                    name=f"{strat.name}[layer {i}]"))
+        elif key not in by_spec:
+            by_spec[key] = len(uniq)
+            uniq.append(strat)
+        ids.append(by_spec[key])
+    return tuple(uniq), np.asarray(ids, np.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparsitySchedule:
+    """The (step × layer) sparsity plan as a traced pytree (see module doc).
+
+    Leaves: ``mode`` (S,) int32 and ``strategy_ids`` (S, L) int32.
+    Aux (static): ``strategies``, the tuple the id table indexes.
+    """
+
+    mode: jax.Array
+    strategy_ids: jax.Array
+    strategies: tuple = ()
+
+    # -- pytree protocol (strategies are static aux data) --
+    def tree_flatten(self):
+        return (self.mode, self.strategy_ids), self.strategies
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(mode=leaves[0], strategy_ids=leaves[1], strategies=aux)
+
+    @property
+    def num_steps(self) -> int:
+        return self.mode.shape[0]
+
+    @property
+    def n_layers(self) -> int:
+        return self.strategy_ids.shape[-1]
+
+    def kinds(self) -> list[str]:
+        """Host-side per-step phase names (trace/diagnostics)."""
+        return [MODE_NAMES[int(m)] for m in np.asarray(self.mode)]
+
+    def validate(self) -> "SparsitySchedule":
+        if self.mode.ndim != 1 or self.strategy_ids.ndim != 2:
+            raise ValueError(
+                f"schedule shapes: mode {self.mode.shape}, strategy_ids "
+                f"{self.strategy_ids.shape}; want (S,) and (S, L)")
+        if self.strategy_ids.shape[0] != self.num_steps:
+            raise ValueError(
+                f"strategy_ids covers {self.strategy_ids.shape[0]} steps, "
+                f"mode covers {self.num_steps}")
+        if not self.strategies:
+            raise ValueError("schedule has no strategies")
+        ids = np.asarray(self.strategy_ids)
+        if ids.min() < 0 or ids.max() >= len(self.strategies):
+            raise ValueError(
+                f"strategy ids span [{ids.min()}, {ids.max()}] but only "
+                f"{len(self.strategies)} strategies are registered in the "
+                "schedule")
+        mode = np.asarray(self.mode)
+        if mode.min() < MODE_DENSE or mode.max() > MODE_DISPATCH:
+            raise ValueError(f"mode values outside {MODE_NAMES}: {mode}")
+        return self
+
+    # -- constructors -----------------------------------------------------
+
+    @classmethod
+    def from_config(cls, cfg, num_steps: int, n_layers: int, *,
+                    layer_strategies: Optional[Sequence] = None,
+                    force_dense: bool = False) -> "SparsitySchedule":
+        """Canonicalize an ``EngineConfig`` into a schedule.
+
+        Resolution order: ``force_dense`` (all-dense baseline) →
+        ``layer_strategies`` (explicit per-layer table, ``None`` entries
+        fall back to ``cfg.strategy``) → ``cfg.schedule`` (named preset) →
+        ``cfg.strategy`` (expanded when it carries a layer table).
+        """
+        if force_dense:
+            return cls(mode=jnp.zeros((num_steps,), jnp.int32),
+                       strategy_ids=jnp.zeros((num_steps, n_layers), jnp.int32),
+                       strategies=(get_strategy(cfg.strategy),)).validate()
+        if layer_strategies is not None:
+            uniq, ids = strategy_table(layer_strategies, cfg, n_layers)
+            return cls.from_table(cfg, num_steps, uniq, ids)
+        named = getattr(cfg, "schedule", None)
+        if named is not None:
+            return get_schedule(named, cfg, num_steps, n_layers)
+        strategies, ids = _expand_layer_table(cfg.strategy, n_layers)
+        return cls.from_table(cfg, num_steps, strategies, ids)
+
+    @classmethod
+    def from_table(cls, cfg, num_steps: int, strategies: tuple,
+                   layer_ids: Sequence[int]) -> "SparsitySchedule":
+        """Schedule with a step-constant per-layer id row and the config's
+        Update/Dispatch mode pattern."""
+        row = np.asarray(layer_ids, np.int32)
+        return cls(mode=jnp.asarray(_mode_array(cfg, num_steps)),
+                   strategy_ids=jnp.broadcast_to(
+                       row[None, :], (num_steps, row.shape[0])).copy(),
+                   strategies=tuple(strategies)).validate()
+
+
+# ---------------------------------------------------------------------------
+# Named-schedule registry (deployment recipes)
+# ---------------------------------------------------------------------------
+
+ScheduleFactory = Callable[[Any, int, int], SparsitySchedule]
+
+_SCHEDULES: dict[str, ScheduleFactory] = {}
+_SUMMARIES: dict[str, str] = {}
+
+
+def register_schedule(name: str, factory: ScheduleFactory,
+                      summary: str = "") -> None:
+    """Register ``factory(cfg, num_steps, n_layers) -> SparsitySchedule``."""
+    _SCHEDULES[name] = factory
+    _SUMMARIES[name] = summary
+
+
+def available_schedules() -> tuple[str, ...]:
+    return tuple(_SCHEDULES)
+
+
+def schedule_summaries() -> dict[str, str]:
+    """name -> one-line description (docs / --help / ROADMAP table)."""
+    return dict(_SUMMARIES)
+
+
+def get_schedule(spec: Union[str, SparsitySchedule], cfg, num_steps: int,
+                 n_layers: int) -> SparsitySchedule:
+    """Resolve a named schedule (or pass a prebuilt one through)."""
+    if isinstance(spec, SparsitySchedule):
+        if spec.num_steps != num_steps or spec.n_layers != n_layers:
+            raise ValueError(
+                f"schedule is ({spec.num_steps} steps, {spec.n_layers} "
+                f"layers); the run wants ({num_steps}, {n_layers})")
+        return spec.validate()
+    try:
+        factory = _SCHEDULES[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown sparsity schedule {spec!r}; registered: "
+            f"{available_schedules()}") from None
+    return factory(cfg, num_steps, n_layers).validate()
+
+
+def _hunyuan_schedule(cfg, num_steps: int, n_layers: int) -> SparsitySchedule:
+    strategies, ids = _expand_layer_table(get_strategy("hunyuan-1.5x"),
+                                          n_layers)
+    return SparsitySchedule.from_table(cfg, num_steps, strategies, ids)
+
+
+def _step_ramp_schedule(cfg, num_steps: int, n_layers: int) -> SparsitySchedule:
+    names = ("skip-only", "flashomni", "cache-all")
+    strategies = tuple(get_strategy(n) for n in names)
+    phase = np.minimum((np.arange(num_steps) * len(names)) // max(num_steps, 1),
+                       len(names) - 1).astype(np.int32)
+    ids = np.broadcast_to(phase[:, None], (num_steps, n_layers)).copy()
+    return SparsitySchedule(mode=jnp.asarray(_mode_array(cfg, num_steps)),
+                            strategy_ids=jnp.asarray(ids),
+                            strategies=strategies)
+
+
+register_schedule(
+    "hunyuan-1.5x", _hunyuan_schedule,
+    "paper HunyuanVideo 1.5× deployment table expanded per layer "
+    "(skip-only boundaries, striped flashomni/sliding-window interior)")
+register_schedule(
+    "step-ramp", _step_ramp_schedule,
+    "denoising-phase ramp: skip-only -> flashomni -> cache-all over the "
+    "step axis (uniform across layers)")

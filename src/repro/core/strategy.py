@@ -28,8 +28,16 @@ Built-in strategies and the papers/baselines they reproduce:
   ``multi-granularity``— per-layer / per-head table of child strategies
                          (Sparse VideoGen's spatial/temporal head classes,
                          Sparse-vDiT's per-head fixed patterns).
+  ``step-phased``      — SVG-style per-step re-classification: switches
+                         between phase children at traced step boundaries
+                         (reads ``StrategyContext.step_idx``).
   ``hunyuan-1.5x``     — the paper's HunyuanVideo 1.5× configuration shape
                          expressed as a multi-granularity table.
+
+Schedules: :func:`emit_switch` dispatches over a SET of strategies through
+a TRACED strategy id (``lax.switch`` with a uniform ``(q, k)`` operand
+signature), which is what :mod:`repro.core.schedule` scans — per-layer /
+per-step deployment tables become data, not trace structure.
 
 All strategies are pure ``jnp`` and jit-safe; the clamp + packing step is
 shared (:func:`finalize_symbols`) so every producer honours the TPU
@@ -52,6 +60,7 @@ __all__ = [
     "SymbolSet",
     "SparsityStrategy",
     "finalize_symbols",
+    "emit_switch",
     "register_strategy",
     "get_strategy",
     "available_strategies",
@@ -61,21 +70,28 @@ __all__ = [
     "SkipOnlyStrategy",
     "SlidingWindowStrategy",
     "MultiGranularityStrategy",
+    "StepPhasedStrategy",
 ]
 
 
 class StrategyContext(NamedTuple):
-    """Static per-call context handed to ``emit`` (part of the jit closure).
+    """Per-call context handed to ``emit``.
 
-    ``cfg`` is the :class:`~repro.core.engine.EngineConfig`; ``layer_idx``
-    is the Python-level layer index when the model unrolls layers (per-layer
-    strategy tables), ``None`` under ``lax.scan``.
+    ``cfg``, ``n_text``, ``n_tokens`` and ``num_steps`` are static (part of
+    the jit closure).  ``layer_idx`` and ``step_idx`` are TRACED scalars
+    under the scan-native schedule (``models.dit`` scans layers,
+    ``diffusion.pipeline`` scans steps), so strategies may only use them in
+    traced arithmetic (``jnp.where`` / ``lax.switch``), never in Python
+    control flow.  Both are ``None`` for direct single-layer calls outside
+    a schedule (``examples/quickstart.py`` style).
     """
 
     cfg: Any
     n_text: int
     n_tokens: int
-    layer_idx: Optional[int] = None
+    layer_idx: Optional[Any] = None    # traced int32 scalar under lax.scan
+    step_idx: Optional[Any] = None     # traced int32 scalar under the step scan
+    num_steps: Optional[int] = None    # static schedule length (when known)
 
 
 class SymbolSet(NamedTuple):
@@ -129,6 +145,27 @@ def _full(q: jax.Array, t: int, value: bool = True) -> jax.Array:
     """(B, H, T) constant mask matching q's batch/head dims."""
     b, h = q.shape[0], q.shape[1]
     return jnp.full((b, h, t), value, jnp.bool_)
+
+
+def emit_switch(strategy_id: jax.Array, q: jax.Array, k: jax.Array,
+                ctx: StrategyContext,
+                strategies: Sequence[Union[str, "SparsityStrategy"]]) -> SymbolSet:
+    """Scan-compatible emitter dispatch: ``lax.switch`` over strategies.
+
+    ``strategy_id`` is a TRACED int32 scalar (an entry of a
+    :class:`~repro.core.schedule.SparsitySchedule` strategy-id table);
+    ``strategies`` is the schedule's static active set.  Every branch takes
+    the same uniform ``(q, k)`` operand signature and every
+    :class:`SymbolSet` field has a shape/dtype fixed by ``(B, H, T)`` and
+    the config capacities alone, so the switch is well-typed for ANY mix of
+    registered producers — this is what lets per-layer deployment tables
+    ride a single scanned block body instead of unrolling the model.
+    """
+    resolved = tuple(get_strategy(s) for s in strategies)
+    if len(resolved) == 1:
+        return resolved[0].emit(q, k, ctx)
+    branches = [lambda q, k, s=s: s.emit(q, k, ctx) for s in resolved]
+    return jax.lax.switch(jnp.asarray(strategy_id, jnp.int32), branches, q, k)
 
 
 # ---------------------------------------------------------------------------
@@ -294,13 +331,16 @@ class MultiGranularityStrategy:
                        the Q/K of the heads assigned to it.
     ``head_assign``  — length-H (or shorter, tiled) template of child
                        indices; default stripes heads across children.
-    ``layer_assign`` — ``{layer_idx: template | child_idx}`` overrides,
-                       active only when the model passes ``layer_idx``
-                       (i.e. unrolled via ``denoise_step``'s
-                       ``layer_strategies`` — use :meth:`per_layer` to
-                       expand this strategy into that table).  Under
-                       ``lax.scan`` one trace serves every layer, so
-                       ``layer_idx`` is ``None`` and a warning is issued.
+    ``layer_assign`` — ``{layer_idx: template | child_idx}`` overrides.
+                       ``emit`` itself NEVER reads the layer index (layer
+                       ids are traced under the scanned block body, useless
+                       for Python-side head grouping); the table is instead
+                       routed through the :class:`~repro.core.schedule.
+                       SparsitySchedule` strategy-id table —
+                       ``SparsitySchedule.from_config`` expands the layer
+                       table into per-layer variants (one registry entry
+                       per distinct template, see :meth:`per_layer`) and
+                       points each layer's id at its variant.
     """
 
     name = "multi-granularity"
@@ -317,6 +357,9 @@ class MultiGranularityStrategy:
             self.name = name          # registered presets keep their own name
 
     def _template(self, layer_idx: Optional[int]) -> Optional[tuple[int, ...]]:
+        """The head-assignment template for ``layer_idx`` (layer table →
+        head template fallback), used by the SCHEDULE-side expansion only —
+        ``emit`` is layer-agnostic."""
         a: Any = None
         if layer_idx is not None:
             a = self.layer_assign.get(layer_idx)
@@ -326,32 +369,26 @@ class MultiGranularityStrategy:
             return None
         return (a,) if isinstance(a, int) else tuple(a)
 
-    def _assignment(self, layer_idx: Optional[int], heads: int) -> list[int]:
-        a = self._template(layer_idx)
+    def _assignment(self, heads: int) -> list[int]:
+        a = self._template(None)
         if a is None:
             return [h % len(self.children) for h in range(heads)]
         return [a[h % len(a)] for h in range(heads)]
 
     def per_layer(self, n_layers: int) -> list["MultiGranularityStrategy"]:
-        """Expand the layer table into a ``layer_strategies`` list: one
-        strategy per layer with that layer's assignment pinned, for
-        ``dit.denoise_step(..., layer_strategies=mg.per_layer(L))``."""
+        """Expand the layer table into one pinned-template strategy per
+        layer.  ``SparsitySchedule.from_config`` calls this (deduplicated)
+        to turn ``layer_assign`` into strategy-id table entries; it is also
+        usable directly as a ``denoise_step(..., layer_strategies=...)``
+        table."""
         return [MultiGranularityStrategy(children=self.children,
                                          head_assign=self._template(i),
                                          name=f"{self.name}[layer {i}]")
                 for i in range(n_layers)]
 
     def emit(self, q, k, ctx: StrategyContext) -> SymbolSet:
-        if self.layer_assign and ctx.layer_idx is None:
-            import warnings
-            warnings.warn(
-                f"{self.name}: layer_assign is set but no layer_idx reached "
-                "the strategy (scanned layers share one trace); every layer "
-                "uses the head template.  Unroll with "
-                "denoise_step(layer_strategies=strategy.per_layer(L)) to "
-                "apply the per-layer table.", stacklevel=2)
         heads = q.shape[1]
-        assign = self._assignment(ctx.layer_idx, heads)
+        assign = self._assignment(heads)
         groups: dict[int, list[int]] = {}
         for h, a in enumerate(assign):
             groups.setdefault(a, []).append(h)
@@ -380,6 +417,70 @@ class MultiGranularityStrategy:
                          q_scores=sel("q_scores"), kv_scores=sel("kv_scores"))
 
 
+class StepPhasedStrategy:
+    """Schedule-varying producer: re-classify at step boundaries.
+
+    Sparse VideoGen re-classifies attention heads per denoising step;
+    Sparse-vDiT fixes per-head patterns over a step schedule.  Both need
+    the CURRENT STEP inside ``emit`` — this strategy reads the traced
+    ``ctx.step_idx`` and ``lax.switch``es between its phase children at the
+    configured boundaries, so one trace serves the whole step scan.
+
+    ``phases``      — child strategies, one per phase (any registry
+                      names/instances; e.g. two ``multi-granularity``
+                      tables with swapped head classes = SVG head
+                      re-classification).
+    ``boundaries``  — phase-change steps, ascending.  Floats are fractions
+                      of ``ctx.num_steps`` (requires a schedule-driven call
+                      so ``num_steps`` is known); ints are absolute step
+                      indices.  ``len(phases) == len(boundaries) + 1``.
+
+    Outside a schedule (``step_idx is None`` — direct ``update_layer``
+    calls) phase 0 is used.
+    """
+
+    name = "step-phased"
+
+    def __init__(self, phases: Sequence[Union[str, SparsityStrategy]] = (
+                     "flashomni", "cache-all"),
+                 boundaries: Sequence[Union[int, float]] = (0.5,),
+                 name: Optional[str] = None):
+        self.phases = tuple(get_strategy(p) for p in phases)
+        self.boundaries = tuple(boundaries)
+        if len(self.phases) != len(self.boundaries) + 1:
+            raise ValueError(
+                f"{len(self.phases)} phases need {len(self.phases) - 1} "
+                f"boundaries, got {len(self.boundaries)}")
+        if name is not None:
+            self.name = name
+
+    def _boundary_steps(self, num_steps: Optional[int]) -> list[int]:
+        steps = []
+        for b in self.boundaries:
+            if isinstance(b, float):
+                if num_steps is None:
+                    raise ValueError(
+                        f"{self.name}: fractional boundary {b} needs "
+                        "StrategyContext.num_steps (run under a "
+                        "SparsitySchedule)")
+                b = int(round(b * num_steps))
+            steps.append(int(b))
+        if steps != sorted(steps):
+            raise ValueError(f"{self.name}: boundaries must ascend: {steps}")
+        return steps
+
+    def emit(self, q, k, ctx: StrategyContext) -> SymbolSet:
+        if ctx.step_idx is None or len(self.phases) == 1:
+            return self.phases[0].emit(q, k, ctx)
+        steps = self._boundary_steps(ctx.num_steps)
+        sidx = jnp.asarray(ctx.step_idx, jnp.int32)
+        phase = jnp.zeros((), jnp.int32)
+        for s in steps:
+            phase = phase + (sidx >= s).astype(jnp.int32)
+        branches = [lambda q, k, c=c: c.emit(q, k, ctx) for c in self.phases]
+        return jax.lax.switch(phase, branches, q, k)
+
+
 register_strategy(
     "flashomni", FlashOmniStrategy,
     "paper §3.3: C∧G cummass caching + cummass BSS (seed rule, bit-exact)")
@@ -396,6 +497,10 @@ register_strategy(
     "multi-granularity", MultiGranularityStrategy,
     "per-layer/per-head table of child strategies (SVG / Sparse-vDiT)")
 register_strategy(
+    "step-phased", StepPhasedStrategy,
+    "SVG-style per-step re-classification: switch phase children at "
+    "traced step boundaries")
+register_strategy(
     "hunyuan-1.5x",
     lambda: MultiGranularityStrategy(
         children=("flashomni", "skip-only", "sliding-window"),
@@ -406,5 +511,5 @@ register_strategy(
         layer_assign={0: 1, 1: 1},
         name="hunyuan-1.5x"),
     "paper HunyuanVideo 1.5× table: flashomni/sliding-window striped "
-    "heads; skip-only boundary layers when expanded via per_layer() "
-    "into denoise_step(layer_strategies=...)")
+    "heads; skip-only boundary layers via the schedule's per-layer "
+    "strategy-id table (SparsitySchedule.from_config expansion)")

@@ -1,25 +1,34 @@
 """Text-to-vision diffusion pipeline driving the FlashOmni engine.
 
 Rectified-flow Euler sampler: x_{t+dt} = x_t + v_θ(x_t, t)·dt, t: 0 → 1.
-The Update–Dispatch schedule (paper §3.2) is a Python-level decision per
-step — Update steps compile once, Dispatch steps compile once; symbols and
-TaylorSeer caches flow through the jitted functions as state pytrees.
+
+The Update–Dispatch schedule (paper §3.2) is TRACED DATA: the engine
+config resolves into a :class:`~repro.core.schedule.SparsitySchedule`
+(per-step mode array + (step × layer) strategy-id table) and the whole
+denoise loop compiles ONCE — a single ``lax.scan`` over steps whose body
+``lax.switch``es on the schedule's mode (dense / update / dispatch) and
+threads each step's strategy-id row through the scanned DiT blocks.  One
+executable per sampling configuration, regardless of step count, schedule
+mix, or per-layer deployment tables (enforced by the compile-count test in
+``tests/test_schedule.py``).
 
 The pipeline reports the paper's efficiency accounting per step: density
 (fraction of live attention work, Fig. 7), sparsity (skip/total, Table 1)
-and the attention-FLOP reduction the benchmarks consume.
+and the attention-FLOP reduction the benchmarks consume.  Metrics
+accumulate on device as scan outputs; one host sync after the loop
+materializes the whole trace.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.engine import EngineConfig, is_update_step
+from repro.core.engine import EngineConfig, resolve_schedule
 from repro.core.symbols import unpack_bits
 from repro.models import dit
 
@@ -58,60 +67,105 @@ def pair_sparsity(states, cfg: ArchConfig, ecfg: EngineConfig, n_tokens: int) ->
     return float(_pair_sparsity_device(states, ecfg, n_tokens))
 
 
+# Compiled single-scan samplers, keyed on every static of the trace (model /
+# engine / sampler configs, shapes, metric mode, schedule strategy
+# identities — stable across calls because resolve_schedule memoizes).  A
+# second request with the same configuration reuses the first one's
+# executable; bounded by the number of distinct serving configurations.
+_SAMPLER_CACHE: dict = {}
+
+
 def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
            text_emb: jax.Array, x0: jax.Array, scfg: SamplerConfig = SamplerConfig(),
            patch_embed: Optional[jax.Array] = None,
            trace: Optional[list] = None,
            force_dense: bool = False,
-           layer_strategies: Optional[list] = None):
+           layer_strategies: Optional[list] = None,
+           schedule=None,
+           stats: Optional[dict] = None):
     """Run the full sampling loop.  x0: (B, N_v, patch_dim) Gaussian noise.
 
+    The schedule is resolved ONCE on the host
+    (:func:`repro.core.engine.resolve_schedule`: ``schedule`` — a named
+    preset or prebuilt :class:`~repro.core.schedule.SparsitySchedule` —
+    wins over ``layer_strategies`` wins over ``ecfg.schedule`` /
+    ``ecfg.strategy``), then the entire denoise loop runs as one jitted
+    ``lax.scan`` over ``(step, mode, strategy-id row)``.
+
     ``patch_embed``: (patch_dim, d_model) stub patchifier.  Returns the
-    denoised latents (B, N_v, patch_dim).  ``layer_strategies`` threads a
-    per-layer sparse-symbol producer table into every Update step (see
-    :func:`repro.models.dit.denoise_step`).
+    denoised latents (B, N_v, patch_dim).  ``trace`` (a list) receives one
+    ``{step, kind, density, pair_sparsity}`` dict per step; ``stats`` (a
+    dict) receives ``executables`` (compiled-executable count for this
+    call — exactly 1) and ``schedule`` (the resolved schedule).
     """
     b, nv, pd = x0.shape
     n_tokens = nv + text_emb.shape[1]
+    n_steps = scfg.num_steps
     states = dit.init_engine_states(cfg, ecfg, b, n_tokens)
     if patch_embed is None:
         patch_embed = jax.random.normal(jax.random.PRNGKey(7), (pd, cfg.d_model)) * 0.2
 
-    upd = jax.jit(lambda p, s, xv, te, t: dit.denoise_step(
-        p, cfg, ecfg, s, xv, te, t, mode="update", dtype=scfg.dtype,
-        layer_strategies=layer_strategies))
-    dsp = jax.jit(lambda p, s, xv, te, t: dit.denoise_step(
-        p, cfg, ecfg, s, xv, te, t, mode="dispatch", dtype=scfg.dtype,
-        layer_strategies=layer_strategies))
-    dns = jax.jit(lambda p, s, xv, te, t: dit.denoise_step(
-        p, cfg, ecfg, s, xv, te, t, mode="dense", dtype=scfg.dtype))
-    # Per-step efficiency metrics stay ON DEVICE during the loop; a single
-    # host sync after the last step materializes the whole trace (a
-    # per-step ``float(...)`` would serialize the async dispatch pipeline).
-    met = jax.jit(lambda s: (_density_device(s, ecfg, n_tokens),
-                             _pair_sparsity_device(s, ecfg, n_tokens)))
+    sched = resolve_schedule(ecfg, n_steps, cfg.n_layers, schedule=schedule,
+                             layer_strategies=layer_strategies,
+                             force_dense=force_dense)
+    with_metrics = trace is not None
+    dt = 1.0 / n_steps
 
-    x = x0
-    dt = 1.0 / scfg.num_steps
-    pending: list = []
-    for i in range(scfg.num_steps):
-        t = jnp.full((b,), i * dt, scfg.dtype)
-        xe = (x @ patch_embed).astype(scfg.dtype)
-        if force_dense:
-            v, states = dns(params, states, xe, text_emb, t)
-            kind = "dense"
-        elif is_update_step(i, ecfg):
-            v, states = upd(params, states, xe, text_emb, t)
-            kind = "update"
-        else:
-            v, states = dsp(params, states, xe, text_emb, t)
-            kind = "dispatch"
-        if trace is not None:
-            pending.append((i, kind, met(states)))
-        x = x + v.astype(x.dtype) * dt
-    if trace is not None:
-        for i, kind, (dens, pair_s) in pending:
-            trace.append({"step": i, "kind": kind,
-                          "density": float(dens),
-                          "pair_sparsity": float(pair_s)})
+    def build():
+        def step_fn(mode: str):
+            def f(params, states, xe, te, t, row, i):
+                kw = {}
+                if mode == "update":
+                    kw = dict(strategies=sched.strategies, strategy_row=row,
+                              step_idx=i, num_steps=n_steps)
+                return dit.denoise_step(params, cfg, ecfg, states, xe, te, t,
+                                        mode=mode, dtype=scfg.dtype, **kw)
+            return f
+
+        branches = [step_fn("dense"), step_fn("update"), step_fn("dispatch")]
+
+        def body(params, patch_embed, text_emb, carry, xs):
+            x, states = carry
+            i, mode, row = xs
+            t = (jnp.full((b,), i, jnp.float32) * dt).astype(scfg.dtype)
+            xe = (x @ patch_embed).astype(scfg.dtype)
+            v, states = jax.lax.switch(mode, branches, params, states, xe,
+                                       text_emb, t, row, i)
+            x = x + v.astype(x.dtype) * dt
+            ys = ((_density_device(states, ecfg, n_tokens),
+                   _pair_sparsity_device(states, ecfg, n_tokens))
+                  if with_metrics else None)
+            return (x, states), ys
+
+        def run(params, x0, states, text_emb, patch_embed, mode_arr, id_table):
+            steps = jnp.arange(n_steps, dtype=jnp.int32)
+            (x, states), ys = jax.lax.scan(
+                lambda c, xs: body(params, patch_embed, text_emb, c, xs),
+                (x0, states), (steps, mode_arr, id_table))
+            return x, ys
+
+        return jax.jit(run)
+
+    key = (cfg, ecfg, scfg, n_steps, with_metrics, b, nv, pd,
+           text_emb.shape[1], x0.dtype, text_emb.dtype, patch_embed.dtype,
+           tuple(id(s) for s in sched.strategies))
+    entry = _SAMPLER_CACHE.get(key)
+    if entry is None:
+        # The strategies tuple is pinned alive next to its compiled fn so
+        # the id()-based key can never alias a recycled object.
+        entry = _SAMPLER_CACHE[key] = (build(), sched.strategies)
+    fn = entry[0]
+    x, ys = fn(params, x0, states, text_emb, patch_embed, sched.mode,
+               sched.strategy_ids)
+    if stats is not None:
+        cache_size = getattr(fn, "_cache_size", None)
+        stats["executables"] = int(cache_size()) if cache_size else -1
+        stats["schedule"] = sched
+    if with_metrics:
+        kinds = sched.kinds()
+        dens, pair_s = jax.device_get(ys)      # ONE host sync for the trace
+        for i in range(n_steps):
+            trace.append({"step": i, "kind": kinds[i],
+                          "density": float(dens[i]),
+                          "pair_sparsity": float(pair_s[i])})
     return x

@@ -7,10 +7,13 @@ the Taylor-forecast bias ``B_c``.  The paper relaunches the kernel for its
 two stages on GPU; on TPU both collapse into ONE kernel because the bias is
 simply the accumulator's initial value (DESIGN §2.4).
 
-Structure: grid ``(Cr, F_tiles, Hc)``, with per-row live-head CSR lists in
-scalar memory.  The bias tensor is aliased to the output, so row blocks that
-are never visited (fully cached rows) keep their forecast value — Eq. 4's
-"cache-then-reuse branch terminates immediately" for free.
+Structure: grid ``(B, Cr, F_tiles, Hc)``, with per-row live-head CSR lists
+in scalar memory (flattened over the batch, indexed ``b·Cr + c``) — batch
+is a GRID dimension, so one ``pallas_call`` covers every sample (no Python
+per-sample relaunch; unbatched inputs still accepted).  The bias tensor is
+aliased to the output, so row blocks that are never visited (fully cached
+rows) keep their forecast value — Eq. 4's "cache-then-reuse branch
+terminates immediately" for free.
 """
 
 from __future__ import annotations
@@ -29,17 +32,18 @@ __all__ = ["gemm_o_sparse_kernel"]
 
 
 def _kernel(row_ids_ref, head_ids_ref, head_cnt_ref,
-            o_ref, w_ref, bias_ref, out_ref, acc_ref, *, hc: int):
-    c, hh = pl.program_id(0), pl.program_id(2)
+            o_ref, w_ref, bias_ref, out_ref, acc_ref, *, cr: int, hc: int):
+    bi, c, hh = pl.program_id(0), pl.program_id(1), pl.program_id(3)
+    slot = bi * cr + c
 
     @pl.when(hh == 0)
     def _init():
-        acc_ref[...] = bias_ref[...].astype(jnp.float32)    # B_c as accumulator init
+        acc_ref[...] = bias_ref[0].astype(jnp.float32)  # B_c as accumulator init
 
-    @pl.when(hh < head_cnt_ref[c])
+    @pl.when(hh < head_cnt_ref[slot])
     def _accum():
         acc_ref[...] += jax.lax.dot(
-            o_ref[0].astype(jnp.float32),
+            o_ref[0, 0].astype(jnp.float32),
             w_ref[0].astype(jnp.float32),
             preferred_element_type=jnp.float32,
         )
@@ -48,60 +52,70 @@ def _kernel(row_ids_ref, head_ids_ref, head_cnt_ref,
     # must not store: with the bias-aliased output, re-initializing from
     # ``bias_ref`` would erase (interpret) or re-accumulate (TPU re-fetch
     # across f-tiles) the live slot's already-written result.
-    @pl.when((hh == hc - 1) & (head_cnt_ref[c] > 0))
+    @pl.when((hh == hc - 1) & (head_cnt_ref[slot] > 0))
     def _done():
-        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
 
 
 def gemm_o_sparse_kernel(
-    o_heads: jax.Array,    # (H, N, dh) attention outputs, head-major
+    o_heads: jax.Array,    # (B, H, N, dh) or (H, N, dh) attention outputs
     w: jax.Array,          # (H, dh, F) output projection, per-head
-    bias: jax.Array,       # (N, F) OP_reuse(B_c) — aliased to the output
-    row_ids: jax.Array,    # (Cr,) live row-block ids
-    head_ids: jax.Array,   # (Cr, Hc) live head ids per row block
-    head_cnt: jax.Array,   # (Cr,)
+    bias: jax.Array,       # (B, N, F) or (N, F) OP_reuse(B_c) — aliased to out
+    row_ids: jax.Array,    # (B, Cr) or (Cr,) live row-block ids
+    head_ids: jax.Array,   # (B, Cr, Hc) or (Cr, Hc) live head ids per row
+    head_cnt: jax.Array,   # (B, Cr) or (Cr,)
     *,
     block_rows: int,
     block_f: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    h, n, dh = o_heads.shape
+    squeeze = o_heads.ndim == 3
+    if squeeze:
+        o_heads, bias = o_heads[None], bias[None]
+        row_ids, head_ids, head_cnt = row_ids[None], head_ids[None], head_cnt[None]
+    b, h, n, dh = o_heads.shape
     f = w.shape[-1]
     assert n % block_rows == 0
     block_f = min(block_f, f)
     assert f % block_f == 0
-    cr, hc = head_ids.shape
-    grid = (cr, f // block_f, hc)
+    _, cr, hc = head_ids.shape
+    grid = (b, cr, f // block_f, hc)
+    flat_rows = row_ids.reshape(-1)
     flat_heads = head_ids.reshape(-1)
+    flat_cnt = head_cnt.reshape(-1)
 
-    def o_map(c, fi, hh, rids, hids, hcnt):
-        hh_c = jnp.maximum(jnp.minimum(hh, hcnt[c] - 1), 0)
-        return (hids[c * hc + hh_c], rids[c], 0)
+    def o_map(bi, c, fi, hh, rids, hids, hcnt):
+        slot = bi * cr + c
+        hh_c = jnp.maximum(jnp.minimum(hh, hcnt[slot] - 1), 0)
+        return (bi, hids[slot * hc + hh_c], rids[slot], 0)
 
-    def w_map(c, fi, hh, rids, hids, hcnt):
-        hh_c = jnp.maximum(jnp.minimum(hh, hcnt[c] - 1), 0)
-        return (hids[c * hc + hh_c], 0, fi)
+    def w_map(bi, c, fi, hh, rids, hids, hcnt):
+        slot = bi * cr + c
+        hh_c = jnp.maximum(jnp.minimum(hh, hcnt[slot] - 1), 0)
+        return (hids[slot * hc + hh_c], 0, fi)
 
-    def bias_map(c, fi, hh, rids, hids, hcnt):
-        return (rids[c], fi)
+    def bias_map(bi, c, fi, hh, rids, hids, hcnt):
+        return (bi, rids[bi * cr + c], fi)
 
-    return pl.pallas_call(
-        functools.partial(_kernel, hc=hc),
+    out = pl.pallas_call(
+        functools.partial(_kernel, cr=cr, hc=hc),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, block_rows, dh), o_map),
+                pl.BlockSpec((1, 1, block_rows, dh), o_map),
                 pl.BlockSpec((1, dh, block_f), w_map),
-                pl.BlockSpec((block_rows, block_f), bias_map),
+                pl.BlockSpec((1, block_rows, block_f), bias_map),
             ],
-            out_specs=pl.BlockSpec((block_rows, block_f), bias_map),
+            out_specs=pl.BlockSpec((1, block_rows, block_f), bias_map),
             scratch_shapes=[pltpu.VMEM((block_rows, block_f), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct(bias.shape, bias.dtype),
         input_output_aliases={5: 0},                         # bias -> out
         compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary",
+                                 "arbitrary"),
         ),
         interpret=interpret,
-    )(row_ids, flat_heads, head_cnt, o_heads, w, bias)
+    )(flat_rows, flat_heads, flat_cnt, o_heads, w, bias)
+    return out[0] if squeeze else out

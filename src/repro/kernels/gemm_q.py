@@ -10,6 +10,12 @@ The output is **compact** ``(Cr·bm, F)`` — live blocks in slot order.  The
 FlashOmni attention CSR kernel consumes Q by live-slot index, so the compact
 layout chains into attention without a scatter (layout fusion).  Use
 :func:`repro.kernels.ops.scatter_rows` when the full-shape tensor is needed.
+
+Batching is part of the KERNEL GRID: pass ``x`` as ``(B, N, K)`` with
+``row_ids`` ``(B, Cr)`` and the grid grows a leading batch dimension —
+one ``pallas_call`` covers the whole batch (no Python per-sample relaunch;
+the scalar-prefetched ids are flattened ``(B·Cr,)`` and indexed by
+``b·Cr + c``).  The unbatched ``(N, K)`` / ``(Cr,)`` signature still works.
 """
 
 from __future__ import annotations
@@ -28,61 +34,67 @@ __all__ = ["gemm_q_sparse_kernel"]
 
 
 def _kernel(row_ids_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
-    ki = pl.program_id(2)
+    ki = pl.program_id(3)
 
     @pl.when(ki == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jax.lax.dot(
-        x_ref[...].astype(jnp.float32),
+        x_ref[0].astype(jnp.float32),
         w_ref[...].astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
 
     @pl.when(ki == n_k - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 def gemm_q_sparse_kernel(
-    x: jax.Array,          # (N, K)
+    x: jax.Array,          # (B, N, K) or (N, K)
     w: jax.Array,          # (K, F)
-    row_ids: jax.Array,    # (Cr,) int32 live row-block ids
+    row_ids: jax.Array,    # (B, Cr) or (Cr,) int32 live row-block ids
     *,
     block_rows: int,       # bm — MUST equal the symbol granularity divisor
     block_k: int = 512,
     block_f: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    n, kdim = x.shape
+    squeeze = x.ndim == 2
+    if squeeze:
+        x, row_ids = x[None], row_ids[None]
+    b, n, kdim = x.shape
     f = w.shape[1]
     assert n % block_rows == 0
+    assert row_ids.shape[0] == b
     block_k = min(block_k, kdim)
     block_f = min(block_f, f)
     assert kdim % block_k == 0 and f % block_f == 0
-    cr = row_ids.shape[0]
+    cr = row_ids.shape[-1]
     n_k = kdim // block_k
-    grid = (cr, f // block_f, n_k)
+    grid = (b, cr, f // block_f, n_k)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((block_rows, block_k),
-                             lambda c, fi, ki, ids: (ids[c], ki)),
+                pl.BlockSpec((1, block_rows, block_k),
+                             lambda bi, c, fi, ki, ids: (bi, ids[bi * cr + c], ki)),
                 pl.BlockSpec((block_k, block_f),
-                             lambda c, fi, ki, ids: (ki, fi)),
+                             lambda bi, c, fi, ki, ids: (ki, fi)),
             ],
-            out_specs=pl.BlockSpec((block_rows, block_f),
-                                   lambda c, fi, ki, ids: (c, fi)),
+            out_specs=pl.BlockSpec((1, block_rows, block_f),
+                                   lambda bi, c, fi, ki, ids: (bi, c, fi)),
             scratch_shapes=[pltpu.VMEM((block_rows, block_f), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((cr * block_rows, f), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, cr * block_rows, f), x.dtype),
         compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary",
+                                 "arbitrary"),
         ),
         interpret=interpret,
-    )(row_ids, x, w)
+    )(row_ids.reshape(-1), x, w)
+    return out[0] if squeeze else out

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.configs.registry import get_config, get_smoke
 from repro.core.engine import EngineConfig
 from repro.core.masks import MaskConfig
+from repro.core.schedule import available_schedules
 from repro.core.strategy import available_strategies
 from repro.diffusion.pipeline import SamplerConfig, sample
 from repro.models.registry import get_model
@@ -27,27 +28,36 @@ from repro.models.registry import get_model
 
 def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
                     batch: int = 2, n_vision: int = 96, num_steps: int = 12,
-                    strategy: str = "flashomni"):
+                    strategy: str = "flashomni", schedule: str = None):
+    """``schedule`` names a registered SparsitySchedule preset (e.g.
+    ``hunyuan-1.5x``, ``step-ramp``); it overrides the per-step mapping of
+    ``strategy``.  Either way the whole denoise loop is ONE compiled scan
+    per request shape — concurrent schedule variants each cost a single
+    executable, not three jits × steps."""
     cfg = get_smoke(arch) if smoke else get_config(arch)
     ecfg = EngineConfig(mask=MaskConfig(
         tau_q=0.5, tau_kv=0.15, interval=4, order=1, degrade=0.3,
         block_q=16, block_kv=16, pool=32, warmup_steps=2),
-        strategy=strategy)
+        strategy=strategy, schedule=schedule)
     from repro.models import dit as ditmod
     params = ditmod.init_params(cfg, jax.random.PRNGKey(0))
     results = []
+    label = schedule or strategy
     for req in range(num_requests):
         key = jax.random.PRNGKey(100 + req)
         x0 = jax.random.normal(key, (batch, n_vision, cfg.patch_dim))
         text = jax.random.normal(key, (batch, cfg.n_text_tokens, cfg.d_model))
         trace: list = []
+        stats: dict = {}
         t0 = time.time()
         out = sample(params, cfg, ecfg, text_emb=text, x0=x0,
-                     scfg=SamplerConfig(num_steps=num_steps), trace=trace)
+                     scfg=SamplerConfig(num_steps=num_steps), trace=trace,
+                     stats=stats)
         dt = time.time() - t0
         dens = [s["density"] for s in trace if s["kind"] == "dispatch"]
-        print(f"[serve] req {req} [{strategy}]: {num_steps} steps in {dt:.2f}s  "
+        print(f"[serve] req {req} [{label}]: {num_steps} steps in {dt:.2f}s  "
               f"mean dispatch density {sum(dens)/max(len(dens),1):.3f}  "
+              f"executables {stats['executables']}  "
               f"out {out.shape} finite={bool(jnp.isfinite(out).all())}")
         results.append(out)
     return results
@@ -90,10 +100,14 @@ def main():
     ap.add_argument("--strategy", default="flashomni",
                     choices=available_strategies(),
                     help="sparse-symbol producer for --kind diffusion")
+    ap.add_argument("--schedule", default=None,
+                    choices=available_schedules(),
+                    help="named SparsitySchedule preset (overrides the "
+                         "--strategy per-step mapping)")
     args = ap.parse_args()
     if args.kind == "diffusion":
         serve_diffusion(args.arch, smoke=not args.full,
-                        strategy=args.strategy)
+                        strategy=args.strategy, schedule=args.schedule)
     else:
         serve_lm(args.arch, smoke=not args.full)
 

@@ -6,12 +6,15 @@ the FlashOmni Update–Dispatch engine (``repro.core.engine``).  The text
 encoder and VAE/patchifier are STUBS per the task spec — inputs are
 precomputed text embeddings and latent-patch embeddings.
 
-Two jitted step functions exist per the engine's two phases:
-  * ``denoise_step(..., mode="update")``   — full attention, symbol refresh
-  * ``denoise_step(..., mode="dispatch")`` — sparse attention via symbols
+``denoise_step`` traces one engine phase (``mode`` = "update" /
+"dispatch" / "dense"); the pipeline's single-scan sampler ``lax.switch``es
+between the three trace bodies on a :class:`~repro.core.schedule.
+SparsitySchedule` mode array — one compiled executable for the whole loop.
 
 Engine states are stacked (L, ...) and scanned with the blocks, so the HLO
-stays one-block-sized at any depth.
+stays one-block-sized at any depth — including per-layer strategy tables,
+which ride the scan as a TRACED strategy-id row (``lax.switch`` over the
+schedule's active strategy set inside the block body; nothing unrolls).
 """
 
 from __future__ import annotations
@@ -134,8 +137,16 @@ def _modulate(x, shift, scale):
     return x * (1 + scale[:, None]) + shift[:, None]
 
 
+def _canonicalize_layer_strategies(layer_strategies, ecfg, n_layers):
+    """Per-layer spec table -> (static strategy set, traced int32 id row)."""
+    from repro.core.schedule import strategy_table
+    strategies, ids = strategy_table(layer_strategies, ecfg, n_layers)
+    return strategies, jnp.asarray(ids)
+
+
 def _block(cfg: ArchConfig, ecfg: EngineConfig, p, state, x, t_emb, *, mode: str,
-           n_text: int, strategy=None, layer_idx=None):
+           n_text: int, strategy=None, layer_idx=None, strategy_id=None,
+           strategies=None, step_idx=None, num_steps=None):
     dtype = x.dtype
     mod = (jax.nn.silu(t_emb) @ p["adaln"].astype(dtype) + p["adaln_b"].astype(dtype))
     sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6, axis=-1)
@@ -146,7 +157,10 @@ def _block(cfg: ArchConfig, ecfg: EngineConfig, p, state, x, t_emb, *, mode: str
     if mode == "update":
         o, new_state = E.update_layer(attn_p, xa, state, ecfg, n_text=n_text,
                                       heads=cfg.n_heads, strategy=strategy,
-                                      layer_idx=layer_idx)
+                                      layer_idx=layer_idx,
+                                      strategy_id=strategy_id,
+                                      strategies=strategies,
+                                      step_idx=step_idx, num_steps=num_steps)
     elif mode == "dispatch":
         o, new_state = E.dispatch_layer(attn_p, xa, state, ecfg, n_text=n_text,
                                         heads=cfg.n_heads)
@@ -167,18 +181,30 @@ def _block(cfg: ArchConfig, ecfg: EngineConfig, p, state, x, t_emb, *, mode: str
 
 def denoise_step(params, cfg: ArchConfig, ecfg: EngineConfig, states: LayerState,
                  x_vision: jax.Array, text_emb: jax.Array, t: jax.Array,
-                 *, mode: str, dtype=jnp.bfloat16, layer_strategies=None):
+                 *, mode: str, dtype=jnp.bfloat16, layer_strategies=None,
+                 strategies=None, strategy_row=None, step_idx=None,
+                 num_steps=None):
     """One diffusion step: predicts the velocity field for ``x_vision``.
 
     x_vision (B, N_v, d_model) latent patch embeddings; text_emb (B, N_t, d);
     t (B,) diffusion time in [0, 1].  Returns (velocity, new_states).
 
-    ``layer_strategies`` optionally overrides ``ecfg.strategy`` per layer
-    (a length-``n_layers`` sequence of registry names / strategy objects,
-    ``None`` entries fall back to the config).  Per-layer producers need
-    per-layer trace bodies, so the block loop unrolls instead of scanning
-    — the compiled step is layer-count-sized, reserve it for deployment
-    tables (the paper's HunyuanVideo 1.5× configuration).
+    Per-layer sparse-symbol producers ride the scanned block body as
+    TRACED data (no unrolling — the HLO stays one-block-sized at any
+    depth):
+
+      * ``strategies`` + ``strategy_row`` — a schedule's static active set
+        and one traced ``(n_layers,)`` int32 id row (a
+        ``SparsitySchedule.strategy_ids`` step slice); each scanned block
+        ``lax.switch``es its emitter on its row entry.
+      * ``layer_strategies`` — convenience per-layer table (registry names
+        / strategy objects, ``None`` entries fall back to
+        ``ecfg.strategy``); canonicalized into the pair above here.
+
+    ``step_idx`` (traced scalar) / ``num_steps`` (static) flow into the
+    :class:`~repro.core.strategy.StrategyContext` for schedule-varying
+    producers; the scanned layer index is always threaded as the traced
+    ``ctx.layer_idx``.
     """
     b = x_vision.shape[0]
     n_text = text_emb.shape[1]
@@ -188,26 +214,35 @@ def denoise_step(params, cfg: ArchConfig, ecfg: EngineConfig, states: LayerState
     t_emb = timestep_embedding(t * 1000.0, 256).astype(dtype) @ params["t_mlp1"].astype(dtype)
     t_emb = (jax.nn.silu(t_emb) @ params["t_mlp2"].astype(dtype)).astype(dtype)
 
-    if layer_strategies is not None and len(layer_strategies) != cfg.n_layers:
-        raise ValueError(
-            f"layer_strategies has {len(layer_strategies)} entries for "
-            f"{cfg.n_layers} layers")
-    # Only Update steps consume the strategy, so only they pay the unroll;
-    # dispatch/dense steps stay scanned (one-block-sized HLO at any depth).
-    unroll = layer_strategies is not None and mode == "update"
-    layer_counter = iter(range(cfg.n_layers))
+    if layer_strategies is not None:
+        if strategies is not None or strategy_row is not None:
+            raise ValueError(
+                "pass either layer_strategies or strategies/strategy_row, "
+                "not both")
+        strategies, strategy_row = _canonicalize_layer_strategies(
+            layer_strategies, ecfg, cfg.n_layers)
+    if strategies is not None and strategy_row is None:
+        strategy_row = jnp.zeros((cfg.n_layers,), jnp.int32)
+    with_row = strategies is not None and mode == "update"
+
+    layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
 
     def body(x, sl):
-        p, st = sl
-        i = next(layer_counter) if unroll else None
-        strategy = layer_strategies[i] if unroll else None
+        if with_row:
+            p, st, li, sid = sl
+        else:
+            (p, st, li), sid = sl, None
         x, new_st = _block(cfg, ecfg, p, st, x, t_emb, mode=mode,
-                           n_text=n_text, strategy=strategy, layer_idx=i)
+                           n_text=n_text, layer_idx=li, strategy_id=sid,
+                           strategies=strategies if with_row else None,
+                           step_idx=step_idx, num_steps=num_steps)
         return x, new_st
 
+    xs = (params["blocks"], states, layer_ids)
+    if with_row:
+        xs = (*xs, jnp.asarray(strategy_row, jnp.int32))
     from repro.models import layers as L
-    x, new_states = L.maybe_scan(body, x, (params["blocks"], states),
-                                 scan=cfg.scan_layers and not unroll)
+    x, new_states = L.maybe_scan(body, x, xs, scan=cfg.scan_layers)
     mod = jax.nn.silu(t_emb) @ params["final_mod"].astype(dtype)
     sh, sc = jnp.split(mod, 2, axis=-1)
     x = _modulate(L.rms_norm(x, params["final_norm"], cfg.norm_eps), sh, sc)

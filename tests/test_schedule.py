@@ -1,0 +1,351 @@
+"""Scan-native SparsitySchedule tests (ISSUE 3 acceptance criteria).
+
+  * schedule resolution: ``EngineConfig`` → mode array + (step × layer)
+    strategy-id table, named presets, multi-granularity layer-table
+    expansion;
+  * scan-vs-unrolled BIT parity for per-layer strategy tables on both
+    backends (the traced ``lax.switch`` row reproduces per-layer trace
+    bodies exactly);
+  * a step-varying strategy (head re-classification flipping at a schedule
+    boundary) exercising ``StrategyContext.step_idx``, parity-tested
+    Update→Dispatch on both backends;
+  * ``sample`` compiles exactly ONE executable for a mixed
+    update/dispatch schedule, and its single-scan output matches the
+    legacy three-jit Python loop;
+  * ``denoise_step`` with a full per-layer table lowers to an HLO whose
+    size is independent of ``n_layers`` (the scan never unrolls).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke
+from repro.core import (AttnParams, EngineConfig, MaskConfig, dispatch_layer,
+                        init_layer_state, plan_from_state, resolve_schedule,
+                        update_layer)
+from repro.core.engine import is_update_step
+from repro.core.schedule import (MODE_DENSE, MODE_DISPATCH, MODE_UPDATE,
+                                 SparsitySchedule, available_schedules,
+                                 get_schedule, schedule_summaries)
+from repro.core.strategy import (MultiGranularityStrategy, StepPhasedStrategy,
+                                 StrategyContext, get_strategy)
+from repro.diffusion.pipeline import SamplerConfig, sample
+from repro.models import dit
+
+N_TEXT = 32
+
+
+def _ecfg(**kw):
+    base = dict(tau_q=0.5, tau_kv=0.15, interval=4, order=1, degrade=0.0,
+                block_q=16, block_kv=16, pool=16, warmup_steps=2)
+    mask_keys = set(base)
+    mask_kw = {k: kw.pop(k) for k in list(kw) if k in mask_keys}
+    return EngineConfig(mask=MaskConfig(**{**base, **mask_kw}),
+                        cache_dtype=jnp.float32, cap_q_frac=1.0,
+                        cap_kv_frac=1.0, **kw)
+
+
+def _model(n_layers=None):
+    cfg = get_smoke("flux-mmdit")
+    if n_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    params = dit.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    xv = jax.random.normal(key, (1, 64, cfg.d_model))
+    text = jax.random.normal(jax.random.fold_in(key, 1),
+                             (1, cfg.n_text_tokens, cfg.d_model))
+    return cfg, params, xv, text
+
+
+# ---------------------------------------------------------------------------
+# Schedule resolution
+# ---------------------------------------------------------------------------
+
+def test_from_config_modes_follow_update_rule():
+    ecfg = _ecfg()
+    sched = resolve_schedule(ecfg, 10, 3)
+    want = [MODE_UPDATE if is_update_step(i, ecfg) else MODE_DISPATCH
+            for i in range(10)]
+    assert np.asarray(sched.mode).tolist() == want
+    assert sched.strategy_ids.shape == (10, 3)
+    assert sched.kinds()[:3] == ["update", "update", "update"]
+    assert len(sched.strategies) == 1
+    # force_dense: every step dense, single strategy entry.
+    dense = resolve_schedule(ecfg, 4, 3, force_dense=True)
+    assert np.asarray(dense.mode).tolist() == [MODE_DENSE] * 4
+
+
+def test_named_schedules_registry():
+    for required in ("hunyuan-1.5x", "step-ramp"):
+        assert required in available_schedules()
+        assert schedule_summaries()[required]
+    with pytest.raises(ValueError, match="unknown sparsity schedule"):
+        get_schedule("no-such-schedule", _ecfg(), 4, 3)
+    # step-ramp: strategy ids ramp over the step axis.
+    ramp = get_schedule("step-ramp", _ecfg(), 9, 2)
+    ids = np.asarray(ramp.strategy_ids)
+    assert ids[0, 0] == 0 and ids[4, 0] == 1 and ids[8, 0] == 2
+    assert [s.name for s in ramp.strategies] == \
+        ["skip-only", "flashomni", "cache-all"]
+    # hunyuan-1.5x: boundary layers point at the skip-only variant.
+    hy = get_schedule("hunyuan-1.5x", _ecfg(), 4, 5)
+    ids = np.asarray(hy.strategy_ids)
+    assert (ids[:, :2] == 0).all() and (ids[:, 2:] == 1).all()
+    # A prebuilt schedule passes through but must match the run shape.
+    assert get_schedule(hy, _ecfg(), 4, 5) is hy
+    with pytest.raises(ValueError, match="schedule is"):
+        get_schedule(hy, _ecfg(), 6, 5)
+
+
+def test_layer_strategies_entry_with_layer_assign_pins_its_position():
+    """A layer_strategies ENTRY carrying a layer_assign table is pinned to
+    its list position's template — the semantics the deleted unrolled path
+    gave via layer_idx threading (regression guard)."""
+    from repro.core.schedule import strategy_table
+    mg = MultiGranularityStrategy(children=("flashomni", "sliding-window"),
+                                  layer_assign={0: 1})
+    strategies, ids = strategy_table([mg, mg, mg], _ecfg(), 3)
+    # Layer 0 -> the pinned sliding-window variant; layers 1/2 share the
+    # head-template variant (deduplicated).
+    assert len(strategies) == 2
+    assert ids.tolist() == [0, 1, 1]
+    assert strategies[0]._template(None) == (1,)
+    assert strategies[1]._template(None) is None
+    # Registry-name entries resolving to a layer table behave the same.
+    strategies2, ids2 = strategy_table(["hunyuan-1.5x"] * 4, _ecfg(), 4)
+    assert ids2.tolist() == [0, 0, 1, 1]
+    assert len(strategies2) == 2
+
+
+def test_schedule_validate_rejects_bad_tables():
+    ecfg = _ecfg()
+    good = resolve_schedule(ecfg, 4, 2)
+    bad = SparsitySchedule(mode=good.mode,
+                           strategy_ids=good.strategy_ids + 7,
+                           strategies=good.strategies)
+    with pytest.raises(ValueError, match="strategy ids"):
+        bad.validate()
+    with pytest.raises(ValueError, match="layer_strategies has"):
+        resolve_schedule(ecfg, 4, 3, layer_strategies=["flashomni"])
+
+
+# ---------------------------------------------------------------------------
+# Scan vs unrolled bit parity for per-layer tables (both backends)
+# ---------------------------------------------------------------------------
+
+def _assert_tree_equal(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert la.dtype == lb.dtype
+        if jnp.issubdtype(la.dtype, jnp.floating):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       atol=1e-6, rtol=1e-6, err_msg=msg)
+        else:
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=msg)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_scan_vs_unrolled_bit_parity_per_layer_table(backend):
+    """The traced strategy-id row under lax.scan reproduces the unrolled
+    per-layer trace bodies exactly (packed symbols + plan, bit for bit)."""
+    cfg, params, xv, text = _model()
+    ecfg = _ecfg(backend=backend,
+                 interpret=True if backend == "pallas" else None)
+    t = jnp.full((1,), 0.1)
+    n_tokens = 64 + cfg.n_text_tokens
+    table = ["flashomni", "cache-all", "sliding-window"][:cfg.n_layers]
+    states = dit.init_engine_states(cfg, ecfg, 1, n_tokens)
+
+    v_scan, st_scan = dit.denoise_step(params, cfg, ecfg, states, xv, text, t,
+                                       mode="update", dtype=jnp.float32,
+                                       layer_strategies=table)
+    cfg_unroll = dataclasses.replace(cfg, scan_layers=False)
+    v_un, st_un = dit.denoise_step(params, cfg_unroll, ecfg, states, xv, text,
+                                   t, mode="update", dtype=jnp.float32,
+                                   layer_strategies=table)
+    np.testing.assert_array_equal(np.asarray(st_scan.s_c), np.asarray(st_un.s_c))
+    np.testing.assert_array_equal(np.asarray(st_scan.s_s), np.asarray(st_un.s_s))
+    _assert_tree_equal(st_scan.plan, st_un.plan, msg=backend)
+    np.testing.assert_allclose(np.asarray(v_scan), np.asarray(v_un),
+                               atol=1e-5, rtol=1e-5)
+    # ...and the table really is applied per layer (distinct vision bits).
+    t_blocks = ecfg.mask.n_blocks(n_tokens)
+    n_t = -(-cfg.n_text_tokens // ecfg.mask.pool)
+    from repro.core.symbols import unpack_bits
+    m_c = unpack_bits(st_scan.s_c, t_blocks)             # (L, B, H, T)
+    assert not bool(m_c[1, ..., n_t:].any())             # cache-all layer
+    assert bool(m_c[2, ..., n_t:].all())                 # sliding-window layer
+
+
+# ---------------------------------------------------------------------------
+# Step-varying strategy: head re-classification at a schedule boundary
+# ---------------------------------------------------------------------------
+
+def _attn_setup(backend="xla", heads=2):
+    key = jax.random.PRNGKey(0)
+    B, H, N, dm, dh = 1, heads, 256, 64, 32
+    cfg = EngineConfig(
+        mask=MaskConfig(pool=32, block_q=16, block_kv=16, interval=4,
+                        order=1, warmup_steps=1, tau_kv=0.15, tau_q=0.5),
+        cap_q_frac=1.0, cap_kv_frac=1.0, cache_dtype=jnp.float32,
+        backend=backend, interpret=True if backend == "pallas" else None)
+    ks = jax.random.split(key, 6)
+    p = AttnParams(
+        wq=jax.random.normal(ks[0], (dm, H * dh)) * 0.05,
+        wk=jax.random.normal(ks[1], (dm, H * dh)) * 0.05,
+        wv=jax.random.normal(ks[2], (dm, H * dh)) * 0.05,
+        wo=jax.random.normal(ks[3], (H * dh, dm)) * 0.05,
+        q_scale=jnp.ones(dh), k_scale=jnp.ones(dh))
+    x = jax.random.normal(ks[4], (B, N, dm))
+    return cfg, p, x, H, N
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_step_phased_head_reclassification(backend):
+    """SVG-style re-classification: the head → class table flips at the
+    schedule boundary, driven by the TRACED StrategyContext.step_idx."""
+    cfg, p, x, H, N = _attn_setup(backend)
+    phase_a = MultiGranularityStrategy(children=("cache-all", "skip-only"),
+                                       head_assign=(0, 1), name="phase-a")
+    phase_b = MultiGranularityStrategy(children=("cache-all", "skip-only"),
+                                       head_assign=(1, 0), name="phase-b")
+    sp = StepPhasedStrategy(phases=(phase_a, phase_b), boundaries=(2,))
+    from repro.core.engine import _qk
+    q, k = _qk(p, x, H, None)
+    ctx = StrategyContext(cfg=cfg, n_text=N_TEXT, n_tokens=N)
+    want_a = phase_a.emit(q, k, ctx)
+    want_b = phase_b.emit(q, k, ctx)
+    # head 0 caches before the boundary, head 1 after (and vice versa) —
+    # and the phased emit matches the phase child exactly on both sides.
+    for step, want in [(0, want_a), (1, want_a), (2, want_b), (3, want_b)]:
+        got = sp.emit(q, k, ctx._replace(step_idx=jnp.int32(step),
+                                         num_steps=4))
+        np.testing.assert_array_equal(np.asarray(got.s_c),
+                                      np.asarray(want.s_c), err_msg=str(step))
+        np.testing.assert_array_equal(np.asarray(got.s_s),
+                                      np.asarray(want.s_s))
+    assert not np.array_equal(np.asarray(want_a.s_c), np.asarray(want_b.s_c))
+    # Without a step context, phase 0 applies (direct update_layer calls).
+    got0 = sp.emit(q, k, ctx)
+    np.testing.assert_array_equal(np.asarray(got0.s_c), np.asarray(want_a.s_c))
+
+    # Update→Dispatch round-trip ON THE BACKEND across the boundary: the
+    # traced step drives update_layer's symbols; dispatch consumes the plan
+    # verbatim and the rebuilt plan matches bit for bit.
+    for step in (1, 3):
+        state = init_layer_state(1, H, N, 64, 32, cfg)
+        out_u, st = update_layer(p, x, state, cfg, n_text=N_TEXT, heads=H,
+                                 strategy=sp, step_idx=jnp.int32(step),
+                                 num_steps=4)
+        assert bool(jnp.isfinite(out_u).all())
+        want = want_a if step < 2 else want_b
+        np.testing.assert_array_equal(np.asarray(st.s_c), np.asarray(want.s_c))
+        out_d, st2 = dispatch_layer(p, x, st, cfg, n_text=N_TEXT, heads=H)
+        assert bool(jnp.isfinite(out_d).all())
+        _assert_tree_equal(plan_from_state(st2, cfg, N), st2.plan,
+                           msg=f"{backend} step {step}")
+
+
+def test_step_phased_validation():
+    with pytest.raises(ValueError, match="phases need"):
+        StepPhasedStrategy(phases=("flashomni",), boundaries=(0.5,))
+    sp = StepPhasedStrategy(phases=("flashomni", "cache-all"),
+                            boundaries=(0.5,))
+    cfg, p, x, H, N = _attn_setup()
+    from repro.core.engine import _qk
+    q, k = _qk(p, x, H, None)
+    ctx = StrategyContext(cfg=cfg, n_text=N_TEXT, n_tokens=N,
+                          step_idx=jnp.int32(1), num_steps=None)
+    with pytest.raises(ValueError, match="num_steps"):
+        sp.emit(q, k, ctx)
+
+
+# ---------------------------------------------------------------------------
+# One compiled executable for the whole sampling loop
+# ---------------------------------------------------------------------------
+
+def test_sample_compiles_exactly_one_executable():
+    cfg, params, _, text = _model()
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (1, 64, cfg.patch_dim))
+    stats: dict = {}
+    trace: list = []
+    out = sample(params, cfg, _ecfg(), text_emb=text, x0=x0,
+                 scfg=SamplerConfig(num_steps=8), trace=trace, stats=stats)
+    assert bool(jnp.isfinite(out).all())
+    # Mixed schedule (2 warmup updates + interval-4 cadence) through ONE
+    # lax.scan with lax.switch: exactly one compiled step executable.
+    kinds = [t["kind"] for t in trace]
+    assert "update" in kinds and "dispatch" in kinds
+    assert stats["executables"] == 1
+    # The resolved schedule is surfaced for diagnostics.
+    assert stats["schedule"].num_steps == 8
+
+
+def test_sample_scan_matches_legacy_three_jit_loop():
+    """The single-scan sampler reproduces the old Python-loop-of-three-jits
+    numerics (same modes, same states threading)."""
+    cfg, params, _, text = _model()
+    ecfg = _ecfg()
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (1, 64, cfg.patch_dim))
+    pd = x0.shape[-1]
+    patch_embed = jax.random.normal(jax.random.PRNGKey(7), (pd, cfg.d_model)) * 0.2
+    steps = 8
+    got = sample(params, cfg, ecfg, text_emb=text, x0=x0,
+                 scfg=SamplerConfig(num_steps=steps), patch_embed=patch_embed)
+
+    n_tokens = 64 + text.shape[1]
+    states = dit.init_engine_states(cfg, ecfg, 1, n_tokens)
+    step = {m: jax.jit(lambda p, s, xv, te, t, m=m: dit.denoise_step(
+        p, cfg, ecfg, s, xv, te, t, mode=m, dtype=jnp.float32))
+        for m in ("update", "dispatch")}
+    x = x0
+    dt = 1.0 / steps
+    for i in range(steps):
+        t = jnp.full((1,), i * dt, jnp.float32)
+        xe = (x @ patch_embed).astype(jnp.float32)
+        mode = "update" if is_update_step(i, ecfg) else "dispatch"
+        v, states = step[mode](params, states, xe, text, t)
+        x = x + v.astype(x.dtype) * dt
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# HLO size independent of n_layers for full per-layer tables
+# ---------------------------------------------------------------------------
+
+def test_denoise_step_hlo_size_independent_of_depth():
+    """A FULL per-layer strategy table must not unroll the block scan: the
+    jaxpr equation count is identical for 3- and 6-layer models."""
+    def eqn_count(n_layers):
+        cfg, params, xv, text = _model(n_layers=n_layers)
+        ecfg = _ecfg()
+        n_tokens = 64 + cfg.n_text_tokens
+        states = dit.init_engine_states(cfg, ecfg, 1, n_tokens)
+        table = (["flashomni", "cache-all", "sliding-window"]
+                 * n_layers)[:n_layers]
+        t = jnp.full((1,), 0.1)
+        jaxpr = jax.make_jaxpr(
+            lambda p, s: dit.denoise_step(p, cfg, ecfg, s, xv, text, t,
+                                          mode="update", dtype=jnp.float32,
+                                          layer_strategies=table))(
+            params, states)
+        return sum(1 for _ in jaxpr.jaxpr.eqns)
+
+    assert eqn_count(3) == eqn_count(6)
+
+
+def test_denoise_step_rejects_conflicting_strategy_args():
+    cfg, params, xv, text = _model()
+    ecfg = _ecfg()
+    states = dit.init_engine_states(cfg, ecfg, 1, 64 + cfg.n_text_tokens)
+    t = jnp.full((1,), 0.1)
+    with pytest.raises(ValueError, match="not both"):
+        dit.denoise_step(params, cfg, ecfg, states, xv, text, t,
+                         mode="update", dtype=jnp.float32,
+                         layer_strategies=["flashomni"] * cfg.n_layers,
+                         strategies=(get_strategy("flashomni"),))

@@ -200,22 +200,33 @@ def test_multi_granularity_head_table():
                                       np.asarray(child.m_c[:, h]))
         np.testing.assert_array_equal(np.asarray(got.m_s[:, h]),
                                       np.asarray(child.m_s[:, h]))
-    # layer_assign overrides the head template when layer_idx is known.
+    # layer_assign routes through the SCHEDULE strategy-id table, not emit:
+    # per_layer pins each layer's template into its own variant.
     mg2 = MultiGranularityStrategy(children=("flashomni", "sliding-window"),
                                    layer_assign={0: 1})
-    got0 = mg2.emit(q, k, ctx._replace(layer_idx=0))
-    np.testing.assert_array_equal(np.asarray(got0.m_s), np.asarray(sw.m_s))
-    # ...and warns when the table exists but no layer_idx reaches it
-    # (scanned layers), instead of silently applying the head template.
-    with pytest.warns(UserWarning, match="layer_assign"):
-        mg2.emit(q, k, ctx)
-    # per_layer expands the table into a denoise_step layer_strategies list.
     expanded = mg2.per_layer(3)
     assert len(expanded) == 3
     e0 = expanded[0].emit(q, k, ctx)
-    np.testing.assert_array_equal(np.asarray(e0.m_s), np.asarray(got0.m_s))
+    np.testing.assert_array_equal(np.asarray(e0.m_s), np.asarray(sw.m_s))
     e1 = expanded[1].emit(q, k, ctx)
     np.testing.assert_array_equal(np.asarray(e1.m_s), np.asarray(got.m_s))
+    # emit itself is layer-agnostic: layer ids are traced under the scanned
+    # block body, so the head template applies regardless of layer_idx (the
+    # old warning fallback is gone — the schedule table IS the layer table).
+    np.testing.assert_array_equal(
+        np.asarray(mg2.emit(q, k, ctx._replace(layer_idx=0)).m_s),
+        np.asarray(mg2.emit(q, k, ctx).m_s))
+    # SparsitySchedule.from_config expands the table: layer 0 -> the pinned
+    # variant, other layers -> the head-template variant (deduplicated).
+    from repro.core.schedule import SparsitySchedule
+    import dataclasses as _dc
+    cfg2 = _dc.replace(cfg, strategy=mg2)
+    sched = SparsitySchedule.from_config(cfg2, num_steps=4, n_layers=3)
+    assert len(sched.strategies) == 2
+    assert sched.strategy_ids.shape == (4, 3)
+    assert sched.strategy_ids[0].tolist() == [0, 1, 1]
+    s0 = sched.strategies[0].emit(q, k, ctx)
+    np.testing.assert_array_equal(np.asarray(s0.m_s), np.asarray(sw.m_s))
 
 
 # ---------------------------------------------------------------------------
