@@ -8,10 +8,12 @@
 #                          pair-sparsity / fidelity table per producer
 #   make bench-schedule    single-scan sampler vs the legacy three-jit loop
 #                          (compile time + µs/step)
+#   make bench-serving     sequential vs stacked vs continuous-batching
+#                          serving (req/s + p50/p95 latency, bit parity)
 
 PY ?= python
 
-.PHONY: test smoke bench bench-strategies bench-schedule
+.PHONY: test smoke bench bench-strategies bench-schedule bench-serving
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -27,3 +29,6 @@ bench-strategies:
 
 bench-schedule:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only "schedule scan"
+
+bench-serving:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only "serving queue"

@@ -24,13 +24,14 @@ def _suites():
                             bench_density, bench_dispatch_plan,
                             bench_e2e_quality, bench_e2e_speedup,
                             bench_gemm_o_interval, bench_schedule,
-                            bench_sparse_gemm, bench_strategy_sweep,
-                            bench_warmup)
+                            bench_serving, bench_sparse_gemm,
+                            bench_strategy_sweep, bench_warmup)
 
     return [
         ("issue1 dispatch-plan amortization", bench_dispatch_plan.run),
         ("issue2 strategy registry sweep", bench_strategy_sweep.run),
         ("issue3 schedule scan vs three-jit", bench_schedule.run),
+        ("issue4 serving queue", bench_serving.run),
         ("fig6/fig10 attention", bench_attention_sparsity.run),
         ("fig6/fig11 sparse GEMMs", bench_sparse_gemm.run),
         ("fig8/A.1.2 GEMM-O interval", bench_gemm_o_interval.run),
@@ -45,6 +46,7 @@ def _suites():
 # Labels included in --smoke mode (fast, CPU-friendly).
 SMOKE_SUITES = ("issue1 dispatch-plan amortization",
                 "issue3 schedule scan vs three-jit",
+                "issue4 serving queue",
                 "fig6/fig11 sparse GEMMs")
 
 

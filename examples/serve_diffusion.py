@@ -1,7 +1,13 @@
 """Example: serve batched text-to-vision requests through the FlashOmni
 Update–Dispatch sampler (the paper's deployment scenario).
 
+Requests flow through the :mod:`repro.launch.batching` queue; pick the
+serving mode with ``--serving`` (``sequential`` | ``stacked`` |
+``continuous`` — the continuous batcher interleaves mixed-length
+schedules in a fixed-width lane microbatch without recompiling).
+
 Usage:  PYTHONPATH=src python examples/serve_diffusion.py [--steps 12]
+            [--serving continuous --requests 4 --mixed-steps]
 """
 
 import argparse
@@ -14,9 +20,15 @@ def main():
     ap.add_argument("--arch", default="hunyuan-video-dit")
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--requests", type=int, default=2)
+    ap.add_argument("--serving", default="sequential",
+                    choices=["sequential", "stacked", "continuous"])
+    ap.add_argument("--mixed-steps", action="store_true",
+                    help="alternate request step counts (mixed-length "
+                         "lane interleaving)")
     args = ap.parse_args()
     serve_diffusion(args.arch, smoke=True, num_requests=args.requests,
-                    num_steps=args.steps)
+                    num_steps=args.steps, serving=args.serving,
+                    mixed_steps=args.mixed_steps)
 
 
 if __name__ == "__main__":

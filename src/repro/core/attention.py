@@ -12,6 +12,10 @@ Two implementations of the same semantics live in this repo:
     blocks needed by any live row (``S_s``), with the exact per-(i,j) mask
     applied inside the gathered subset.  FLOPs in the compiled HLO shrink
     with both sparsity ratios, so the roofline analysis sees the win.
+    When ``cap_kv`` can truncate the union (``cap_kv < T_kv``) the
+    reduction switches to the PER-ROW CSR layout (each live row gathers
+    its own KV-block list) so truncation semantics match the Pallas
+    kernel exactly — same FLOPs, one extra gather dimension.
 
 Masks follow the repo convention: boolean, True = compute.
 """
@@ -84,6 +88,13 @@ def _gather_blocks(x_blocks: jax.Array, ids: jax.Array) -> jax.Array:
     return jnp.take_along_axis(x_blocks, idx, axis=-3)
 
 
+def _gather_row_blocks(x_blocks: jax.Array, ids: jax.Array) -> jax.Array:
+    """Per-row block gather: x_blocks (..., T, b, d), ids (..., C, Ck) ->
+    (..., C, Ck, b, d) — each row gets its own KV-block list (CSR layout)."""
+    flat = _gather_blocks(x_blocks, ids.reshape(*ids.shape[:-2], -1))
+    return flat.reshape(*ids.shape, *x_blocks.shape[-2:])
+
+
 def scatter_blocks(base: jax.Array, ids: jax.Array, cnt: jax.Array,
                    vals: jax.Array) -> jax.Array:
     """Scatter capacity-padded block rows into ``base`` (..., T, b, d).
@@ -119,9 +130,10 @@ def attention_plan_indices(m_c: jax.Array, m_s: jax.Array,
     """
     q_ids, q_cnt = active_indices(m_c, spec.cap_q)                     # (..., Cq)
     # KV-block union over live rows, importance = how many live rows need
-    # the block; clamped gracefully to the static capacity (softmax then
-    # renormalises over the kept subset — documented approximation when
-    # cap_kv < |union|, exact otherwise).
+    # the block; clamped to the static capacity.  The union layout is only
+    # consumed when cap_kv admits the full union (cap_kv == T_kv, so the
+    # clamp is a no-op); whenever truncation is possible the reduction
+    # runs over the per-row CSR lists instead (shared Pallas semantics).
     need = jnp.sum(m_s & m_c[..., None], axis=-2)                      # (..., T_kv)
     kv_union = clamp_mask_topk(need > 0, need, spec.cap_kv)
     kv_ids, kv_cnt = active_indices(kv_union, spec.cap_kv)             # (..., Ck)
@@ -149,6 +161,8 @@ def sparse_attention_from_plan(
     scale: Optional[float] = None,
     q_chunk_blocks: int = 16,
     q_src_ids: Optional[jax.Array] = None,
+    kv_row_ids: Optional[jax.Array] = None,
+    kv_row_cnt: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Structurally sparse attention over PRECOMPUTED indices.
 
@@ -162,6 +176,16 @@ def sparse_attention_from_plan(
     chunks of ``q_chunk_blocks`` so peak score memory is
     O(chunk·bq·Ckv·bk) regardless of N (needed for the 33K-token
     HunyuanVideo cells).
+
+    ``kv_row_ids``/``kv_row_cnt`` (the DispatchPlan's per-live-row CSR
+    column lists) switch the reduction to the PER-ROW layout whenever
+    ``cap_kv`` can truncate the per-head KV union (``cap_kv < T_kv``):
+    each live row gathers its own KV-block list, which is exactly the
+    Pallas CSR kernel's semantics.  The old union layout dropped whole
+    columns globally per head when the union overflowed the capacity —
+    the documented XLA-vs-Pallas divergence this path closes.  With
+    capacity admitting the full union both layouts are bit-identical and
+    the cheaper union gather is used.
     """
     bq, bk = spec.block_q, spec.block_kv
     d = q.shape[-1]
@@ -170,12 +194,14 @@ def sparse_attention_from_plan(
     t_kv = n_kv // bk
     scale = (d ** -0.5) if scale is None else scale
     q_src_ids = q_ids if q_src_ids is None else q_src_ids
+    per_row = kv_row_ids is not None and spec.cap_kv < t_kv
 
     qb = q.reshape(*q.shape[:-2], q.shape[-2] // bq, bq, d)
     kb = k.reshape(*k.shape[:-2], t_kv, bk, d)
     vb = v.reshape(*v.shape[:-2], t_kv, bk, d)
-    kg = _gather_blocks(kb, kv_ids)                                    # (..., Ck, bk, d)
-    vg = _gather_blocks(vb, kv_ids)
+    if not per_row:
+        kg = _gather_blocks(kb, kv_ids)                                # (..., Ck, bk, d)
+        vg = _gather_blocks(vb, kv_ids)
 
     def q_chunk(ids_c, live_c):
         """One chunk of live q-block ids + its pair mask -> outputs."""
@@ -188,8 +214,38 @@ def sparse_attention_from_plan(
         return jnp.einsum("...ipjq,...jqd->...ipd", p,
                           vg.astype(jnp.float32)).astype(q.dtype)
 
+    def q_chunk_rowcsr(ids_c, rids_c, rcnt_c):
+        """One chunk of live q blocks, each with its OWN KV-block list."""
+        qg = _gather_blocks(qb, ids_c)                                 # (..., cc, bq, d)
+        kg_r = _gather_row_blocks(kb, rids_c)                          # (..., cc, Ck, bk, d)
+        vg_r = _gather_row_blocks(vb, rids_c)
+        s = jnp.einsum("...ipd,...ijqd->...ipjq", qg,
+                       kg_r).astype(jnp.float32) * scale
+        live = jnp.arange(rids_c.shape[-1]) < rcnt_c[..., None]        # (..., cc, Ck)
+        s = jnp.where(live[..., :, None, :, None], s, _NEG_INF)
+        cc = ids_c.shape[-1]
+        sf = s.reshape(*s.shape[:-4], cc, bq, spec.cap_kv * bk)
+        p = jax.nn.softmax(sf, axis=-1).reshape(s.shape)
+        return jnp.einsum("...ipjq,...ijqd->...ipd", p,
+                          vg_r.astype(jnp.float32)).astype(q.dtype)
+
     if spec.cap_q <= q_chunk_blocks or spec.cap_q % q_chunk_blocks != 0:
-        og = q_chunk(q_src_ids, pair_live)
+        og = (q_chunk_rowcsr(q_src_ids, kv_row_ids, kv_row_cnt) if per_row
+              else q_chunk(q_src_ids, pair_live))
+    elif per_row:
+        n_ch = spec.cap_q // q_chunk_blocks
+        ids_ch = jnp.moveaxis(
+            q_src_ids.reshape(*q_src_ids.shape[:-1], n_ch, q_chunk_blocks), -2, 0)
+        rids_ch = jnp.moveaxis(
+            kv_row_ids.reshape(*kv_row_ids.shape[:-2], n_ch, q_chunk_blocks,
+                               kv_row_ids.shape[-1]), -3, 0)
+        rcnt_ch = jnp.moveaxis(
+            kv_row_cnt.reshape(*kv_row_cnt.shape[:-1], n_ch, q_chunk_blocks),
+            -2, 0)
+        og_ch = jax.lax.map(lambda t: q_chunk_rowcsr(*t),
+                            (ids_ch, rids_ch, rcnt_ch))
+        og = jnp.moveaxis(og_ch, 0, -4)
+        og = og.reshape(*og.shape[:-4], spec.cap_q, bq, d)
     else:
         n_ch = spec.cap_q // q_chunk_blocks
         ids_ch = jnp.moveaxis(
@@ -225,13 +281,20 @@ def sparse_attention_xla(
     Mask-level entry point: decodes indices per call (legacy rebuild path).
     The Update–Dispatch engine instead decodes once via
     :func:`attention_plan_indices` and calls
-    :func:`sparse_attention_from_plan` on every Dispatch step.
+    :func:`sparse_attention_from_plan` on every Dispatch step.  When
+    ``cap_kv`` can truncate the union the per-row CSR lists are decoded
+    too, so this path shares the Pallas per-row truncation semantics.
     """
     q_ids, q_cnt, kv_ids, kv_cnt, pair_live = attention_plan_indices(
         m_c, m_s, spec)
+    kv_row_ids = kv_row_cnt = None
+    if spec.cap_kv < m_s.shape[-1]:
+        rows = jnp.take_along_axis(m_s, q_ids[..., :, None], axis=-2)
+        kv_row_ids, kv_row_cnt = active_indices(rows, spec.cap_kv)
     return sparse_attention_from_plan(
         q, k, v, o_reuse, q_ids, q_cnt, kv_ids, kv_cnt, pair_live, spec,
-        scale=scale, q_chunk_blocks=q_chunk_blocks)
+        scale=scale, q_chunk_blocks=q_chunk_blocks,
+        kv_row_ids=kv_row_ids, kv_row_cnt=kv_row_cnt)
 
 
 def sparse_decode_attention(

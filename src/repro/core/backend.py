@@ -21,11 +21,12 @@ interchangeable implementations sit behind a common interface:
 Selection lives on ``EngineConfig.backend``: ``"xla"`` | ``"pallas"`` |
 ``"auto"`` (Pallas on real TPUs, XLA elsewhere).
 
-Semantics note: when ``cap_kv`` truncates a head's KV-block union, the XLA
-path drops the lowest-need blocks globally per head while the Pallas CSR
-path truncates per row — identical whenever the capacity admits the full
-union (the default test configuration), documented approximation
-otherwise.
+Truncation semantics are SHARED: when ``cap_kv`` can truncate a head's
+KV-block list (``cap_kv < T_kv``) the XLA path switches from the per-head
+union layout to the same per-row CSR lists the Pallas kernel consumes
+(``plan.kv_row_ids``/``kv_row_cnt``), so both backends truncate each
+row's KV list identically — parity holds under truncation, not just when
+the capacity admits the full union (see ``tests/test_backend.py``).
 """
 
 from __future__ import annotations
@@ -58,12 +59,17 @@ class XlaBackend:
     def attention(self, q, k, v, o_reuse, plan: DispatchPlan,
                   spec: SparseAttentionSpec, *, scale: Optional[float] = None,
                   compact_q: bool = False) -> jax.Array:
-        """q (B,H,N_q,dh) [compact when ``compact_q``], k/v/o_reuse full."""
+        """q (B,H,N_q,dh) [compact when ``compact_q``], k/v/o_reuse full.
+
+        The per-row CSR lists are passed alongside the union layout;
+        ``sparse_attention_from_plan`` consumes them whenever ``cap_kv``
+        can truncate, matching the Pallas kernel's per-row truncation."""
         plan = plan.widen()
         return sparse_attention_from_plan(
             q, k, v, o_reuse, plan.q_ids, plan.q_cnt, plan.kv_ids,
             plan.kv_cnt, plan.pair_live, spec, scale=scale,
-            q_src_ids=plan.q_slots if compact_q else None)
+            q_src_ids=plan.q_slots if compact_q else None,
+            kv_row_ids=plan.kv_row_ids, kv_row_cnt=plan.kv_row_cnt)
 
     def gemm_o(self, o_tok, w, plan: DispatchPlan, bias: jax.Array, *,
                block: int) -> jax.Array:

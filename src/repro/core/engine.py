@@ -68,6 +68,7 @@ import jax.numpy as jnp
 
 from repro.core import masks as masklib
 from repro.core import sparse_gemm, taylorseer
+from repro.core.lru import LruCache
 from repro.core.attention import SparseAttentionSpec, dense_attention
 from repro.core.backend import get_backend
 from repro.core.masks import MaskConfig
@@ -90,6 +91,9 @@ __all__ = [
     "init_layer_state",
     "is_update_step",
     "resolve_schedule",
+    "schedule_cache_stats",
+    "stack_lane_states",
+    "set_lane_state",
     "update_layer",
     "dispatch_layer",
     "plan_from_state",
@@ -180,6 +184,27 @@ def init_layer_state(
     )
 
 
+def stack_lane_states(states: "LayerState", n_lanes: int) -> "LayerState":
+    """Broadcast one request's engine state to ``n_lanes`` microbatch lanes.
+
+    ``states`` is any LayerState pytree (typically the (L, ...)-stacked
+    tree from ``models.dit.init_engine_states``); every leaf gains a
+    leading ``(n_lanes, ...)`` lane axis.  The continuous batcher carries
+    ONE such stacked tree and scans its lane axis per serving tick."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_lanes, *x.shape)), states)
+
+
+def set_lane_state(stacked, lane: int, fresh):
+    """Replace lane ``lane`` of a lane-stacked pytree with ``fresh``.
+
+    Used at lane REFILL: a retired lane's engine state (and latents /
+    text embeddings) is overwritten with the next request's fresh state
+    without touching the other in-flight lanes — pure ``.at[lane].set``
+    ops, no recompilation of the serving tick."""
+    return jax.tree.map(lambda s, f: s.at[lane].set(f), stacked, fresh)
+
+
 def is_update_step(step: int, cfg: EngineConfig) -> bool:
     """Update/Dispatch phase of one step (warmup + every ``interval``).
 
@@ -194,7 +219,19 @@ def is_update_step(step: int, cfg: EngineConfig) -> bool:
     return (step - m.warmup_steps) % m.interval == 0
 
 
-_SCHEDULE_CACHE: dict = {}
+# LRU-bounded (PR 4): a long-running server cycling distinct specs evicts
+# the least-recently-resolved schedule instead of growing without limit.
+# NOTE the coupling with the pipeline's sampler cache: evicting a schedule
+# here means the next request with that spec resolves to a NEW schedule
+# object, whose strategy identities miss the sampler cache and recompile —
+# so this memo is sized ABOVE the sampler cache, never below.
+_SCHEDULE_CACHE_SIZE = 128
+_SCHEDULE_CACHE = LruCache(_SCHEDULE_CACHE_SIZE)
+
+
+def schedule_cache_stats() -> dict:
+    """Hit/miss/eviction counters of the schedule-resolution memo."""
+    return _SCHEDULE_CACHE.stats()
 
 
 def resolve_schedule(cfg: EngineConfig, num_steps: int, n_layers: int, *,
@@ -208,11 +245,11 @@ def resolve_schedule(cfg: EngineConfig, num_steps: int, n_layers: int, *,
     :mod:`repro.core.schedule`.  An explicit ``schedule`` argument (name or
     prebuilt :class:`SparsitySchedule`) wins over everything.
 
-    Resolution is MEMOIZED for hashable specs (registry names + frozen
-    configs) so repeated calls return the SAME schedule object — the
-    sampler's jit cache keys on the schedule's strategy identities, and a
-    stable resolution means the second request reuses the first request's
-    compiled executable instead of re-tracing.
+    Resolution is MEMOIZED (LRU-bounded) for hashable specs (registry
+    names + frozen configs) so repeated calls return the SAME schedule
+    object — the sampler's jit cache keys on the schedule's strategy
+    identities, and a stable resolution means the second request reuses
+    the first request's compiled executable instead of re-tracing.
     """
     from repro.core.schedule import SparsitySchedule, get_schedule
     try:
@@ -222,8 +259,10 @@ def resolve_schedule(cfg: EngineConfig, num_steps: int, n_layers: int, *,
         hash(key)
     except TypeError:
         key = None              # unhashable spec (ad-hoc objects): no memo
-    if key is not None and key in _SCHEDULE_CACHE:
-        return _SCHEDULE_CACHE[key]
+    if key is not None:
+        cached = _SCHEDULE_CACHE.get(key)
+        if cached is not None:
+            return cached
     if schedule is not None and not force_dense:
         sched = get_schedule(schedule, cfg, num_steps, n_layers)
     else:
@@ -231,7 +270,7 @@ def resolve_schedule(cfg: EngineConfig, num_steps: int, n_layers: int, *,
                                              layer_strategies=layer_strategies,
                                              force_dense=force_dense)
     if key is not None:
-        _SCHEDULE_CACHE[key] = sched
+        _SCHEDULE_CACHE.put(key, sched)
     return sched
 
 

@@ -1,0 +1,71 @@
+"""Tiny bounded LRU cache for host-side compile/resolution memos.
+
+A long-running server cycling through distinct request shapes / schedule
+specs would otherwise grow the pipeline's compiled-sampler cache and the
+engine's schedule-resolution memo without limit (every distinct key pins
+a compiled executable plus its strategy objects alive forever).
+:class:`LruCache` bounds them with least-recently-used eviction and
+counts hits/misses/evictions so serving stats can expose cache health
+(``stats["sampler_cache"]`` in :func:`repro.diffusion.pipeline.sample`).
+
+Not thread-safe by design — the serving loop, like the rest of the JAX
+host program, is single-threaded.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable, Optional
+
+__all__ = ["LruCache"]
+
+_MISSING = object()
+
+
+class LruCache:
+    """An ``OrderedDict``-backed LRU with hit/miss/eviction counters."""
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError(f"LruCache needs maxsize >= 1, got {maxsize}")
+        self.maxsize = int(maxsize)
+        self._data: OrderedDict[Hashable, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Hashable, default: Optional[Any] = None) -> Any:
+        """Look up ``key``, counting a hit (and refreshing recency) or a
+        miss.  Returns ``default`` on miss."""
+        val = self._data.get(key, _MISSING)
+        if val is _MISSING:
+            self.misses += 1
+            return default
+        self._data.move_to_end(key)
+        self.hits += 1
+        return val
+
+    def put(self, key: Hashable, value: Any) -> Any:
+        """Insert/refresh ``key`` and evict the LRU entry past capacity."""
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+            self.evictions += 1
+        return value
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._data
+
+    def clear(self) -> None:
+        """Drop all entries (counters are kept — they describe lifetime)."""
+        self._data.clear()
+
+    def stats(self) -> dict:
+        """Counters snapshot: {hits, misses, evictions, size, maxsize}."""
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._data),
+                "maxsize": self.maxsize}

@@ -57,9 +57,13 @@ __all__ = [
     "MODE_DENSE",
     "MODE_UPDATE",
     "MODE_DISPATCH",
+    "MODE_IDLE",
     "MODE_NAMES",
     "SparsitySchedule",
     "strategy_table",
+    "merge_strategies",
+    "schedule_lane_rows",
+    "stack_schedules",
     "register_schedule",
     "get_schedule",
     "available_schedules",
@@ -67,7 +71,12 @@ __all__ = [
 ]
 
 MODE_DENSE, MODE_UPDATE, MODE_DISPATCH = 0, 1, 2
-MODE_NAMES = ("dense", "update", "dispatch")
+# Batched-serving lane tables pad past a schedule's end with MODE_IDLE:
+# the lane holds no work at that step (empty or retired), so the serving
+# tick's mode switch runs the no-op branch and contributes zero metrics.
+# A SparsitySchedule itself never carries it (validate() rejects it).
+MODE_IDLE = 3
+MODE_NAMES = ("dense", "update", "dispatch", "idle")
 
 
 def _mode_array(cfg, num_steps: int) -> np.ndarray:
@@ -234,6 +243,81 @@ class SparsitySchedule:
                    strategy_ids=jnp.broadcast_to(
                        row[None, :], (num_steps, row.shape[0])).copy(),
                    strategies=tuple(strategies)).validate()
+
+
+# ---------------------------------------------------------------------------
+# Batched serving: pad/stack mixed-length schedules into lane tables
+# ---------------------------------------------------------------------------
+
+def merge_strategies(schedules: Sequence[SparsitySchedule]) -> tuple:
+    """Union of the schedules' static strategy sets (identity-deduplicated).
+
+    ``resolve_schedule`` memoizes resolution, so two requests with the
+    same spec share strategy OBJECTS and the union stays small.  The
+    merged tuple is the single static active set the serving tick's
+    ``emit_switch`` closes over — every lane's id row indexes it."""
+    uniq: list = []
+    seen: dict[int, int] = {}
+    for sched in schedules:
+        for s in sched.strategies:
+            if id(s) not in seen:
+                seen[id(s)] = len(uniq)
+                uniq.append(s)
+    return tuple(uniq)
+
+
+def schedule_lane_rows(sched: SparsitySchedule, strategies: tuple,
+                       num_steps: int) -> tuple[np.ndarray, np.ndarray]:
+    """Remap ONE schedule onto a shared strategy set and pad to a lane.
+
+    Returns host ``(mode_row (num_steps,), id_row (num_steps, L))`` int32
+    arrays: the schedule's own steps keep their mode and get their
+    strategy ids remapped into ``strategies`` (a :func:`merge_strategies`
+    union that must contain every producer this schedule uses); steps past
+    ``sched.num_steps`` pad with :data:`MODE_IDLE` / id 0.  These rows are
+    TRACED data — swapping a lane's rows at refill never recompiles."""
+    if sched.num_steps > num_steps:
+        raise ValueError(
+            f"schedule has {sched.num_steps} steps; the lane table holds "
+            f"{num_steps} (raise the batcher's max_steps)")
+    index = {id(s): i for i, s in enumerate(strategies)}
+    missing = [s.name for s in sched.strategies if id(s) not in index]
+    if missing:
+        raise ValueError(
+            f"schedule strategies {missing} are not in the shared lane "
+            f"strategy set {[s.name for s in strategies]}; rebuild the "
+            "batcher universe (merge_strategies) over all queued requests")
+    remap = np.asarray([index[id(s)] for s in sched.strategies], np.int32)
+    mode_row = np.full((num_steps,), MODE_IDLE, np.int32)
+    mode_row[: sched.num_steps] = np.asarray(sched.mode)
+    id_row = np.zeros((num_steps, sched.n_layers), np.int32)
+    id_row[: sched.num_steps] = remap[np.asarray(sched.strategy_ids)]
+    return mode_row, id_row
+
+
+def stack_schedules(schedules: Sequence[SparsitySchedule],
+                    num_steps: Optional[int] = None):
+    """Pad/stack mixed-length schedules into batched lane tables.
+
+    Returns ``(mode, strategy_ids, strategies, lengths)`` where ``mode``
+    is ``(lanes, num_steps)`` int32, ``strategy_ids`` is ``(lanes,
+    num_steps, n_layers)`` int32 (both host numpy — the continuous
+    batcher edits single lanes in place at refill), ``strategies`` the
+    merged static producer set every id indexes, and ``lengths`` each
+    schedule's true step count.  ``num_steps`` pads to a fixed width
+    (default: the longest schedule); shorter lanes trail MODE_IDLE."""
+    if not schedules:
+        raise ValueError("stack_schedules needs at least one schedule")
+    n_layers = {s.n_layers for s in schedules}
+    if len(n_layers) != 1:
+        raise ValueError(f"mixed n_layers across schedules: {n_layers}")
+    lengths = [s.num_steps for s in schedules]
+    s_max = max(lengths) if num_steps is None else int(num_steps)
+    strategies = merge_strategies(schedules)
+    rows = [schedule_lane_rows(s, strategies, s_max) for s in schedules]
+    mode = np.stack([m for m, _ in rows])
+    ids = np.stack([i for _, i in rows])
+    return mode, ids, strategies, lengths
 
 
 # ---------------------------------------------------------------------------

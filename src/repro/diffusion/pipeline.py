@@ -28,11 +28,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.engine import EngineConfig, resolve_schedule
+from repro.core.engine import (EngineConfig, resolve_schedule,
+                               schedule_cache_stats)
+from repro.core.lru import LruCache
 from repro.core.symbols import unpack_bits
 from repro.models import dit
 
-__all__ = ["SamplerConfig", "sample", "step_density", "pair_sparsity"]
+__all__ = ["SamplerConfig", "sample", "make_lane_tick", "step_density",
+           "pair_sparsity"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,8 +74,12 @@ def pair_sparsity(states, cfg: ArchConfig, ecfg: EngineConfig, n_tokens: int) ->
 # engine / sampler configs, shapes, metric mode, schedule strategy
 # identities — stable across calls because resolve_schedule memoizes).  A
 # second request with the same configuration reuses the first one's
-# executable; bounded by the number of distinct serving configurations.
-_SAMPLER_CACHE: dict = {}
+# executable.  LRU-BOUNDED: a long-running server cycling through distinct
+# request shapes/schedules evicts the least-recently-served sampler (and
+# its pinned strategy tuple) instead of growing without limit; hit/miss
+# counters surface through ``stats["sampler_cache"]``.
+_SAMPLER_CACHE_SIZE = 32
+_SAMPLER_CACHE = LruCache(_SAMPLER_CACHE_SIZE)
 
 
 def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
@@ -96,7 +103,9 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
     denoised latents (B, N_v, patch_dim).  ``trace`` (a list) receives one
     ``{step, kind, density, pair_sparsity}`` dict per step; ``stats`` (a
     dict) receives ``executables`` (compiled-executable count for this
-    call — exactly 1) and ``schedule`` (the resolved schedule).
+    call — exactly 1), ``schedule`` (the resolved schedule) and the
+    ``sampler_cache`` / ``schedule_cache`` hit/miss/eviction counters of
+    the two LRU-bounded serving memos.
     """
     b, nv, pd = x0.shape
     n_tokens = nv + text_emb.shape[1]
@@ -153,7 +162,7 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
     if entry is None:
         # The strategies tuple is pinned alive next to its compiled fn so
         # the id()-based key can never alias a recycled object.
-        entry = _SAMPLER_CACHE[key] = (build(), sched.strategies)
+        entry = _SAMPLER_CACHE.put(key, (build(), sched.strategies))
     fn = entry[0]
     x, ys = fn(params, x0, states, text_emb, patch_embed, sched.mode,
                sched.strategy_ids)
@@ -161,6 +170,8 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
         cache_size = getattr(fn, "_cache_size", None)
         stats["executables"] = int(cache_size()) if cache_size else -1
         stats["schedule"] = sched
+        stats["sampler_cache"] = _SAMPLER_CACHE.stats()
+        stats["schedule_cache"] = schedule_cache_stats()
     if with_metrics:
         kinds = sched.kinds()
         dens, pair_s = jax.device_get(ys)      # ONE host sync for the trace
@@ -169,3 +180,89 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
                           "density": float(dens[i]),
                           "pair_sparsity": float(pair_s[i])})
     return x
+
+
+def make_lane_tick(cfg: ArchConfig, ecfg: EngineConfig,
+                   scfg: SamplerConfig, strategies: tuple):
+    """Build the continuous batcher's compiled serving tick.
+
+    One tick advances every lane of a fixed-width microbatch by ONE
+    denoising step.  The tick body is a ``lax.scan`` over the LANE axis
+    whose body selects each lane's ``(mode, strategy-id row)`` from the
+    lane's OWN traced schedule table at the lane's own step counter
+    (``SparsitySchedule``s of different lengths pad with ``MODE_IDLE`` —
+    see :func:`repro.core.schedule.stack_schedules`), then ``lax.switch``es
+    into the same dense/update/dispatch trace bodies as :func:`sample` —
+    per-lane numerics are bit-identical to a sequential run of the same
+    request (the acceptance criterion of the serving benchmark), because
+    each lane body executes exactly the single-request op sequence at the
+    single-request shapes.
+
+    The returned function is jitted ONCE per lane shape — lanes retire
+    and refill by swapping traced data (tables, step counters, state
+    slices), never by re-tracing:
+
+        tick(params, patch_embed, x, states, text_emb, step, mode_tab,
+             id_tab, dt, active) -> (x', states', density, pair_sparsity)
+
+    with ``x`` (lanes, B, N_v, patch_dim); ``states`` lane-stacked engine
+    states (:func:`repro.core.engine.stack_lane_states`); ``text_emb``
+    (lanes, B, N_t, d_model); ``step`` (lanes,) int32 per-lane step
+    counters; ``mode_tab`` (lanes, S) / ``id_tab`` (lanes, S, L) the
+    stacked schedule tables; ``dt`` (lanes,) f32 per-lane 1/num_steps;
+    ``active`` (lanes,) bool.  Idle lanes (``active`` false or table
+    padding) run a no-op branch: latents/state pass through and their
+    metric outputs are EXACTLY zero.
+
+    ``StrategyContext.num_steps`` is ``None`` inside the tick (lanes mix
+    step counts, so there is no static schedule length): strategies whose
+    emit needs it statically — ``step-phased`` with FRACTIONAL boundaries
+    — raise at trace time; use absolute step boundaries under the batcher.
+    """
+    from repro.core.schedule import MODE_IDLE
+
+    def tick(params, patch_embed, x, states, text_emb, step, mode_tab,
+             id_tab, dt, active):
+        b = x.shape[1]
+        n_tokens = x.shape[2] + text_emb.shape[2]
+
+        def branch(mode: str):
+            def f(x, st, xe, te, t, row, i, dts):
+                kw = {}
+                if mode == "update":
+                    kw = dict(strategies=strategies, strategy_row=row,
+                              step_idx=i, num_steps=None)
+                v, st2 = dit.denoise_step(params, cfg, ecfg, st, xe, te, t,
+                                          mode=mode, dtype=scfg.dtype, **kw)
+                # dts is a STRONG f32 scalar (sample()'s dt is a weak
+                # Python float): cast to x.dtype so non-f32 latents are
+                # not promoted — the tick's output dtype must equal its
+                # input dtype or the next tick recompiles.
+                x2 = x + v.astype(x.dtype) * dts.astype(x.dtype)
+                return (x2, st2, _density_device(st2, ecfg, n_tokens),
+                        _pair_sparsity_device(st2, ecfg, n_tokens))
+            return f
+
+        def idle(x, st, xe, te, t, row, i, dts):
+            return (x, st, jnp.zeros((), jnp.float32),
+                    jnp.zeros((), jnp.float32))
+
+        branches = [branch("dense"), branch("update"), branch("dispatch"),
+                    idle]
+
+        def lane(_, xs):
+            x, st, te, i, mrow, irow, dts, act = xs
+            ic = jnp.clip(i, 0, mrow.shape[0] - 1)
+            mode = jnp.where(act, mrow[ic], MODE_IDLE)
+            t = (jnp.full((b,), i, jnp.float32) * dts).astype(scfg.dtype)
+            xe = (x @ patch_embed).astype(scfg.dtype)
+            out = jax.lax.switch(mode, branches, x, st, xe, te, t, irow[ic],
+                                 i, dts)
+            return None, out
+
+        _, (x2, st2, dens, ps) = jax.lax.scan(
+            lane, None,
+            (x, states, text_emb, step, mode_tab, id_tab, dt, active))
+        return x2, st2, dens, ps
+
+    return jax.jit(tick)

@@ -1,0 +1,440 @@
+"""Continuous-batching request queue over mixed SparsitySchedules.
+
+The paper's deployment scenario is a served Hunyuan-class model under
+real traffic.  Single-request serving leaves two wins on the table:
+
+  * **Stacked batching** — requests that share a data shape AND a
+    resolved schedule are pure batch parallelism: concatenate them on the
+    batch axis and run the cached single-scan sampler once.  Per-lane
+    outputs are BIT-IDENTICAL to sequential runs (batch stacking changes
+    no per-sample op shapes' reduction axes), test-enforced.
+  * **Continuous batching** — requests whose schedules differ (length,
+    strategy mix, per-layer tables) cannot stack, but they CAN interleave:
+    a fixed-width microbatch of lanes, each holding one request, advances
+    every lane by one denoising step per serving tick.  The tick's lane
+    scan selects each lane's ``(mode, strategy-id row)`` from the lane's
+    own TRACED schedule table (:func:`repro.core.schedule.stack_schedules`
+    pads mixed lengths with ``MODE_IDLE``), so lanes retire and refill
+    WITHOUT recompiling — one executable per distinct lane shape,
+    regardless of how many schedule variants flow through (the xDiT /
+    Sparse-vDiT serving observation: keep heterogeneous sparse configs
+    resident in one engine).  A sequential server instead pays one
+    compiled sampler per distinct configuration.
+
+Module contents:
+
+  * :class:`Request` / :class:`RequestQueue` — arrival-ordered FIFO.
+  * :func:`run_sequential`    — baseline: one ``pipeline.sample`` per
+    request (shares compiled samplers via the pipeline's LRU cache).
+  * :func:`run_stacked`       — group by (shape, schedule), stack on the
+    batch axis, one sampler call per group.
+  * :class:`ContinuousBatcher` — the lane engine described above.
+
+``benchmarks/bench_serving.py`` measures all three (req/s, p50/p95
+latency) and asserts the per-lane bit-parity acceptance criterion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.engine import (EngineConfig, resolve_schedule,
+                               set_lane_state, stack_lane_states)
+from repro.core.schedule import (MODE_IDLE, MODE_NAMES, merge_strategies,
+                                 schedule_lane_rows)
+from repro.diffusion.pipeline import SamplerConfig, make_lane_tick, sample
+from repro.models import dit
+
+__all__ = ["Request", "RequestQueue", "ContinuousBatcher",
+           "run_sequential", "run_stacked", "default_patch_embed"]
+
+
+def default_patch_embed(cfg: ArchConfig, patch_dim: int) -> jax.Array:
+    """The stub patchifier ``pipeline.sample`` defaults to — every serving
+    mode must share it or per-lane parity is meaningless."""
+    return jax.random.normal(jax.random.PRNGKey(7),
+                             (patch_dim, cfg.d_model)) * 0.2
+
+
+@dataclasses.dataclass
+class Request:
+    """One text-to-vision serving request.
+
+    ``x0`` (B, N_v, patch_dim) Gaussian latents; ``text_emb`` (B, N_t,
+    d_model); ``schedule`` / ``layer_strategies`` feed
+    :func:`repro.core.engine.resolve_schedule` against the server's shared
+    ``EngineConfig`` (``None`` → the config's own strategy/interval
+    mapping).  ``arrival`` is seconds since the serving clock's start.
+    """
+
+    rid: Any
+    x0: jax.Array
+    text_emb: jax.Array
+    num_steps: int
+    schedule: Any = None
+    layer_strategies: Any = None
+    arrival: float = 0.0
+
+    def resolve(self, ecfg: EngineConfig, n_layers: int):
+        return resolve_schedule(ecfg, self.num_steps, n_layers,
+                                schedule=self.schedule,
+                                layer_strategies=self.layer_strategies)
+
+    def shape_key(self) -> tuple:
+        """Lane-shape key: requests in one microbatch must agree on it."""
+        return (self.x0.shape, str(self.x0.dtype),
+                self.text_emb.shape, str(self.text_emb.dtype))
+
+
+class RequestQueue:
+    """Arrival-ordered FIFO (stable for equal arrival times)."""
+
+    def __init__(self):
+        self._items: list[tuple[float, int, Request]] = []
+        self._seq = 0
+
+    def submit(self, req: Request) -> None:
+        self._items.append((req.arrival, self._seq, req))
+        self._seq += 1
+        self._items.sort(key=lambda it: it[:2])
+
+    def submit_all(self, reqs) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def pending(self) -> list[Request]:
+        return [r for _, _, r in self._items]
+
+    def next_arrival(self) -> Optional[float]:
+        return self._items[0][0] if self._items else None
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        """Pop the earliest request whose arrival time has passed."""
+        if self._items and self._items[0][0] <= now:
+            return self._items.pop(0)[2]
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Sequential + stacked serving (the baselines the batcher must beat)
+# ---------------------------------------------------------------------------
+
+def _result(out, trace, arrival, finish):
+    return {"out": out, "trace": trace, "finish": finish,
+            "latency": finish - arrival}
+
+
+def run_sequential(params, cfg: ArchConfig, ecfg: EngineConfig, requests,
+                   *, scfg_dtype=jnp.float32, patch_embed=None,
+                   collect_traces: bool = True) -> dict:
+    """Baseline server: requests strictly one after another (arrival
+    order), each through its own ``pipeline.sample`` call.  Compiled
+    samplers are shared across same-config requests via the pipeline's
+    LRU cache; every DISTINCT configuration still pays its own compile."""
+    if patch_embed is None and requests:
+        patch_embed = default_patch_embed(cfg, requests[0].x0.shape[-1])
+    results: dict = {}
+    t0 = time.perf_counter()
+    for req in sorted(requests, key=lambda r: r.arrival):
+        now = time.perf_counter() - t0
+        if now < req.arrival:
+            time.sleep(req.arrival - now)
+        trace: list = [] if collect_traces else None
+        out = sample(params, cfg, ecfg, text_emb=req.text_emb, x0=req.x0,
+                     scfg=SamplerConfig(num_steps=req.num_steps,
+                                        dtype=scfg_dtype),
+                     patch_embed=patch_embed, trace=trace,
+                     schedule=req.schedule,
+                     layer_strategies=req.layer_strategies)
+        jax.block_until_ready(out)
+        results[req.rid] = _result(np.asarray(out), trace, req.arrival,
+                                   time.perf_counter() - t0)
+    return results
+
+
+def run_stacked(params, cfg: ArchConfig, ecfg: EngineConfig, requests,
+                *, scfg_dtype=jnp.float32, patch_embed=None) -> dict:
+    """Stack same-shape/same-schedule requests into one batch axis.
+
+    Grouping key = (data shapes, resolved-schedule identity): thanks to
+    the memoized :func:`resolve_schedule`, equal specs resolve to the SAME
+    schedule object, so grouping by ``id(schedule)`` is exact — each group
+    VALUE pins its schedule object alive, so an id can never be recycled
+    by a different schedule while grouping (the resolution memo is
+    LRU-bounded and may drop its own reference).  Each group runs ONE
+    cached single-scan sampler call over the concatenated batch; outputs
+    split back per request and are bit-identical to sequential runs
+    (test-enforced).  A group starts once ALL its members arrived.
+    Per-request traces are not recorded — step metrics of a stacked run
+    average over the whole stacked batch (use the continuous batcher for
+    per-lane metrics).
+    """
+    if patch_embed is None and requests:
+        patch_embed = default_patch_embed(cfg, requests[0].x0.shape[-1])
+    groups: dict[tuple, tuple] = {}
+    for req in sorted(requests, key=lambda r: r.arrival):
+        sched = req.resolve(ecfg, cfg.n_layers)
+        groups.setdefault((req.shape_key(), req.num_steps, id(sched)),
+                          (sched, []))[1].append(req)
+    results: dict = {}
+    t0 = time.perf_counter()
+    for (_, num_steps, _), (_, members) in groups.items():
+        ready = max(r.arrival for r in members)
+        now = time.perf_counter() - t0
+        if now < ready:
+            time.sleep(ready - now)
+        x0 = jnp.concatenate([r.x0 for r in members], axis=0)
+        text = jnp.concatenate([r.text_emb for r in members], axis=0)
+        out = sample(params, cfg, ecfg, text_emb=text, x0=x0,
+                     scfg=SamplerConfig(num_steps=num_steps,
+                                        dtype=scfg_dtype),
+                     patch_embed=patch_embed,
+                     schedule=members[0].schedule,
+                     layer_strategies=members[0].layer_strategies)
+        jax.block_until_ready(out)
+        finish = time.perf_counter() - t0
+        off = 0
+        for r in members:
+            b = r.x0.shape[0]
+            results[r.rid] = _result(np.asarray(out[off:off + b]), None,
+                                     r.arrival, finish)
+            off += b
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Continuous batcher
+# ---------------------------------------------------------------------------
+
+class ContinuousBatcher:
+    """Fixed-width microbatch server over mixed SparsitySchedules.
+
+    ``lanes`` requests are resident at once; every serving tick advances
+    each active lane by one denoising step through the compiled lane tick
+    (:func:`repro.diffusion.pipeline.make_lane_tick`).  A lane whose
+    request reaches its own ``num_steps`` RETIRES (output captured) and
+    REFILLS from the queue as soon as a request's arrival time passes —
+    all by swapping traced data, so the tick never recompiles:
+
+      * per-lane ``(mode, strategy-id)`` rows come from the stacked
+        schedule tables (``MODE_IDLE``-padded, strategy ids remapped onto
+        the merged strategy universe of all queued requests);
+      * per-lane engine states swap via
+        :func:`repro.core.engine.set_lane_state`;
+      * empty lanes run the no-op branch and contribute EXACTLY zero to
+        the per-lane metric outputs (test-enforced).
+
+    One executable per distinct lane shape (``stats["executables"]``,
+    test-enforced); per-lane outputs are bit-identical to sequential runs
+    of the same requests (the serving benchmark asserts this).
+
+    ``max_steps`` fixes the padded schedule-table width (default: longest
+    queued schedule at ``run`` time; a fixed value keeps the lane shape —
+    and hence the executable — stable across ``run`` calls).
+    """
+
+    def __init__(self, params, cfg: ArchConfig, ecfg: EngineConfig, *,
+                 lanes: int = 4, max_steps: Optional[int] = None,
+                 scfg_dtype=jnp.float32, patch_embed=None,
+                 sync_every_tick: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.lanes = int(lanes)
+        self.max_steps = max_steps
+        self.scfg = SamplerConfig(num_steps=0, dtype=scfg_dtype)
+        self.patch_embed = patch_embed
+        self.sync_every_tick = sync_every_tick
+        self.queue = RequestQueue()
+        self.stats: dict = {}
+        self._tick = None
+        self._universe: tuple = ()
+        self._retired_executables = 0    # compiled by discarded tick jits
+
+    def submit(self, req: Request) -> None:
+        self.queue.submit(req)
+
+    def submit_all(self, reqs) -> None:
+        self.queue.submit_all(reqs)
+
+    # -- internals --------------------------------------------------------
+
+    def _ensure_tick(self, schedules) -> None:
+        """(Re)build the jitted tick when the strategy universe grows.
+
+        The universe is the tick's STATIC closure; growing it re-traces.
+        Requests whose strategies are already resident never do."""
+        known = {id(s) for s in self._universe}
+        new = [s for sched in schedules for s in sched.strategies
+               if id(s) not in known]
+        if self._tick is None or new:
+            if self._tick is not None:
+                # A growing universe re-traces EVERYTHING — keep the old
+                # tick's executables in the count so the recompile is
+                # visible in stats["executables"].
+                self._retired_executables += int(self._tick._cache_size())
+            self._universe = self._universe + tuple(
+                {id(s): s for s in new}.values())
+            self._tick = make_lane_tick(self.cfg, self.ecfg, self.scfg,
+                                        self._universe)
+
+    def run(self) -> dict:
+        """Drain the queue; returns {rid: {out, trace, latency, finish}}.
+
+        Requests are partitioned by lane shape (each partition runs the
+        microbatch loop with its own lane buffers; partitions share the
+        jitted tick, so ``stats["executables"]`` counts one executable
+        per distinct lane shape)."""
+        reqs = [self.queue.pop_ready(float("inf"))
+                for _ in range(len(self.queue))]
+        scheds = {id(r): r.resolve(self.ecfg, self.cfg.n_layers)
+                  for r in reqs}
+        self._ensure_tick(scheds.values())
+        s_max = self.max_steps or max((r.num_steps for r in reqs), default=1)
+        by_shape: dict[tuple, list[Request]] = {}
+        for r in reqs:
+            by_shape.setdefault(r.shape_key(), []).append(r)
+        results: dict = {}
+        total_ticks = 0
+        lane_density: list[np.ndarray] = []
+        lane_pairs: list[np.ndarray] = []
+        lane_active: list[np.ndarray] = []
+        # ONE serving clock across partitions: latency/finish times and
+        # arrival simulation include time spent queued behind an earlier
+        # lane-shape partition.
+        t0 = time.perf_counter()
+        for shape_reqs in by_shape.values():
+            q = RequestQueue()
+            q.submit_all(shape_reqs)
+            part, ticks, dens, ps, act = self._run_partition(
+                q, scheds, s_max, t0)
+            results.update(part)
+            total_ticks += ticks
+            lane_density.append(dens)
+            lane_pairs.append(ps)
+            lane_active.append(act)
+        self.stats = {
+            "executables": (int(self._tick._cache_size())
+                            + self._retired_executables),
+            "ticks": total_ticks,
+            "lanes": self.lanes,
+            "max_steps": s_max,
+            "strategies": [s.name for s in self._universe],
+            "lane_density": (np.concatenate(lane_density)
+                             if lane_density else np.zeros((0, self.lanes))),
+            "lane_pair_sparsity": (np.concatenate(lane_pairs)
+                                   if lane_pairs else
+                                   np.zeros((0, self.lanes))),
+            "lane_active": (np.concatenate(lane_active)
+                            if lane_active else
+                            np.zeros((0, self.lanes), bool)),
+        }
+        return results
+
+    def _run_partition(self, q: RequestQueue, scheds: dict, s_max: int,
+                       t0: float):
+        cfg, ecfg, W = self.cfg, self.ecfg, self.lanes
+        probe = q.pending()[0]
+        b, nv, pd = probe.x0.shape
+        nt, dm = probe.text_emb.shape[1], cfg.d_model
+        n_tokens = nv + nt
+        patch_embed = self.patch_embed
+        if patch_embed is None:
+            patch_embed = default_patch_embed(cfg, pd)
+
+        x = jnp.zeros((W, b, nv, pd), probe.x0.dtype)
+        text = jnp.zeros((W, b, nt, dm), probe.text_emb.dtype)
+        states = stack_lane_states(
+            dit.init_engine_states(cfg, ecfg, b, n_tokens), W)
+        fresh = dit.init_engine_states(cfg, ecfg, b, n_tokens)
+        mode_tab = np.full((W, s_max), MODE_IDLE, np.int32)
+        id_tab = np.zeros((W, s_max, cfg.n_layers), np.int32)
+        dt = np.zeros((W,), np.float32)
+        steps = np.zeros((W,), np.int32)
+        active = np.zeros((W,), bool)
+        lane_req: list[Optional[Request]] = [None] * W
+
+        results: dict = {}
+        pending_out: list = []
+        tick_log: list = []
+        hist: list = []
+        act_log: list = []
+        ticks = 0
+        while len(q) or active.any():
+            now = time.perf_counter() - t0
+            for w in range(W):
+                if active[w]:
+                    continue
+                req = q.pop_ready(now)
+                if req is None:
+                    break
+                sched = scheds[id(req)]
+                mrow, irow = schedule_lane_rows(sched, self._universe, s_max)
+                mode_tab[w], id_tab[w] = mrow, irow
+                dt[w] = np.float32(1.0 / req.num_steps)
+                x = x.at[w].set(req.x0)
+                text = text.at[w].set(req.text_emb)
+                states = set_lane_state(states, w, fresh)
+                steps[w], active[w], lane_req[w] = 0, True, req
+            if not active.any():
+                # Nothing resident and nothing ready yet: idle until the
+                # next arrival instead of burning no-op ticks.
+                na = q.next_arrival()
+                wait = 0.0 if na is None else na - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(wait)
+                continue
+            x, states, dens, ps = self._tick(
+                self.params, patch_embed, x, states, text,
+                jnp.asarray(steps), jnp.asarray(mode_tab),
+                jnp.asarray(id_tab), jnp.asarray(dt), jnp.asarray(active))
+            if self.sync_every_tick:
+                jax.block_until_ready(x)
+            hist.append((dens, ps))
+            act_log.append(active.copy())
+            log = []
+            now = time.perf_counter() - t0
+            for w in range(W):
+                if not active[w]:
+                    continue
+                req = lane_req[w]
+                kind = MODE_NAMES[int(mode_tab[w, steps[w]])]
+                log.append((w, req.rid, int(steps[w]), kind))
+                steps[w] += 1
+                if steps[w] >= req.num_steps:
+                    pending_out.append((req.rid, x[w]))
+                    results[req.rid] = _result(None, [], req.arrival, now)
+                    active[w], lane_req[w] = False, None
+            tick_log.append(log)
+            ticks += 1
+
+        # ONE host sync for outputs + the whole per-lane metric history.
+        outs = jax.device_get([o for _, o in pending_out])
+        for (rid, _), o in zip(pending_out, outs):
+            results[rid]["out"] = np.asarray(o)
+        if hist:
+            dens_h = np.asarray(jax.device_get(jnp.stack(
+                [d for d, _ in hist])))
+            ps_h = np.asarray(jax.device_get(jnp.stack(
+                [p for _, p in hist])))
+        else:
+            dens_h = ps_h = np.zeros((0, W), np.float32)
+        for t_idx, log in enumerate(tick_log):
+            for w, rid, step, kind in log:
+                results[rid]["trace"].append({
+                    "step": step, "kind": kind,
+                    "density": float(dens_h[t_idx, w]),
+                    "pair_sparsity": float(ps_h[t_idx, w])})
+        act_h = (np.stack(act_log) if act_log
+                 else np.zeros((0, W), bool))
+        return results, ticks, dens_h, ps_h, act_h

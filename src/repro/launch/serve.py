@@ -2,8 +2,22 @@
 
 Two serving kinds, matching the paper's domain and the LM shape grid:
 
-  * ``--kind diffusion`` — batched text-to-vision requests through the
-    FlashOmni Update–Dispatch sampler (the paper's deployment scenario).
+  * ``--kind diffusion`` — text-to-vision requests through the FlashOmni
+    Update–Dispatch sampler (the paper's deployment scenario), driven by
+    the :mod:`repro.launch.batching` request queue in one of three modes:
+
+      - ``--serving sequential`` — one request at a time (baseline; the
+        pipeline's LRU sampler cache still shares compiled samplers
+        across same-config requests);
+      - ``--serving stacked``    — same-shape/same-schedule requests
+        stack on the batch axis into ONE cached single-scan sampler call
+        (bit-identical per-lane outputs);
+      - ``--serving continuous`` — mixed-schedule requests interleave in
+        a fixed-width microbatch; lanes retire and refill without
+        recompiling (one executable per lane shape).
+
+    ``--arrival-interval`` simulates request arrivals (seconds between
+    requests); latencies are measured against arrival times.
   * ``--kind lm``        — LM prefill + decode loop with KV caches.
 
 On this container both run smoke configs; the jitted step functions are
@@ -22,44 +36,79 @@ from repro.core.engine import EngineConfig
 from repro.core.masks import MaskConfig
 from repro.core.schedule import available_schedules
 from repro.core.strategy import available_strategies
-from repro.diffusion.pipeline import SamplerConfig, sample
+from repro.launch.batching import (ContinuousBatcher, Request,
+                                   run_sequential, run_stacked)
 from repro.models.registry import get_model
 
 
 def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
                     batch: int = 2, n_vision: int = 96, num_steps: int = 12,
-                    strategy: str = "flashomni", schedule: str = None):
-    """``schedule`` names a registered SparsitySchedule preset (e.g.
+                    strategy: str = "flashomni", schedule: str = None,
+                    serving: str = "sequential", lanes: int = 4,
+                    arrival_interval: float = 0.0, mixed_steps: bool = False):
+    """Queue-driven diffusion serving (see module docstring for modes).
+
+    ``schedule`` names a registered SparsitySchedule preset (e.g.
     ``hunyuan-1.5x``, ``step-ramp``); it overrides the per-step mapping of
-    ``strategy``.  Either way the whole denoise loop is ONE compiled scan
-    per request shape — concurrent schedule variants each cost a single
-    executable, not three jits × steps."""
+    ``strategy``.  ``mixed_steps`` alternates request step counts
+    (``num_steps`` and ``3·num_steps//4``) to exercise the continuous
+    batcher's mixed-length lane interleaving.  Returns the per-request
+    result dict from :mod:`repro.launch.batching`.
+    """
     cfg = get_smoke(arch) if smoke else get_config(arch)
     ecfg = EngineConfig(mask=MaskConfig(
         tau_q=0.5, tau_kv=0.15, interval=4, order=1, degrade=0.3,
         block_q=16, block_kv=16, pool=32, warmup_steps=2),
-        strategy=strategy, schedule=schedule)
+        strategy=strategy)
     from repro.models import dit as ditmod
     params = ditmod.init_params(cfg, jax.random.PRNGKey(0))
-    results = []
     label = schedule or strategy
+
+    requests = []
     for req in range(num_requests):
-        key = jax.random.PRNGKey(100 + req)
-        x0 = jax.random.normal(key, (batch, n_vision, cfg.patch_dim))
-        text = jax.random.normal(key, (batch, cfg.n_text_tokens, cfg.d_model))
-        trace: list = []
-        stats: dict = {}
-        t0 = time.time()
-        out = sample(params, cfg, ecfg, text_emb=text, x0=x0,
-                     scfg=SamplerConfig(num_steps=num_steps), trace=trace,
-                     stats=stats)
-        dt = time.time() - t0
-        dens = [s["density"] for s in trace if s["kind"] == "dispatch"]
-        print(f"[serve] req {req} [{label}]: {num_steps} steps in {dt:.2f}s  "
-              f"mean dispatch density {sum(dens)/max(len(dens),1):.3f}  "
-              f"executables {stats['executables']}  "
-              f"out {out.shape} finite={bool(jnp.isfinite(out).all())}")
-        results.append(out)
+        # One PRNG key per request, SPLIT between noise and text: reusing
+        # a single key for both (the old behaviour) correlates the noise
+        # latents with the text embeddings sample-for-sample.
+        kx, kt = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(100), req))
+        x0 = jax.random.normal(kx, (batch, n_vision, cfg.patch_dim))
+        text = jax.random.normal(kt, (batch, cfg.n_text_tokens, cfg.d_model))
+        steps = num_steps
+        if mixed_steps and req % 2:
+            steps = max(3 * num_steps // 4, 1)
+        requests.append(Request(rid=req, x0=x0, text_emb=text,
+                                num_steps=steps, schedule=schedule,
+                                arrival=req * arrival_interval))
+
+    t0 = time.time()
+    extra = ""
+    if serving == "continuous":
+        batcher = ContinuousBatcher(params, cfg, ecfg, lanes=lanes)
+        batcher.submit_all(requests)
+        results = batcher.run()
+        extra = (f"  executables {batcher.stats['executables']}"
+                 f"  ticks {batcher.stats['ticks']}")
+    elif serving == "stacked":
+        results = run_stacked(params, cfg, ecfg, requests)
+    elif serving == "sequential":
+        results = run_sequential(params, cfg, ecfg, requests)
+    else:
+        raise ValueError(f"unknown serving mode {serving!r}; expected "
+                         "sequential | stacked | continuous")
+    wall = time.time() - t0
+
+    for req in requests:
+        r = results[req.rid]
+        dens = [s["density"] for s in (r["trace"] or [])
+                if s["kind"] == "dispatch"]
+        dtxt = (f"mean dispatch density "
+                f"{sum(dens) / len(dens):.3f}  " if dens else "")
+        print(f"[serve] req {req.rid} [{label}] ({serving}): "
+              f"{req.num_steps} steps, latency {r['latency']:.2f}s  "
+              f"{dtxt}out {r['out'].shape} "
+              f"finite={bool(jnp.isfinite(r['out']).all())}")
+    print(f"[serve] {serving}: {len(requests)} requests in {wall:.2f}s "
+          f"({len(requests) / max(wall, 1e-9):.2f} req/s){extra}")
     return results
 
 
@@ -104,10 +153,25 @@ def main():
                     choices=available_schedules(),
                     help="named SparsitySchedule preset (overrides the "
                          "--strategy per-step mapping)")
+    ap.add_argument("--serving", default="sequential",
+                    choices=["sequential", "stacked", "continuous"],
+                    help="diffusion serving mode (see module docstring)")
+    ap.add_argument("--requests", type=int, default=2)
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="continuous-batcher microbatch width")
+    ap.add_argument("--arrival-interval", type=float, default=0.0,
+                    help="simulated seconds between request arrivals")
+    ap.add_argument("--mixed-steps", action="store_true",
+                    help="alternate request step counts (exercises "
+                         "mixed-length lane interleaving)")
     args = ap.parse_args()
     if args.kind == "diffusion":
         serve_diffusion(args.arch, smoke=not args.full,
-                        strategy=args.strategy, schedule=args.schedule)
+                        strategy=args.strategy, schedule=args.schedule,
+                        serving=args.serving, num_requests=args.requests,
+                        lanes=args.lanes,
+                        arrival_interval=args.arrival_interval,
+                        mixed_steps=args.mixed_steps)
     else:
         serve_lm(args.arch, smoke=not args.full)
 

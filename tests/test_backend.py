@@ -107,11 +107,17 @@ def test_attention_backends_match_oracle(seed):
 
 
 @pytest.mark.parametrize("mode", ["bias", "o_cache"])
-@pytest.mark.parametrize("tau_kv", [0.0, 0.15])
-def test_dispatch_backend_parity(mode, tau_kv):
+@pytest.mark.parametrize("tau_kv,capkv", [(0.0, 1.0), (0.15, 1.0),
+                                          (0.15, 0.5), (0.15, 0.25)])
+def test_dispatch_backend_parity(mode, tau_kv, capkv):
     """Full dispatch step (GEMM-Q → attention → GEMM-O, compact-fused on
-    Pallas) agrees across backends in both cache modes."""
-    cfg_x, p, x, state, H = _engine_setup(mode, "xla", tau_kv=tau_kv)
+    Pallas) agrees across backends in both cache modes — INCLUDING the
+    ``cap_kv``-truncated capacities (0.5 / 0.25): the XLA path now
+    consumes the same per-row CSR lists as the Pallas kernel, so the old
+    "union truncation drops blocks globally per head" divergence is gone
+    (these cases used to be excluded as a documented approximation)."""
+    cfg_x, p, x, state, H = _engine_setup(mode, "xla", tau_kv=tau_kv,
+                                          capkv=capkv)
     cfg_p = dataclasses.replace(cfg_x, backend="pallas", interpret=True)
     _, st = update_layer(p, x, state, cfg_x, n_text=64, heads=H)
     x2 = x + 0.01 * jax.random.normal(jax.random.PRNGKey(5), x.shape)
@@ -120,6 +126,44 @@ def test_dispatch_backend_parity(mode, tau_kv):
     np.testing.assert_allclose(np.asarray(out_x), np.asarray(out_p),
                                atol=1e-5, rtol=1e-5)
     assert int(st_x.k_since) == int(st_p.k_since) == 1
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_attention_backends_match_oracle_truncated_rows(seed):
+    """Per-row KV truncation parity: rows each keep <= cap_kv blocks but
+    collectively need MORE than cap_kv distinct columns, so the per-head
+    union overflows the static capacity.  Both backends must still match
+    the dense oracle exactly — the XLA path may not drop union columns
+    globally (the pre-fix behaviour)."""
+    b, h, t, blk, d = 2, 2, 8, 16, 32
+    n = t * blk
+    cfg = EngineConfig(mask=MaskConfig(pool=blk, block_q=blk, block_kv=blk),
+                       cap_q_frac=1.0, cap_kv_frac=0.25)   # cap_kv = 2 < t
+    spec = cfg.caps(n)
+    assert spec.cap_kv == 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, h, n, d))
+    k = jax.random.normal(ks[1], (b, h, n, d))
+    v = jax.random.normal(ks[2], (b, h, n, d))
+    o_reuse = jax.random.normal(ks[3], (b, h, n, d))
+    m_c = jnp.ones((b, h, t), bool)
+    # Sliding band of width cap_kv: every row within capacity, union = t.
+    idx = jnp.arange(t)
+    band = (idx[None, :] - idx[:, None]) % t < spec.cap_kv
+    m_s = jnp.broadcast_to(band, (b, h, t, t))
+    plan = build_dispatch_plan(m_c, m_s, cfg, n)
+
+    want = masked_block_attention(q, k, v, m_c, m_s, o_reuse,
+                                  block_q=blk, block_kv=blk)
+    got_xla = XlaBackend().attention(q, k, v, o_reuse, plan, spec)
+    got_pls = PallasBackend(interpret=True).attention(q, k, v, o_reuse,
+                                                      plan, spec)
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_pls), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(got_pls),
+                               atol=2e-5, rtol=2e-5)
 
 
 @pytest.mark.parametrize("mode", ["bias", "o_cache"])

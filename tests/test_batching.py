@@ -1,0 +1,217 @@
+"""Batched-serving tests (ISSUE 4 acceptance criteria).
+
+  * stacked-vs-sequential BIT parity per lane (batch-axis stacking into
+    the cached single-scan sampler changes no per-sample numerics);
+  * continuous batcher: mixed-length, mixed-schedule requests interleave
+    in a fixed-width microbatch with per-lane outputs bit-identical to
+    sequential runs, lanes retiring/refilling WITHOUT recompiling (one
+    executable per lane shape, compile-count asserted);
+  * empty-lane padding contributes EXACTLY zero to the per-lane metrics;
+  * schedule pad/stack utilities (MODE_IDLE padding, strategy-id
+    remapping onto a merged universe);
+  * LRU bounds on the sampler cache and the schedule-resolution memo,
+    hit/miss counters surfaced through ``stats``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke
+from repro.core.engine import EngineConfig, resolve_schedule
+from repro.core.lru import LruCache
+from repro.core.masks import MaskConfig
+from repro.core.schedule import (MODE_IDLE, merge_strategies,
+                                 schedule_lane_rows, stack_schedules)
+from repro.diffusion.pipeline import SamplerConfig, sample
+from repro.launch.batching import (ContinuousBatcher, Request, RequestQueue,
+                                   run_sequential, run_stacked)
+from repro.models import dit
+
+
+def _ecfg(**kw):
+    base = dict(tau_q=0.5, tau_kv=0.15, interval=4, order=1, degrade=0.0,
+                block_q=16, block_kv=16, pool=16, warmup_steps=2)
+    mask_keys = set(base)
+    mask_kw = {k: kw.pop(k) for k in list(kw) if k in mask_keys}
+    return EngineConfig(mask=MaskConfig(**{**base, **mask_kw}),
+                        cache_dtype=jnp.float32, cap_q_frac=1.0,
+                        cap_kv_frac=1.0, **kw)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Shared model + a mixed request workload + the sequential oracle."""
+    cfg = get_smoke("flux-mmdit")
+    ecfg = _ecfg()
+    params = dit.init_params(cfg, jax.random.PRNGKey(0))
+
+    def mk(i, steps, schedule=None):
+        kx, kt = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(100), i))
+        return Request(
+            rid=i,
+            x0=jax.random.normal(kx, (1, 64, cfg.patch_dim)),
+            text_emb=jax.random.normal(
+                kt, (1, cfg.n_text_tokens, cfg.d_model)),
+            num_steps=steps, schedule=schedule)
+
+    # Mixed lengths (8 / 6 / 4 steps) AND mixed schedules: two plain
+    # flashomni requests (stackable), two step-ramp, one short straggler.
+    reqs = [mk(0, 8), mk(1, 6, "step-ramp"), mk(2, 8),
+            mk(3, 6, "step-ramp"), mk(4, 4)]
+    seq = run_sequential(params, cfg, ecfg, reqs)
+    return cfg, ecfg, params, reqs, seq
+
+
+def test_stacked_matches_sequential_bitwise(served):
+    cfg, ecfg, params, reqs, seq = served
+    stk = run_stacked(params, cfg, ecfg, reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(
+            stk[r.rid]["out"], seq[r.rid]["out"],
+            err_msg=f"stacked lane {r.rid} diverged from sequential")
+
+
+def test_continuous_bit_parity_and_single_executable(served):
+    """Lanes retire and refill across mixed-length/mixed-schedule requests
+    with ONE compiled tick executable, and every request's output is
+    bit-identical to its sequential run."""
+    cfg, ecfg, params, reqs, seq = served
+    bat = ContinuousBatcher(params, cfg, ecfg, lanes=3, max_steps=8)
+    bat.submit_all(reqs)
+    results = bat.run()
+    for r in reqs:
+        np.testing.assert_array_equal(
+            results[r.rid]["out"], seq[r.rid]["out"],
+            err_msg=f"continuous lane {r.rid} diverged from sequential")
+    # 5 requests over 3 lanes forces at least one retire->refill cycle;
+    # the tick jit must have compiled exactly once (one lane shape).
+    assert bat.stats["executables"] == 1
+    assert bat.stats["ticks"] >= 8      # longest schedule's step count
+    # Per-lane traces match the sequential sampler's per-step metrics.
+    for rid in (0, 1, 4):
+        ts, tc = seq[rid]["trace"], results[rid]["trace"]
+        assert [t["kind"] for t in ts] == [t["kind"] for t in tc]
+        np.testing.assert_allclose(
+            [t["density"] for t in tc], [t["density"] for t in ts],
+            atol=1e-7, rtol=1e-7)
+
+
+def test_continuous_empty_lanes_zero_metrics(served):
+    """Lanes with no resident request (width > live requests) must run the
+    idle branch: zero density / pair-sparsity contribution."""
+    cfg, ecfg, params, reqs, seq = served
+    bat = ContinuousBatcher(params, cfg, ecfg, lanes=4, max_steps=8)
+    bat.submit_all([reqs[0], reqs[4]])   # 2 requests over 4 lanes
+    results = bat.run()
+    np.testing.assert_array_equal(results[reqs[0].rid]["out"],
+                                  seq[reqs[0].rid]["out"])
+    act = bat.stats["lane_active"]
+    dens = bat.stats["lane_density"]
+    ps = bat.stats["lane_pair_sparsity"]
+    assert (~act).any()                   # idle lanes existed
+    assert float(np.abs(dens[~act]).max(initial=0.0)) == 0.0
+    assert float(np.abs(ps[~act]).max(initial=0.0)) == 0.0
+    # ...and active lanes did report nonzero metrics.
+    assert float(np.abs(dens[act]).max(initial=0.0)) > 0.0
+
+
+def test_request_queue_arrival_order():
+    q = RequestQueue()
+    mk = lambda rid, at: Request(rid=rid, x0=jnp.zeros((1, 1, 1)),
+                                 text_emb=jnp.zeros((1, 1, 1)),
+                                 num_steps=1, arrival=at)
+    q.submit(mk("late", 5.0))
+    q.submit(mk("a", 0.0))
+    q.submit(mk("b", 0.0))
+    assert len(q) == 3 and q.next_arrival() == 0.0
+    assert q.pop_ready(0.0).rid == "a"    # FIFO within equal arrivals
+    assert q.pop_ready(0.0).rid == "b"
+    assert q.pop_ready(1.0) is None       # "late" not arrived yet
+    assert q.pop_ready(5.0).rid == "late"
+
+
+# ---------------------------------------------------------------------------
+# Schedule pad/stack utilities
+# ---------------------------------------------------------------------------
+
+def test_stack_schedules_pads_and_remaps():
+    ecfg = _ecfg()
+    s_plain = resolve_schedule(ecfg, 4, 3)
+    s_ramp = resolve_schedule(ecfg, 6, 3, schedule="step-ramp")
+    mode, ids, strategies, lengths = stack_schedules([s_plain, s_ramp])
+    assert mode.shape == (2, 6) and ids.shape == (2, 6, 3)
+    assert lengths == [4, 6]
+    # Lane 0 pads steps 4..5 with MODE_IDLE; lane 1 has none.
+    assert (mode[0, 4:] == MODE_IDLE).all() and (mode[0, :4] != MODE_IDLE).all()
+    assert (mode[1] != MODE_IDLE).all()
+    # Ids remap into the merged universe: lane 1's entries address the
+    # step-ramp strategies appended after lane 0's single producer.
+    uni = merge_strategies([s_plain, s_ramp])
+    assert strategies == uni and len(uni) == 4
+    assert ids[0].max() == 0 and ids[1].max() == 3
+    # Remapped rows still select the SAME strategy objects per step.
+    for step in range(6):
+        want = s_ramp.strategies[int(np.asarray(s_ramp.strategy_ids)[step, 0])]
+        assert uni[ids[1, step, 0]] is want
+
+
+def test_schedule_lane_rows_validation():
+    ecfg = _ecfg()
+    s6 = resolve_schedule(ecfg, 6, 2)
+    with pytest.raises(ValueError, match="max_steps"):
+        schedule_lane_rows(s6, s6.strategies, 4)
+    other = resolve_schedule(ecfg, 6, 2, schedule="step-ramp")
+    with pytest.raises(ValueError, match="shared lane strategy set"):
+        schedule_lane_rows(other, s6.strategies, 6)
+    with pytest.raises(ValueError, match="at least one schedule"):
+        stack_schedules([])
+
+
+# ---------------------------------------------------------------------------
+# LRU bounds on the serving memos
+# ---------------------------------------------------------------------------
+
+def test_lru_cache_bounds_and_counters():
+    c = LruCache(2)
+    assert c.get("a") is None and c.misses == 1
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1 and c.hits == 1
+    c.put("c", 3)                      # evicts "b" (LRU after the "a" hit)
+    assert len(c) == 2 and c.evictions == 1
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.stats()["maxsize"] == 2
+    with pytest.raises(ValueError):
+        LruCache(0)
+
+
+def test_sampler_cache_is_bounded_with_stats(served):
+    """Cycling > maxsize distinct sampler configurations must not grow the
+    cache past its bound, and stats must expose the hit/miss counters."""
+    import repro.diffusion.pipeline as pl
+    cfg, ecfg, params, reqs, seq = served
+    old = pl._SAMPLER_CACHE
+    pl._SAMPLER_CACHE = LruCache(2)
+    try:
+        x0 = reqs[0].x0
+        text = reqs[0].text_emb
+        stats: dict = {}
+        for steps in (3, 4, 5, 3):     # 3 distinct configs through size 2
+            sample(params, cfg, ecfg, text_emb=text, x0=x0,
+                   scfg=SamplerConfig(num_steps=steps), stats=stats)
+        sc = stats["sampler_cache"]
+        assert sc["size"] <= 2 and sc["evictions"] >= 1
+        # The repeat of steps=3 was evicted in between: 4 misses, 0 hits.
+        assert sc["misses"] == 4 and sc["hits"] == 0
+        sample(params, cfg, ecfg, text_emb=text, x0=x0,
+               scfg=SamplerConfig(num_steps=3), stats=stats)
+        assert stats["sampler_cache"]["hits"] == 1
+        assert "schedule_cache" in stats
+        assert stats["schedule_cache"]["maxsize"] >= 2
+    finally:
+        pl._SAMPLER_CACHE = old
