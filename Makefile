@@ -3,6 +3,8 @@
 #   make test              tier-1 test suite (ROADMAP verify command)
 #   make smoke             fast benchmark smoke (dispatch-plan amortization +
 #                          schedule scan + micro rows); writes bench-smoke.json
+#                          locally (gitignored — CI publishes it as the
+#                          `bench-smoke` workflow artifact, never in-tree)
 #   make bench             full paper-figure benchmark suite
 #   make bench-strategies  sweep the strategy + schedule registries: density /
 #                          pair-sparsity / fidelity table per producer

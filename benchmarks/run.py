@@ -7,7 +7,11 @@ at its smallest shape, the sparse-GEMM micro rows and the single-scan
 schedule comparison) so CI and ``make smoke`` get a signal in seconds
 rather than minutes.  ``--only SUBSTR`` filters suites by label;
 ``--json PATH`` additionally writes the rows (plus suite wall-times) as a
-JSON document — CI uploads the smoke run's JSON as a workflow artifact.
+JSON document.  The JSON is a build ARTIFACT: CI uploads the smoke run's
+``bench-smoke.json`` as the ``bench-smoke`` workflow artifact (download
+it from the Actions run page) and a guard step fails the build if a
+``bench-*.json`` ever lands in the tree — keep local copies out of
+commits (``.gitignore`` covers the default names).
 """
 
 from __future__ import annotations

@@ -93,6 +93,9 @@ __all__ = [
     "resolve_schedule",
     "schedule_cache_stats",
     "stack_lane_states",
+    "gather_lane_states",
+    "scatter_lane_states",
+    "merge_lane_states",
     "set_lane_state",
     "update_layer",
     "dispatch_layer",
@@ -195,13 +198,59 @@ def stack_lane_states(states: "LayerState", n_lanes: int) -> "LayerState":
         lambda x: jnp.broadcast_to(x, (n_lanes, *x.shape)), states)
 
 
+def gather_lane_states(stacked, lane_ids):
+    """Gather lanes ``lane_ids`` of a lane-stacked pytree (device-side).
+
+    ``lane_ids`` is any int array (host list or traced); every leaf is
+    indexed along its leading lane axis — the general device-side lane
+    SELECT the batched serving tick builds on (``jnp.take`` along axis 0,
+    so the ids may themselves be traced data inside a jitted tick)."""
+    ids = jnp.asarray(lane_ids, jnp.int32)
+    return jax.tree.map(lambda s: jnp.take(s, ids, axis=0), stacked)
+
+
+def scatter_lane_states(stacked, lane_ids, values):
+    """Scatter ``values`` into lanes ``lane_ids`` of a lane-stacked pytree.
+
+    ``values`` carries a leading axis of ``len(lane_ids)``; untouched lanes
+    keep their state.  ``lane_ids`` must be unique (XLA scatter order is
+    otherwise unspecified) and may be TRACED — this is the device-side
+    generalization of :func:`set_lane_state` for use INSIDE compiled tick
+    bodies, where the scatter lowers once per executable.  On the eager
+    host path prefer :func:`set_lane_state`: a static-index update-slice
+    dispatches several times faster than an array-index scatter."""
+    ids = jnp.asarray(lane_ids, jnp.int32)
+    return jax.tree.map(lambda s, v: s.at[ids].set(v.astype(s.dtype)),
+                        stacked, values)
+
+
+def merge_lane_states(old, new, lane_mask):
+    """Per-lane select between two lane-stacked pytrees (device-side).
+
+    ``lane_mask`` is a ``(lanes,)`` bool; True lanes take ``new``, False
+    lanes keep ``old``.  Used by the batched mode-group tick bodies to
+    write back ONLY the lanes that belong to the launched group — the
+    fixed-width group body computes every lane (shape-stable executable)
+    and this masked scatter discards the rest."""
+    mask = jnp.asarray(lane_mask)
+
+    def sel(o, n):
+        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(sel, old, new)
+
+
 def set_lane_state(stacked, lane: int, fresh):
     """Replace lane ``lane`` of a lane-stacked pytree with ``fresh``.
 
-    Used at lane REFILL: a retired lane's engine state (and latents /
-    text embeddings) is overwritten with the next request's fresh state
-    without touching the other in-flight lanes — pure ``.at[lane].set``
-    ops, no recompilation of the serving tick."""
+    The EAGER host-path lane write, used at lane REFILL: a retired lane's
+    engine state (and latents / text embeddings) is overwritten with the
+    next request's fresh state without touching the other in-flight lanes
+    — static-index ``.at[lane].set`` update-slices (cheap to dispatch
+    eagerly), no recompilation of the serving tick.  Inside compiled tick
+    bodies use :func:`scatter_lane_states` / :func:`gather_lane_states` /
+    :func:`merge_lane_states`, the traced-index generalizations."""
     return jax.tree.map(lambda s, f: s.at[lane].set(f), stacked, fresh)
 
 
@@ -375,7 +424,7 @@ def update_layer(
     strategy_id: Optional[jax.Array] = None,
     strategies: Optional[tuple] = None,
     step_idx: Optional[jax.Array] = None,
-    num_steps: Optional[int] = None,
+    num_steps: Optional[int | jax.Array] = None,
 ) -> tuple[jax.Array, LayerState]:
     """Full attention + symbol/cache refresh (paper *Update* phase).
 
@@ -389,7 +438,8 @@ def update_layer(
         block body threads per-layer deployment tables without unrolling.
 
     ``layer_idx`` / ``step_idx`` (traced scalars under the model/pipeline
-    scans) and the static ``num_steps`` reach the strategy's
+    scans) and ``num_steps`` (a static int, or a traced per-lane scalar
+    under the batched serving ticks) reach the strategy's
     :class:`~repro.core.strategy.StrategyContext`.
     """
     b, n, dm = x.shape

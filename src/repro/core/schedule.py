@@ -51,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.strategy import (MultiGranularityStrategy, SparsityStrategy,
-                                 get_strategy)
+                                 get_strategy, strategy_key)
 
 __all__ = [
     "MODE_DENSE",
@@ -64,6 +64,7 @@ __all__ = [
     "merge_strategies",
     "schedule_lane_rows",
     "stack_schedules",
+    "tick_mode_groups",
     "register_schedule",
     "get_schedule",
     "available_schedules",
@@ -250,18 +251,24 @@ class SparsitySchedule:
 # ---------------------------------------------------------------------------
 
 def merge_strategies(schedules: Sequence[SparsitySchedule]) -> tuple:
-    """Union of the schedules' static strategy sets (identity-deduplicated).
+    """Union of the schedules' static strategy sets (value-deduplicated).
 
-    ``resolve_schedule`` memoizes resolution, so two requests with the
-    same spec share strategy OBJECTS and the union stays small.  The
-    merged tuple is the single static active set the serving tick's
-    ``emit_switch`` closes over — every lane's id row indexes it."""
+    Dedup is by :func:`repro.core.strategy.strategy_key`: value-equal
+    registry strategies merge even when they are DISTINCT objects — e.g.
+    after an LRU eviction makes ``resolve_schedule`` re-resolve a spec
+    into fresh instances — so the serving tick's ``emit_switch`` branch
+    count (and hence its compiled executable) is a function of the
+    distinct producer VALUES in flight, not of allocation history.
+    Ad-hoc strategies without a value key dedup by object identity.  The
+    merged tuple is the single static active set the serving tick closes
+    over — every lane's id row indexes it."""
     uniq: list = []
-    seen: dict[int, int] = {}
+    seen: dict = {}
     for sched in schedules:
         for s in sched.strategies:
-            if id(s) not in seen:
-                seen[id(s)] = len(uniq)
+            key = strategy_key(s)
+            if key not in seen:
+                seen[key] = len(uniq)
                 uniq.append(s)
     return tuple(uniq)
 
@@ -273,21 +280,27 @@ def schedule_lane_rows(sched: SparsitySchedule, strategies: tuple,
     Returns host ``(mode_row (num_steps,), id_row (num_steps, L))`` int32
     arrays: the schedule's own steps keep their mode and get their
     strategy ids remapped into ``strategies`` (a :func:`merge_strategies`
-    union that must contain every producer this schedule uses); steps past
+    union that must contain every producer this schedule uses — matched by
+    :func:`~repro.core.strategy.strategy_key`, so a value-equal resident
+    producer satisfies a freshly re-resolved schedule); steps past
     ``sched.num_steps`` pad with :data:`MODE_IDLE` / id 0.  These rows are
     TRACED data — swapping a lane's rows at refill never recompiles."""
     if sched.num_steps > num_steps:
         raise ValueError(
             f"schedule has {sched.num_steps} steps; the lane table holds "
             f"{num_steps} (raise the batcher's max_steps)")
-    index = {id(s): i for i, s in enumerate(strategies)}
-    missing = [s.name for s in sched.strategies if id(s) not in index]
+    index: dict = {}
+    for i, s in enumerate(strategies):
+        index.setdefault(strategy_key(s), i)
+    missing = [s.name for s in sched.strategies
+               if strategy_key(s) not in index]
     if missing:
         raise ValueError(
             f"schedule strategies {missing} are not in the shared lane "
             f"strategy set {[s.name for s in strategies]}; rebuild the "
             "batcher universe (merge_strategies) over all queued requests")
-    remap = np.asarray([index[id(s)] for s in sched.strategies], np.int32)
+    remap = np.asarray([index[strategy_key(s)] for s in sched.strategies],
+                       np.int32)
     mode_row = np.full((num_steps,), MODE_IDLE, np.int32)
     mode_row[: sched.num_steps] = np.asarray(sched.mode)
     id_row = np.zeros((num_steps, sched.n_layers), np.int32)
@@ -318,6 +331,30 @@ def stack_schedules(schedules: Sequence[SparsitySchedule],
     mode = np.stack([m for m, _ in rows])
     ids = np.stack([i for _, i in rows])
     return mode, ids, strategies, lengths
+
+
+def tick_mode_groups(mode_tab: np.ndarray, steps: np.ndarray,
+                     active: np.ndarray) -> list[tuple[int, np.ndarray]]:
+    """Partition one serving tick's ACTIVE lanes by their current mode.
+
+    The stacked schedule tables are host-visible, so BEFORE launching a
+    tick the batcher knows every lane's mode at its own step counter:
+    ``mode_tab[w, steps[w]]``.  Returns ``[(mode, lane_mask), ...]``
+    (mode-sorted; ``lane_mask`` is a ``(lanes,)`` bool over ALL lanes,
+    True only for active lanes currently in that mode).  One group means
+    the tick is mode-HOMOGENEOUS and can run a batched mode body
+    (:func:`repro.diffusion.pipeline.make_grouped_lane_tick`) — lane
+    parallelism on the model batch axis instead of the lane-serial scan;
+    several groups is a genuinely mixed tick, which falls back to the
+    scan.  Idle (inactive) lanes belong to no group.
+    """
+    mode_tab = np.asarray(mode_tab)
+    steps = np.asarray(steps)
+    active = np.asarray(active, bool)
+    n_lanes, s_max = mode_tab.shape
+    cur = mode_tab[np.arange(n_lanes), np.clip(steps, 0, s_max - 1)]
+    return [(int(m), active & (cur == m))
+            for m in sorted({int(c) for c, a in zip(cur, active) if a})]
 
 
 # ---------------------------------------------------------------------------

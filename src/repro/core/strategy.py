@@ -51,6 +51,7 @@ from typing import (Any, Callable, Mapping, NamedTuple, Optional, Protocol,
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import masks as masklib
 from repro.core.symbols import clamp_mask_topk, pack_bits
@@ -61,6 +62,7 @@ __all__ = [
     "SparsityStrategy",
     "finalize_symbols",
     "emit_switch",
+    "strategy_key",
     "register_strategy",
     "get_strategy",
     "available_strategies",
@@ -77,13 +79,17 @@ __all__ = [
 class StrategyContext(NamedTuple):
     """Per-call context handed to ``emit``.
 
-    ``cfg``, ``n_text``, ``n_tokens`` and ``num_steps`` are static (part of
-    the jit closure).  ``layer_idx`` and ``step_idx`` are TRACED scalars
-    under the scan-native schedule (``models.dit`` scans layers,
+    ``cfg``, ``n_text`` and ``n_tokens`` are static (part of the jit
+    closure).  ``layer_idx`` and ``step_idx`` are TRACED scalars under the
+    scan-native schedule (``models.dit`` scans layers,
     ``diffusion.pipeline`` scans steps), so strategies may only use them in
     traced arithmetic (``jnp.where`` / ``lax.switch``), never in Python
     control flow.  Both are ``None`` for direct single-layer calls outside
-    a schedule (``examples/quickstart.py`` style).
+    a schedule (``examples/quickstart.py`` style).  ``num_steps`` is the
+    schedule length: a static Python int under ``pipeline.sample`` (one
+    schedule per trace) or a TRACED int32 scalar under the continuous
+    batcher's serving ticks (lanes mix step counts, so each lane threads
+    its own) — strategies must handle both (``jnp`` arithmetic does).
     """
 
     cfg: Any
@@ -91,7 +97,9 @@ class StrategyContext(NamedTuple):
     n_tokens: int
     layer_idx: Optional[Any] = None    # traced int32 scalar under lax.scan
     step_idx: Optional[Any] = None     # traced int32 scalar under the step scan
-    num_steps: Optional[int] = None    # static schedule length (when known)
+    num_steps: Optional[Any] = None    # schedule length: static int, or a
+                                       # traced per-lane int32 scalar under
+                                       # the batched serving ticks
 
 
 class SymbolSet(NamedTuple):
@@ -206,6 +214,50 @@ def get_strategy(spec: Union[str, "SparsityStrategy"]) -> "SparsityStrategy":
         raise ValueError(
             f"unknown sparsity strategy {spec!r}; registered: "
             f"{available_strategies()}") from None
+
+
+def _key_part(v):
+    """Hashable value-key for one constructor parameter (see strategy_key)."""
+    if v is None or isinstance(v, (str, int, float, bool)):
+        return v
+    if isinstance(v, (tuple, list)):
+        return tuple(_key_part(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _key_part(x)) for k, x in v.items()))
+    key = strategy_key(v)
+    if key[0] == "id":
+        raise TypeError(f"no value key for {v!r}")
+    return key
+
+
+def strategy_key(strategy: "SparsityStrategy"):
+    """Value-level dedup key for registry strategies; id() as the fallback.
+
+    Two value-equal instances of a built-in strategy class (same class,
+    same ``name``, same constructor parameters — compared recursively
+    through child strategies) return the SAME key, so serving-side dedup
+    (``schedule.merge_strategies``, the continuous batcher's strategy
+    universe, the sampler cache) treats them as one producer.  Without
+    this, an LRU eviction in the ``resolve_schedule`` memo makes the next
+    re-resolution of an unchanged spec mint fresh — value-equal — strategy
+    objects, and identity-keyed dedup would grow the universe and re-trace
+    every serving executable for nothing.
+
+    Only the built-in classes are value-keyed (their ``emit`` is a pure
+    function of the constructor parameters).  Ad-hoc / user strategies
+    fall back to object identity: ``("id", id(strategy))`` — correct but
+    never merged.
+    """
+    cls = type(strategy)
+    if cls not in _VALUE_KEYED_CLASSES:
+        return ("id", id(strategy))
+    try:
+        params = tuple(sorted(
+            (k, _key_part(v)) for k, v in vars(strategy).items()
+            if k != "name"))
+    except TypeError:
+        return ("id", id(strategy))
+    return (cls.__name__, strategy.name, params)
 
 
 # ---------------------------------------------------------------------------
@@ -432,8 +484,13 @@ class StepPhasedStrategy:
                       re-classification).
     ``boundaries``  — phase-change steps, ascending.  Floats are fractions
                       of ``ctx.num_steps`` (requires a schedule-driven call
-                      so ``num_steps`` is known); ints are absolute step
-                      indices.  ``len(phases) == len(boundaries) + 1``.
+                      so ``num_steps`` is known — a static int under
+                      ``pipeline.sample`` or a traced per-lane scalar under
+                      the continuous batcher's ticks; both resolve through
+                      the same ``jnp.round`` arithmetic, so batched serving
+                      flips phases at the SAME step as a sequential run);
+                      ints are absolute step indices.
+                      ``len(phases) == len(boundaries) + 1``.
 
     Outside a schedule (``step_idx is None`` — direct ``update_layer``
     calls) phase 0 is used.
@@ -454,7 +511,24 @@ class StepPhasedStrategy:
         if name is not None:
             self.name = name
 
-    def _boundary_steps(self, num_steps: Optional[int]) -> list[int]:
+    def _boundary_steps(self, num_steps) -> list:
+        """Resolve boundaries against ``num_steps``.
+
+        With a STATIC ``num_steps`` (or all-absolute boundaries) this is
+        host arithmetic and the resolved steps are validated ascending.
+        With a TRACED ``num_steps`` (the continuous batcher threads each
+        lane's own step count through the tick) fractional boundaries
+        resolve via ``jnp.round`` — fractional semantics survive batching
+        instead of silently requiring absolute boundaries.  BOTH paths
+        round the FLOAT32 product half-to-even (the static path through
+        numpy): device arithmetic is f32, and a float64 host resolve can
+        land one step away on near-half products (e.g. 0.3·5 is
+        1.4999998 in f64 but 1.5000001 in f32), which would break the
+        batcher's bit-parity-with-``sample`` guarantee.  Monotone raw
+        boundaries stay monotone after the resolve, so the ascending
+        guarantee carries over.
+        """
+        traced = num_steps is not None and not isinstance(num_steps, int)
         steps = []
         for b in self.boundaries:
             if isinstance(b, float):
@@ -463,9 +537,14 @@ class StepPhasedStrategy:
                         f"{self.name}: fractional boundary {b} needs "
                         "StrategyContext.num_steps (run under a "
                         "SparsitySchedule)")
-                b = int(round(b * num_steps))
-            steps.append(int(b))
-        if steps != sorted(steps):
+                if traced:
+                    b = jnp.round(
+                        jnp.float32(b) * jnp.asarray(num_steps, jnp.float32)
+                    ).astype(jnp.int32)
+                else:
+                    b = int(np.round(np.float32(b) * np.float32(num_steps)))
+            steps.append(b if traced and not isinstance(b, int) else int(b))
+        if not traced and [int(s) for s in steps] != sorted(int(s) for s in steps):
             raise ValueError(f"{self.name}: boundaries must ascend: {steps}")
         return steps
 
@@ -479,6 +558,14 @@ class StepPhasedStrategy:
             phase = phase + (sidx >= s).astype(jnp.int32)
         branches = [lambda q, k, c=c: c.emit(q, k, ctx) for c in self.phases]
         return jax.lax.switch(phase, branches, q, k)
+
+
+# Built-in classes whose emit is a pure function of the constructor
+# parameters: safe to dedup by value (see strategy_key).  Exact types only —
+# subclasses may carry extra behaviour and fall back to identity.
+_VALUE_KEYED_CLASSES = (FlashOmniStrategy, CacheAllStrategy, SkipOnlyStrategy,
+                        SlidingWindowStrategy, MultiGranularityStrategy,
+                        StepPhasedStrategy)
 
 
 register_strategy(

@@ -28,14 +28,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.engine import (EngineConfig, resolve_schedule,
-                               schedule_cache_stats)
+from repro.core.engine import (EngineConfig, merge_lane_states,
+                               resolve_schedule, schedule_cache_stats)
 from repro.core.lru import LruCache
+from repro.core.strategy import strategy_key
 from repro.core.symbols import unpack_bits
 from repro.models import dit
 
-__all__ = ["SamplerConfig", "sample", "make_lane_tick", "step_density",
-           "pair_sparsity"]
+__all__ = ["SamplerConfig", "sample", "make_lane_tick",
+           "make_grouped_lane_tick", "step_density", "pair_sparsity"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,11 +158,14 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
 
     key = (cfg, ecfg, scfg, n_steps, with_metrics, b, nv, pd,
            text_emb.shape[1], x0.dtype, text_emb.dtype, patch_embed.dtype,
-           tuple(id(s) for s in sched.strategies))
+           tuple(strategy_key(s) for s in sched.strategies))
     entry = _SAMPLER_CACHE.get(key)
     if entry is None:
-        # The strategies tuple is pinned alive next to its compiled fn so
-        # the id()-based key can never alias a recycled object.
+        # Registry strategies key by VALUE (strategy_key), so a schedule
+        # re-resolved after an LRU eviction of the resolve_schedule memo
+        # still HITS this cache; ad-hoc strategies key by id() and pin
+        # their strategies tuple alive next to the compiled fn so the id
+        # can never alias a recycled object.
         entry = _SAMPLER_CACHE.put(key, (build(), sched.strategies))
     fn = entry[0]
     x, ys = fn(params, x0, states, text_emb, patch_embed, sched.mode,
@@ -183,8 +187,9 @@ def sample(params, cfg: ArchConfig, ecfg: EngineConfig, *,
 
 
 def make_lane_tick(cfg: ArchConfig, ecfg: EngineConfig,
-                   scfg: SamplerConfig, strategies: tuple):
-    """Build the continuous batcher's compiled serving tick.
+                   scfg: SamplerConfig, strategies: tuple,
+                   with_metrics: bool = True):
+    """Build the continuous batcher's lane-serial serving tick (fallback).
 
     One tick advances every lane of a fixed-width microbatch by ONE
     denoising step.  The tick body is a ``lax.scan`` over the LANE axis
@@ -196,42 +201,53 @@ def make_lane_tick(cfg: ArchConfig, ecfg: EngineConfig,
     per-lane numerics are bit-identical to a sequential run of the same
     request (the acceptance criterion of the serving benchmark), because
     each lane body executes exactly the single-request op sequence at the
-    single-request shapes.
+    single-request shapes.  Mode-HOMOGENEOUS ticks should instead run a
+    batched mode body from :func:`make_grouped_lane_tick` (lane
+    parallelism on the batch axis); this scan handles the genuinely mixed
+    remainders, where the per-lane ``lax.switch`` is unavoidable.
 
     The returned function is jitted ONCE per lane shape — lanes retire
     and refill by swapping traced data (tables, step counters, state
     slices), never by re-tracing:
 
         tick(params, patch_embed, x, states, text_emb, step, mode_tab,
-             id_tab, dt, active) -> (x', states', density, pair_sparsity)
+             id_tab, dt, nsteps, active, reset) -> (x', states', density,
+                                                    pair_sparsity)
 
     with ``x`` (lanes, B, N_v, patch_dim); ``states`` lane-stacked engine
     states (:func:`repro.core.engine.stack_lane_states`); ``text_emb``
     (lanes, B, N_t, d_model); ``step`` (lanes,) int32 per-lane step
     counters; ``mode_tab`` (lanes, S) / ``id_tab`` (lanes, S, L) the
     stacked schedule tables; ``dt`` (lanes,) f32 per-lane 1/num_steps;
-    ``active`` (lanes,) bool.  Idle lanes (``active`` false or table
-    padding) run a no-op branch: latents/state pass through and their
-    metric outputs are EXACTLY zero.
+    ``nsteps`` (lanes,) int32 per-lane TOTAL step counts — threaded into
+    ``StrategyContext.num_steps`` as a traced scalar so schedule-varying
+    producers (``step-phased`` fractional boundaries) behave exactly as
+    under ``pipeline.sample``; ``active`` (lanes,) bool; ``reset``
+    (lanes,) bool — True for lanes REFILLED since the last tick, whose
+    engine state is re-initialized ON DEVICE before stepping (the fresh
+    state is a trace constant, so refill costs zero host-side state
+    dispatches — only the lane's latent/text buffers are host-written).
+    Idle lanes (``active`` false or table padding) run a no-op branch:
+    latents/state pass through and their metric outputs are EXACTLY zero.
 
-    ``StrategyContext.num_steps`` is ``None`` inside the tick (lanes mix
-    step counts, so there is no static schedule length): strategies whose
-    emit needs it statically — ``step-phased`` with FRACTIONAL boundaries
-    — raise at trace time; use absolute step boundaries under the batcher.
+    ``with_metrics=False`` skips the per-lane density/pair-sparsity
+    reductions (the outputs are zeros) — the pure-throughput serving
+    configuration; it is a trace-time static, part of the tick key.
     """
     from repro.core.schedule import MODE_IDLE
 
     def tick(params, patch_embed, x, states, text_emb, step, mode_tab,
-             id_tab, dt, active):
+             id_tab, dt, nsteps, active, reset):
         b = x.shape[1]
         n_tokens = x.shape[2] + text_emb.shape[2]
+        fresh = dit.init_engine_states(cfg, ecfg, b, n_tokens)
 
         def branch(mode: str):
-            def f(x, st, xe, te, t, row, i, dts):
+            def f(x, st, xe, te, t, row, i, dts, ns):
                 kw = {}
                 if mode == "update":
                     kw = dict(strategies=strategies, strategy_row=row,
-                              step_idx=i, num_steps=None)
+                              step_idx=i, num_steps=ns)
                 v, st2 = dit.denoise_step(params, cfg, ecfg, st, xe, te, t,
                                           mode=mode, dtype=scfg.dtype, **kw)
                 # dts is a STRONG f32 scalar (sample()'s dt is a weak
@@ -239,11 +255,14 @@ def make_lane_tick(cfg: ArchConfig, ecfg: EngineConfig,
                 # not promoted — the tick's output dtype must equal its
                 # input dtype or the next tick recompiles.
                 x2 = x + v.astype(x.dtype) * dts.astype(x.dtype)
+                if not with_metrics:
+                    return (x2, st2, jnp.zeros((), jnp.float32),
+                            jnp.zeros((), jnp.float32))
                 return (x2, st2, _density_device(st2, ecfg, n_tokens),
                         _pair_sparsity_device(st2, ecfg, n_tokens))
             return f
 
-        def idle(x, st, xe, te, t, row, i, dts):
+        def idle(x, st, xe, te, t, row, i, dts, ns):
             return (x, st, jnp.zeros((), jnp.float32),
                     jnp.zeros((), jnp.float32))
 
@@ -251,18 +270,111 @@ def make_lane_tick(cfg: ArchConfig, ecfg: EngineConfig,
                     idle]
 
         def lane(_, xs):
-            x, st, te, i, mrow, irow, dts, act = xs
+            x, st, te, i, mrow, irow, dts, ns, act, rst = xs
+            # Freshly refilled lane: re-initialize its engine state from
+            # the trace-constant init tree before stepping.
+            st = jax.tree.map(
+                lambda s, f: jnp.where(rst, f.astype(s.dtype), s), st, fresh)
             ic = jnp.clip(i, 0, mrow.shape[0] - 1)
             mode = jnp.where(act, mrow[ic], MODE_IDLE)
             t = (jnp.full((b,), i, jnp.float32) * dts).astype(scfg.dtype)
             xe = (x @ patch_embed).astype(scfg.dtype)
             out = jax.lax.switch(mode, branches, x, st, xe, te, t, irow[ic],
-                                 i, dts)
+                                 i, dts, ns)
             return None, out
 
         _, (x2, st2, dens, ps) = jax.lax.scan(
             lane, None,
-            (x, states, text_emb, step, mode_tab, id_tab, dt, active))
+            (x, states, text_emb, step, mode_tab, id_tab, dt, nsteps,
+             active, reset))
         return x2, st2, dens, ps
 
     return jax.jit(tick)
+
+
+def make_grouped_lane_tick(cfg: ArchConfig, ecfg: EngineConfig,
+                           scfg: SamplerConfig, strategies: tuple,
+                           with_metrics: bool = True):
+    """Build the batched MODE-GROUP serving ticks (same-mode lane folding).
+
+    The continuous batcher's lane tables are host-visible, so before
+    launching a tick the host knows every lane's ``(mode, strategy-id
+    row)`` (:func:`repro.core.schedule.tick_mode_groups`).  When every
+    active lane is in the SAME mode, the lane scan's per-lane
+    ``lax.switch`` is pure overhead — the tick is one batched
+    dense/update/dispatch step over the lanes folded into the model's
+    batch axis.  This factory returns ``{"dense", "update", "dispatch"}``
+    → jitted group bodies, each:
+
+        body(params, patch_embed, x, states, text_emb, step, id_rows, dt,
+             nsteps, lane_mask, reset) -> (x', states', density,
+                                           pair_sparsity)
+
+    Arguments match :func:`make_lane_tick` except the schedule tables are
+    replaced by the CURRENT-step slice: ``id_rows`` (lanes, L) int32 — the
+    per-lane strategy-id rows at each lane's own step (update body only;
+    dense/dispatch ignore them) — and ``lane_mask`` (lanes,) bool selects
+    the group.  The body ``jax.vmap``s the single-lane step over the lane
+    axis — every per-sample op is the batch-axis fold of the sequential
+    op sequence (the stacked-serving bit-parity guarantee), and per-lane
+    traced context (step counter, ``dt``, ``num_steps``, TaylorSeer
+    ``k_since`` offsets, strategy-id rows) batches with it; per-lane
+    outputs stay BIT-identical to sequential runs.  Lanes outside
+    ``lane_mask`` are computed (the executable's shape is lane-count
+    fixed, never group-sized) and then discarded by a masked lane merge
+    (:func:`repro.core.engine.merge_lane_states`): latents/state pass
+    through and metrics are EXACTLY zero, the same contract as the scan
+    tick's idle branch.
+
+    Each body is jitted ONCE per lane shape; with the scan fallback that
+    is a fixed, shape-independent executable budget of ≤ 4 per lane shape
+    (dense / update / dispatch / mixed-fallback), regardless of schedule
+    variety, group sizes, or how lanes retire and refill.  Strategy-id
+    rows are TRACED, so two update groups with different rows are two
+    CALLS of one executable; a heterogeneous row mix inside one update
+    group is legal too (``emit_switch``'s ``lax.switch`` batches into an
+    all-branch select under ``vmap`` — bit-exact, at the cost of running
+    every emitter) — the batcher only folds same-mode lanes, which keeps
+    the common homogeneous tick on the cheap path.
+    """
+
+    def make(mode: str):
+        def body(params, patch_embed, x, states, text_emb, step, id_rows,
+                 dt, nsteps, lane_mask, reset):
+            b = x.shape[1]
+            n_tokens = x.shape[2] + text_emb.shape[2]
+            lanes = x.shape[0]
+            fresh = jax.tree.map(
+                lambda f: jnp.broadcast_to(f, (lanes, *f.shape)),
+                dit.init_engine_states(cfg, ecfg, b, n_tokens))
+            states = merge_lane_states(states, fresh, reset)
+
+            def lane(x_l, st_l, te_l, i, row, dts, ns):
+                t = (jnp.full((b,), i, jnp.float32) * dts).astype(scfg.dtype)
+                xe = (x_l @ patch_embed).astype(scfg.dtype)
+                kw = {}
+                if mode == "update":
+                    kw = dict(strategies=strategies, strategy_row=row,
+                              step_idx=i, num_steps=ns)
+                v, st2 = dit.denoise_step(params, cfg, ecfg, st_l, xe, te_l,
+                                          t, mode=mode, dtype=scfg.dtype,
+                                          **kw)
+                x2 = x_l + v.astype(x_l.dtype) * dts.astype(x_l.dtype)
+                if not with_metrics:
+                    return (x2, st2, jnp.zeros((), jnp.float32),
+                            jnp.zeros((), jnp.float32))
+                return (x2, st2, _density_device(st2, ecfg, n_tokens),
+                        _pair_sparsity_device(st2, ecfg, n_tokens))
+
+            x2, st2, dens, ps = jax.vmap(lane)(x, states, text_emb, step,
+                                               id_rows, dt, nsteps)
+            x_out = merge_lane_states(x, x2, lane_mask)
+            st_out = merge_lane_states(states, st2, lane_mask)
+            zero = jnp.zeros((), jnp.float32)
+            return (x_out, st_out, jnp.where(lane_mask, dens, zero),
+                    jnp.where(lane_mask, ps, zero))
+
+        return jax.jit(body)
+
+    return {"dense": make("dense"), "update": make("update"),
+            "dispatch": make("dispatch")}

@@ -11,15 +11,21 @@ real traffic.  Single-request serving leaves two wins on the table:
   * **Continuous batching** — requests whose schedules differ (length,
     strategy mix, per-layer tables) cannot stack, but they CAN interleave:
     a fixed-width microbatch of lanes, each holding one request, advances
-    every lane by one denoising step per serving tick.  The tick's lane
-    scan selects each lane's ``(mode, strategy-id row)`` from the lane's
-    own TRACED schedule table (:func:`repro.core.schedule.stack_schedules`
-    pads mixed lengths with ``MODE_IDLE``), so lanes retire and refill
-    WITHOUT recompiling — one executable per distinct lane shape,
-    regardless of how many schedule variants flow through (the xDiT /
-    Sparse-vDiT serving observation: keep heterogeneous sparse configs
-    resident in one engine).  A sequential server instead pays one
-    compiled sampler per distinct configuration.
+    every lane by one denoising step per serving tick.  The host reads
+    each lane's ``(mode, strategy-id row)`` from the lane's own schedule
+    table BEFORE launching the tick: a mode-homogeneous tick folds the
+    lanes into the model's batch axis through one batched mode body
+    (same-mode lane folding — stacked-level lane parallelism), and only
+    genuinely mixed ticks take the lane-serial scan whose body
+    ``lax.switch``es per lane.  Either way the tables are TRACED
+    (:func:`repro.core.schedule.stack_schedules` pads mixed lengths with
+    ``MODE_IDLE``), so lanes retire and refill WITHOUT recompiling — a
+    fixed budget of at most FOUR executables per distinct lane shape
+    (dense/update/dispatch group bodies + the mixed fallback), regardless
+    of how many schedule variants flow through (the xDiT / Sparse-vDiT
+    serving observation: keep heterogeneous sparse configs resident in
+    one engine).  A sequential server instead pays one compiled sampler
+    per distinct configuration.
 
 Module contents:
 
@@ -36,6 +42,7 @@ latency) and asserts the per-lane bit-parity acceptance criterion.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from typing import Any, Optional
@@ -46,10 +53,12 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.engine import (EngineConfig, resolve_schedule,
-                               set_lane_state, stack_lane_states)
+                               stack_lane_states)
 from repro.core.schedule import (MODE_IDLE, MODE_NAMES, merge_strategies,
-                                 schedule_lane_rows)
-from repro.diffusion.pipeline import SamplerConfig, make_lane_tick, sample
+                                 schedule_lane_rows, tick_mode_groups)
+from repro.core.strategy import strategy_key
+from repro.diffusion.pipeline import (SamplerConfig, make_grouped_lane_tick,
+                                      make_lane_tick, sample)
 from repro.models import dit
 
 __all__ = ["Request", "RequestQueue", "ContinuousBatcher",
@@ -101,9 +110,13 @@ class RequestQueue:
         self._seq = 0
 
     def submit(self, req: Request) -> None:
-        self._items.append((req.arrival, self._seq, req))
+        # The backing list is kept sorted by (arrival, seq) at all times,
+        # so one bisect insertion is O(log n) compares + O(n) moves —
+        # re-sorting the whole list per insert made submit_all O(n² log n).
+        # The monotone ``seq`` tiebreak means the comparison never reaches
+        # the (unorderable) Request itself and equal arrivals stay FIFO.
+        bisect.insort(self._items, (req.arrival, self._seq, req))
         self._seq += 1
-        self._items.sort(key=lambda it: it[:2])
 
     def submit_all(self, reqs) -> None:
         for r in reqs:
@@ -216,37 +229,79 @@ def run_stacked(params, cfg: ArchConfig, ecfg: EngineConfig, requests,
 # Continuous batcher
 # ---------------------------------------------------------------------------
 
+def _lockstep_capable(schedules) -> bool:
+    """True when every queued schedule shares one mode table and length.
+
+    The ``grouped="auto"`` policy input: such a mix keeps resident lanes
+    mode-homogeneous whenever they fill together, so the batched
+    mode-group bodies earn their compiles; any other mix de-synchronizes
+    and would mostly pay for executables the scan fallback replaces."""
+    ref: Optional[np.ndarray] = None
+    for sched in schedules:
+        mode = np.asarray(sched.mode)
+        if ref is None:
+            ref = mode
+        elif mode.shape != ref.shape or not np.array_equal(mode, ref):
+            return False
+    return True
+
 class ContinuousBatcher:
     """Fixed-width microbatch server over mixed SparsitySchedules.
 
     ``lanes`` requests are resident at once; every serving tick advances
-    each active lane by one denoising step through the compiled lane tick
-    (:func:`repro.diffusion.pipeline.make_lane_tick`).  A lane whose
-    request reaches its own ``num_steps`` RETIRES (output captured) and
-    REFILLS from the queue as soon as a request's arrival time passes —
-    all by swapping traced data, so the tick never recompiles:
+    each active lane by one denoising step.  A lane whose request reaches
+    its own ``num_steps`` RETIRES (output captured) and REFILLS from the
+    queue as soon as a request's arrival time passes — all by swapping
+    traced data, so the ticks never recompile:
 
       * per-lane ``(mode, strategy-id)`` rows come from the stacked
         schedule tables (``MODE_IDLE``-padded, strategy ids remapped onto
         the merged strategy universe of all queued requests);
-      * per-lane engine states swap via
-        :func:`repro.core.engine.set_lane_state`;
-      * empty lanes run the no-op branch and contribute EXACTLY zero to
-        the per-lane metric outputs (test-enforced).
+      * per-lane engine states re-initialize ON DEVICE via the tick's
+        traced ``reset`` mask (the fresh state is a trace constant), so a
+        refill host-writes only the lane's latent/text buffers;
+      * empty lanes pass through and contribute EXACTLY zero to the
+        per-lane metric outputs (test-enforced).
 
-    One executable per distinct lane shape (``stats["executables"]``,
-    test-enforced); per-lane outputs are bit-identical to sequential runs
-    of the same requests (the serving benchmark asserts this).
+    Tick dispatch (same-mode lane folding): the lane tables are
+    host-visible, so each tick partitions the active lanes by current
+    mode (:func:`repro.core.schedule.tick_mode_groups`).  A mode-
+    HOMOGENEOUS tick — the steady state whenever resident lanes run the
+    same schedule phase, e.g. a homogeneous request mix in lockstep —
+    runs one batched mode body (:func:`repro.diffusion.pipeline.
+    make_grouped_lane_tick`): the lanes fold into the model's batch axis
+    and advance in parallel, recovering stacked-serving throughput.
+    Genuinely mixed ticks fall back to the lane-serial scan tick.  The
+    compiled-executable budget is FIXED and shape-independent: at most 4
+    per distinct lane shape (dense / update / dispatch group bodies + the
+    mixed fallback; ``stats["executables"]``, test-enforced ≤ 4), and
+    per-lane outputs are bit-identical to sequential runs of the same
+    requests on either path (the serving benchmark asserts this).
 
     ``max_steps`` fixes the padded schedule-table width (default: longest
     queued schedule at ``run`` time; a fixed value keeps the lane shape —
-    and hence the executable — stable across ``run`` calls).
+    and hence the executables — stable across ``run`` calls).
+
+    ``grouped`` picks the folding policy.  ``"auto"`` (default) enables
+    the mode-group bodies for a ``run`` only when every queued request
+    resolves to the SAME mode table and length — the lockstep-capable mix
+    where folding recovers stacked-level throughput; a heterogeneous mix
+    would compile group bodies it can rarely use (every de-synchronized
+    tick takes the scan anyway), so auto keeps it on the one-executable
+    scan and preserves the cold-serving win over sequential.  ``True``
+    folds every mode-homogeneous tick regardless of the queued mix;
+    ``False`` disables folding entirely (the safety valve for backends
+    whose kernels cannot lower under ``vmap``).  ``with_metrics=False``
+    skips the per-tick density / pair-sparsity reductions for
+    pure-throughput serving (lane metric stats and per-request trace
+    metrics read as zero).
     """
 
     def __init__(self, params, cfg: ArchConfig, ecfg: EngineConfig, *,
                  lanes: int = 4, max_steps: Optional[int] = None,
                  scfg_dtype=jnp.float32, patch_embed=None,
-                 sync_every_tick: bool = True):
+                 sync_every_tick: bool = True, grouped="auto",
+                 with_metrics: bool = True):
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -255,9 +310,16 @@ class ContinuousBatcher:
         self.scfg = SamplerConfig(num_steps=0, dtype=scfg_dtype)
         self.patch_embed = patch_embed
         self.sync_every_tick = sync_every_tick
+        self.grouped = grouped
+        self.with_metrics = with_metrics
+        if grouped not in ("auto", True, False):
+            raise ValueError(f"grouped must be 'auto', True or False, "
+                             f"got {grouped!r}")
         self.queue = RequestQueue()
         self.stats: dict = {}
         self._tick = None
+        self._grouped_ticks: Optional[dict] = None
+        self._use_grouped = False        # per-run policy decision
         self._universe: tuple = ()
         self._retired_executables = 0    # compiled by discarded tick jits
 
@@ -269,24 +331,41 @@ class ContinuousBatcher:
 
     # -- internals --------------------------------------------------------
 
-    def _ensure_tick(self, schedules) -> None:
-        """(Re)build the jitted tick when the strategy universe grows.
+    def _cache_sizes(self) -> int:
+        """Live compiled-executable count across all tick jits."""
+        fns = [self._tick] + (list(self._grouped_ticks.values())
+                              if self._grouped_ticks else [])
+        return sum(int(f._cache_size()) for f in fns if f is not None)
 
-        The universe is the tick's STATIC closure; growing it re-traces.
-        Requests whose strategies are already resident never do."""
-        known = {id(s) for s in self._universe}
-        new = [s for sched in schedules for s in sched.strategies
-               if id(s) not in known]
+    def _ensure_tick(self, schedules) -> None:
+        """(Re)build the jitted ticks when the strategy universe grows.
+
+        The universe is the ticks' STATIC closure; growing it re-traces.
+        Requests whose strategies are already resident — by VALUE
+        (:func:`repro.core.strategy.strategy_key`), so a re-resolved spec
+        whose memo entry was LRU-evicted still counts as resident — never
+        do."""
+        known = {strategy_key(s) for s in self._universe}
+        new: list = []
+        for sched in schedules:
+            for s in sched.strategies:
+                key = strategy_key(s)
+                if key not in known:
+                    known.add(key)
+                    new.append(s)
         if self._tick is None or new:
             if self._tick is not None:
                 # A growing universe re-traces EVERYTHING — keep the old
-                # tick's executables in the count so the recompile is
+                # ticks' executables in the count so the recompile is
                 # visible in stats["executables"].
-                self._retired_executables += int(self._tick._cache_size())
-            self._universe = self._universe + tuple(
-                {id(s): s for s in new}.values())
+                self._retired_executables += self._cache_sizes()
+            self._universe = self._universe + tuple(new)
             self._tick = make_lane_tick(self.cfg, self.ecfg, self.scfg,
-                                        self._universe)
+                                        self._universe, self.with_metrics)
+            self._grouped_ticks = (
+                make_grouped_lane_tick(self.cfg, self.ecfg, self.scfg,
+                                       self._universe, self.with_metrics)
+                if self.grouped else None)
 
     def run(self) -> dict:
         """Drain the queue; returns {rid: {out, trace, latency, finish}}.
@@ -300,12 +379,15 @@ class ContinuousBatcher:
         scheds = {id(r): r.resolve(self.ecfg, self.cfg.n_layers)
                   for r in reqs}
         self._ensure_tick(scheds.values())
+        self._use_grouped = self._grouped_ticks is not None and (
+            self.grouped is True or _lockstep_capable(scheds.values()))
         s_max = self.max_steps or max((r.num_steps for r in reqs), default=1)
         by_shape: dict[tuple, list[Request]] = {}
         for r in reqs:
             by_shape.setdefault(r.shape_key(), []).append(r)
         results: dict = {}
         total_ticks = 0
+        grouped_ticks = 0
         lane_density: list[np.ndarray] = []
         lane_pairs: list[np.ndarray] = []
         lane_active: list[np.ndarray] = []
@@ -316,17 +398,19 @@ class ContinuousBatcher:
         for shape_reqs in by_shape.values():
             q = RequestQueue()
             q.submit_all(shape_reqs)
-            part, ticks, dens, ps, act = self._run_partition(
+            part, ticks, gticks, dens, ps, act = self._run_partition(
                 q, scheds, s_max, t0)
             results.update(part)
             total_ticks += ticks
+            grouped_ticks += gticks
             lane_density.append(dens)
             lane_pairs.append(ps)
             lane_active.append(act)
         self.stats = {
-            "executables": (int(self._tick._cache_size())
-                            + self._retired_executables),
+            "executables": self._cache_sizes() + self._retired_executables,
             "ticks": total_ticks,
+            "grouped_ticks": grouped_ticks,
+            "scan_ticks": total_ticks - grouped_ticks,
             "lanes": self.lanes,
             "max_steps": s_max,
             "strategies": [s.name for s in self._universe],
@@ -356,12 +440,13 @@ class ContinuousBatcher:
         text = jnp.zeros((W, b, nt, dm), probe.text_emb.dtype)
         states = stack_lane_states(
             dit.init_engine_states(cfg, ecfg, b, n_tokens), W)
-        fresh = dit.init_engine_states(cfg, ecfg, b, n_tokens)
         mode_tab = np.full((W, s_max), MODE_IDLE, np.int32)
         id_tab = np.zeros((W, s_max, cfg.n_layers), np.int32)
         dt = np.zeros((W,), np.float32)
+        nsteps = np.zeros((W,), np.int32)
         steps = np.zeros((W,), np.int32)
         active = np.zeros((W,), bool)
+        reset = np.zeros((W,), bool)
         lane_req: list[Optional[Request]] = [None] * W
 
         results: dict = {}
@@ -370,6 +455,7 @@ class ContinuousBatcher:
         hist: list = []
         act_log: list = []
         ticks = 0
+        grouped_ticks = 0
         while len(q) or active.any():
             now = time.perf_counter() - t0
             for w in range(W):
@@ -382,9 +468,14 @@ class ContinuousBatcher:
                 mrow, irow = schedule_lane_rows(sched, self._universe, s_max)
                 mode_tab[w], id_tab[w] = mrow, irow
                 dt[w] = np.float32(1.0 / req.num_steps)
+                nsteps[w] = req.num_steps
                 x = x.at[w].set(req.x0)
                 text = text.at[w].set(req.text_emb)
-                states = set_lane_state(states, w, fresh)
+                # Engine state re-initializes ON DEVICE inside the tick
+                # (traced `reset` mask -> trace-constant fresh state): a
+                # refill costs two latent/text writes, not a whole
+                # LayerState pytree of host dispatches.
+                reset[w] = True
                 steps[w], active[w], lane_req[w] = 0, True, req
             if not active.any():
                 # Nothing resident and nothing ready yet: idle until the
@@ -394,10 +485,27 @@ class ContinuousBatcher:
                 if wait > 0:
                     time.sleep(wait)
                 continue
-            x, states, dens, ps = self._tick(
-                self.params, patch_embed, x, states, text,
-                jnp.asarray(steps), jnp.asarray(mode_tab),
-                jnp.asarray(id_tab), jnp.asarray(dt), jnp.asarray(active))
+            groups = tick_mode_groups(mode_tab, steps, active)
+            if self._use_grouped and len(groups) == 1:
+                # Mode-homogeneous tick: fold the lanes into the model
+                # batch axis through the matching mode-group body.
+                mode, mask = groups[0]
+                id_rows = id_tab[np.arange(W), np.clip(steps, 0, s_max - 1)]
+                x, states, dens, ps = self._grouped_ticks[MODE_NAMES[mode]](
+                    self.params, patch_embed, x, states, text,
+                    jnp.asarray(steps), jnp.asarray(id_rows),
+                    jnp.asarray(dt), jnp.asarray(nsteps), jnp.asarray(mask),
+                    jnp.asarray(reset))
+                grouped_ticks += 1
+            else:
+                # Genuinely mixed modes: lane-serial scan fallback.
+                x, states, dens, ps = self._tick(
+                    self.params, patch_embed, x, states, text,
+                    jnp.asarray(steps), jnp.asarray(mode_tab),
+                    jnp.asarray(id_tab), jnp.asarray(dt),
+                    jnp.asarray(nsteps), jnp.asarray(active),
+                    jnp.asarray(reset))
+            reset[:] = False
             if self.sync_every_tick:
                 jax.block_until_ready(x)
             hist.append((dens, ps))
@@ -437,4 +545,4 @@ class ContinuousBatcher:
                     "pair_sparsity": float(ps_h[t_idx, w])})
         act_h = (np.stack(act_log) if act_log
                  else np.zeros((0, W), bool))
-        return results, ticks, dens_h, ps_h, act_h
+        return results, ticks, grouped_ticks, dens_h, ps_h, act_h

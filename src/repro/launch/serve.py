@@ -14,7 +14,10 @@ Two serving kinds, matching the paper's domain and the LM shape grid:
         (bit-identical per-lane outputs);
       - ``--serving continuous`` — mixed-schedule requests interleave in
         a fixed-width microbatch; lanes retire and refill without
-        recompiling (one executable per lane shape).
+        recompiling (a fixed ≤ 4 executable budget per lane shape).
+        Mode-homogeneous ticks fold same-mode lanes into the model
+        batch axis (``ContinuousBatcher(grouped="auto")``), so a
+        homogeneous request mix serves at stacked-level throughput.
 
     ``--arrival-interval`` simulates request arrivals (seconds between
     requests); latencies are measured against arrival times.
@@ -87,7 +90,9 @@ def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
         batcher.submit_all(requests)
         results = batcher.run()
         extra = (f"  executables {batcher.stats['executables']}"
-                 f"  ticks {batcher.stats['ticks']}")
+                 f"  ticks {batcher.stats['ticks']}"
+                 f" ({batcher.stats['grouped_ticks']} grouped"
+                 f"/{batcher.stats['scan_ticks']} scan)")
     elif serving == "stacked":
         results = run_stacked(params, cfg, ecfg, requests)
     elif serving == "sequential":

@@ -201,10 +201,18 @@ def denoise_step(params, cfg: ArchConfig, ecfg: EngineConfig, states: LayerState
         / strategy objects, ``None`` entries fall back to
         ``ecfg.strategy``); canonicalized into the pair above here.
 
-    ``step_idx`` (traced scalar) / ``num_steps`` (static) flow into the
+    ``step_idx`` (traced scalar) and ``num_steps`` (a static int under
+    ``pipeline.sample``, or a traced per-lane int32 scalar under the
+    batched serving ticks — lanes mix step counts) flow into the
     :class:`~repro.core.strategy.StrategyContext` for schedule-varying
     producers; the scanned layer index is always threaded as the traced
     ``ctx.layer_idx``.
+
+    Under the grouped serving tick the whole step body is ``jax.vmap``ed
+    over the lane axis, so ``strategy_row`` may arrive BATCHED (one id row
+    per lane): the block scan still threads one row entry per layer, and
+    ``emit_switch`` lowers the now-batched ``lax.switch`` to an all-branch
+    select — bit-exact per lane, whatever mix of rows the group carries.
     """
     b = x_vision.shape[0]
     n_text = text_emb.shape[1]

@@ -1,19 +1,25 @@
-"""Batched-serving tests (ISSUE 4 acceptance criteria).
+"""Batched-serving tests (ISSUE 4 + ISSUE 5 acceptance criteria).
 
   * stacked-vs-sequential BIT parity per lane (batch-axis stacking into
     the cached single-scan sampler changes no per-sample numerics);
   * continuous batcher: mixed-length, mixed-schedule requests interleave
     in a fixed-width microbatch with per-lane outputs bit-identical to
-    sequential runs, lanes retiring/refilling WITHOUT recompiling (one
-    executable per lane shape, compile-count asserted);
+    sequential runs, lanes retiring/refilling WITHOUT recompiling (a
+    fixed ≤ 4 executable budget per lane shape, compile-count asserted);
+  * same-mode lane folding: mode-homogeneous ticks run the batched
+    mode-group bodies (bit parity asserted), mixed ticks exercise the
+    lane-scan fallback, and the executable budget is shape-independent;
+  * ``step-phased`` FRACTIONAL boundaries behave identically under the
+    batcher and under ``pipeline.sample`` (the tick threads per-lane
+    traced ``num_steps`` into the StrategyContext);
+  * strategy dedup is by VALUE: re-resolving an LRU-evicted spec mints
+    fresh strategy objects but must not grow the universe or re-trace;
   * empty-lane padding contributes EXACTLY zero to the per-lane metrics;
   * schedule pad/stack utilities (MODE_IDLE padding, strategy-id
     remapping onto a merged universe);
   * LRU bounds on the sampler cache and the schedule-resolution memo,
     hit/miss counters surfaced through ``stats``.
 """
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +31,9 @@ from repro.core.engine import EngineConfig, resolve_schedule
 from repro.core.lru import LruCache
 from repro.core.masks import MaskConfig
 from repro.core.schedule import (MODE_IDLE, merge_strategies,
-                                 schedule_lane_rows, stack_schedules)
+                                 schedule_lane_rows, stack_schedules,
+                                 tick_mode_groups)
+from repro.core.strategy import StepPhasedStrategy, strategy_key
 from repro.diffusion.pipeline import SamplerConfig, sample
 from repro.launch.batching import (ContinuousBatcher, Request, RequestQueue,
                                    run_sequential, run_stacked)
@@ -42,22 +50,25 @@ def _ecfg(**kw):
                         cap_kv_frac=1.0, **kw)
 
 
+def _mk_request(cfg, i, steps, schedule=None, layer_strategies=None):
+    kx, kt = jax.random.split(
+        jax.random.fold_in(jax.random.PRNGKey(100), i))
+    return Request(
+        rid=i,
+        x0=jax.random.normal(kx, (1, 64, cfg.patch_dim)),
+        text_emb=jax.random.normal(
+            kt, (1, cfg.n_text_tokens, cfg.d_model)),
+        num_steps=steps, schedule=schedule,
+        layer_strategies=layer_strategies)
+
+
 @pytest.fixture(scope="module")
 def served():
     """Shared model + a mixed request workload + the sequential oracle."""
     cfg = get_smoke("flux-mmdit")
     ecfg = _ecfg()
     params = dit.init_params(cfg, jax.random.PRNGKey(0))
-
-    def mk(i, steps, schedule=None):
-        kx, kt = jax.random.split(
-            jax.random.fold_in(jax.random.PRNGKey(100), i))
-        return Request(
-            rid=i,
-            x0=jax.random.normal(kx, (1, 64, cfg.patch_dim)),
-            text_emb=jax.random.normal(
-                kt, (1, cfg.n_text_tokens, cfg.d_model)),
-            num_steps=steps, schedule=schedule)
+    mk = lambda i, steps, schedule=None: _mk_request(cfg, i, steps, schedule)
 
     # Mixed lengths (8 / 6 / 4 steps) AND mixed schedules: two plain
     # flashomni requests (stackable), two step-ramp, one short straggler.
@@ -76,12 +87,16 @@ def test_stacked_matches_sequential_bitwise(served):
             err_msg=f"stacked lane {r.rid} diverged from sequential")
 
 
-def test_continuous_bit_parity_and_single_executable(served):
+def test_continuous_bit_parity_and_executable_budget(served):
     """Lanes retire and refill across mixed-length/mixed-schedule requests
-    with ONE compiled tick executable, and every request's output is
-    bit-identical to its sequential run."""
+    inside the fixed ≤ 4 executable budget (mode-group bodies + mixed
+    fallback), every request's output is bit-identical to its sequential
+    run, and the mixed workload exercises BOTH tick paths."""
     cfg, ecfg, params, reqs, seq = served
-    bat = ContinuousBatcher(params, cfg, ecfg, lanes=3, max_steps=8)
+    # grouped=True (not "auto"): force folding on a non-lockstep mix so
+    # this test covers grouped ticks AND the scan fallback side by side.
+    bat = ContinuousBatcher(params, cfg, ecfg, lanes=3, max_steps=8,
+                            grouped=True)
     bat.submit_all(reqs)
     results = bat.run()
     for r in reqs:
@@ -89,9 +104,18 @@ def test_continuous_bit_parity_and_single_executable(served):
             results[r.rid]["out"], seq[r.rid]["out"],
             err_msg=f"continuous lane {r.rid} diverged from sequential")
     # 5 requests over 3 lanes forces at least one retire->refill cycle;
-    # the tick jit must have compiled exactly once (one lane shape).
-    assert bat.stats["executables"] == 1
+    # the grouped dense/update/dispatch bodies + the mixed-fallback scan
+    # are a FIXED budget: at most 4 executables per lane shape, however
+    # lanes churn.
+    assert 1 <= bat.stats["executables"] <= 4
     assert bat.stats["ticks"] >= 8      # longest schedule's step count
+    # This workload starts lockstep (mode-homogeneous ticks -> grouped
+    # bodies) and de-synchronizes when the 4-step straggler refills a
+    # lane (mixed modes -> scan fallback): both paths must have run.
+    assert bat.stats["grouped_ticks"] > 0
+    assert bat.stats["scan_ticks"] > 0
+    assert bat.stats["ticks"] == (bat.stats["grouped_ticks"]
+                                  + bat.stats["scan_ticks"])
     # Per-lane traces match the sequential sampler's per-step metrics.
     for rid in (0, 1, 4):
         ts, tc = seq[rid]["trace"], results[rid]["trace"]
@@ -99,6 +123,147 @@ def test_continuous_bit_parity_and_single_executable(served):
         np.testing.assert_allclose(
             [t["density"] for t in tc], [t["density"] for t in ts],
             atol=1e-7, rtol=1e-7)
+
+
+def test_grouped_tick_homogeneous_bit_parity(served):
+    """A homogeneous-schedule mix runs EVERY tick through the batched
+    mode-group bodies (no scan fallback), stays inside the executable
+    budget, and keeps per-lane outputs bit-identical to sequential."""
+    cfg, ecfg, params, _, _ = served
+    reqs = [_mk_request(cfg, 20 + i, 6) for i in range(4)]
+    seq = run_sequential(params, cfg, ecfg, reqs)
+    bat = ContinuousBatcher(params, cfg, ecfg, lanes=4, max_steps=6)
+    bat.submit_all(reqs)
+    results = bat.run()
+    for r in reqs:
+        np.testing.assert_array_equal(
+            results[r.rid]["out"], seq[r.rid]["out"],
+            err_msg=f"grouped lane {r.rid} diverged from sequential")
+    assert bat.stats["scan_ticks"] == 0
+    assert bat.stats["grouped_ticks"] == bat.stats["ticks"] == 6
+    # Only the update + dispatch group bodies compile for this schedule.
+    assert bat.stats["executables"] <= 4
+    # Per-lane trace metrics flow through the grouped path too.
+    for r in reqs:
+        ts, tc = seq[r.rid]["trace"], results[r.rid]["trace"]
+        assert [t["kind"] for t in ts] == [t["kind"] for t in tc]
+        np.testing.assert_allclose(
+            [t["density"] for t in tc], [t["density"] for t in ts],
+            atol=1e-7, rtol=1e-7)
+
+
+def test_grouped_disabled_falls_back_to_scan(served):
+    """``grouped=False`` (the vmap-incompatible-backend safety valve)
+    serves everything through the lane scan, bit-identically."""
+    cfg, ecfg, params, _, _ = served
+    reqs = [_mk_request(cfg, 30 + i, 4) for i in range(2)]
+    seq = run_sequential(params, cfg, ecfg, reqs)
+    bat = ContinuousBatcher(params, cfg, ecfg, lanes=2, max_steps=4,
+                            grouped=False)
+    bat.submit_all(reqs)
+    results = bat.run()
+    for r in reqs:
+        np.testing.assert_array_equal(results[r.rid]["out"],
+                                      seq[r.rid]["out"])
+    assert bat.stats["grouped_ticks"] == 0
+    assert bat.stats["scan_ticks"] == bat.stats["ticks"]
+    assert bat.stats["executables"] == 1
+
+
+@pytest.mark.parametrize("grouped", ["auto", True])
+def test_step_phased_fractional_boundaries_under_batcher(served, grouped):
+    """`step-phased` with FRACTIONAL boundaries must flip phases at the
+    same step under the batcher as under ``pipeline.sample``: the tick
+    threads each lane's traced ``num_steps`` into the StrategyContext
+    (the old tick passed ``num_steps=None``, so fractional boundaries
+    could not run under the batcher at all).  ``auto`` keeps this
+    non-lockstep mix on the scan tick; forcing ``grouped=True`` covers
+    the vmapped mode-group bodies too (per-lane ``num_steps`` batches)."""
+    cfg, _, params, _, _ = served
+    ecfg = _ecfg(interval=2)     # updates at 0,1,2,4,6: spans the boundary
+    sp = StepPhasedStrategy(phases=("flashomni", "cache-all"),
+                            boundaries=(0.5,))
+    ls = [sp] * cfg.n_layers
+    mk = lambda i, steps: _mk_request(cfg, 40 + i, steps,
+                                      layer_strategies=ls)
+    # DIFFERENT step counts: the fractional boundary resolves per lane
+    # (steps 3 vs 4), which no single absolute boundary can express.
+    reqs = [mk(0, 6), mk(1, 8)]
+    seq = run_sequential(params, cfg, ecfg, reqs)
+    bat = ContinuousBatcher(params, cfg, ecfg, lanes=2, max_steps=8,
+                            grouped=grouped)
+    bat.submit_all(reqs)
+    results = bat.run()
+    for r in reqs:
+        np.testing.assert_array_equal(
+            results[r.rid]["out"], seq[r.rid]["out"],
+            err_msg=f"step-phased lane {r.rid} diverged from sequential")
+
+
+def test_step_phased_boundary_rounding_matches_traced_path():
+    """Static and traced fractional-boundary resolves must agree BIT-FOR-BIT
+    so batched serving flips phases at the same step as `pipeline.sample`.
+    0.3·5 is the canary: 1.4999998 in float64 (rounds to 1) but 1.5000001
+    in float32 (rounds to 2) — both paths must take the f32 answer."""
+    sp = StepPhasedStrategy(phases=("flashomni", "cache-all", "skip-only"),
+                            boundaries=(0.3, 0.9))
+    static = sp._boundary_steps(5)
+    assert static == [2, 4]               # f32 semantics, not float64's [1, 4]
+    traced = [int(jax.jit(lambda n: jnp.stack(sp._boundary_steps(n)))(
+        jnp.int32(5))[i]) for i in range(2)]
+    assert traced == static
+
+
+def test_value_dedup_survives_schedule_memo_eviction(served):
+    """Re-resolving a spec after its resolve_schedule memo entry is gone
+    mints NEW (value-equal) strategy objects; the batcher's value-keyed
+    universe must neither grow nor re-trace (stats["executables"] flat)."""
+    import repro.core.engine as eng
+    cfg, ecfg, params, _, _ = served
+    bat = ContinuousBatcher(params, cfg, ecfg, lanes=2, max_steps=4)
+    bat.submit_all([_mk_request(cfg, 50 + i, 4) for i in range(2)])
+    bat.run()
+    before = bat.stats["executables"]
+    n_strategies = len(bat.stats["strategies"])
+    old_cache = eng._SCHEDULE_CACHE
+    eng._SCHEDULE_CACHE = LruCache(128)   # simulate the LRU eviction
+    try:
+        bat.submit_all([_mk_request(cfg, 60 + i, 4) for i in range(2)])
+        bat.run()
+    finally:
+        eng._SCHEDULE_CACHE = old_cache
+    assert bat.stats["executables"] == before
+    assert len(bat.stats["strategies"]) == n_strategies
+
+
+def test_strategy_key_value_semantics():
+    from repro.core.strategy import (FlashOmniStrategy,
+                                     MultiGranularityStrategy)
+    assert strategy_key(FlashOmniStrategy()) == strategy_key(
+        FlashOmniStrategy())
+    assert strategy_key(FlashOmniStrategy(tau_q=0.3)) != strategy_key(
+        FlashOmniStrategy())
+    # Recursion through child strategies (and dict-valued layer tables).
+    a = MultiGranularityStrategy(children=("flashomni", "sliding-window"),
+                                 head_assign=(0, 0, 1),
+                                 layer_assign={0: 1})
+    b = MultiGranularityStrategy(children=("flashomni", "sliding-window"),
+                                 head_assign=(0, 0, 1),
+                                 layer_assign={0: 1})
+    c = MultiGranularityStrategy(children=("flashomni", "sliding-window"),
+                                 head_assign=(0, 1, 1),
+                                 layer_assign={0: 1})
+    assert strategy_key(a) == strategy_key(b) != strategy_key(c)
+
+    class AdHoc:
+        name = "ad-hoc"
+
+        def emit(self, q, k, ctx):   # pragma: no cover - never called
+            raise NotImplementedError
+
+    x, y = AdHoc(), AdHoc()
+    assert strategy_key(x) != strategy_key(y)      # identity fallback
+    assert strategy_key(x) == strategy_key(x)
 
 
 def test_continuous_empty_lanes_zero_metrics(served):
@@ -135,6 +300,22 @@ def test_request_queue_arrival_order():
     assert q.pop_ready(5.0).rid == "late"
 
 
+def test_request_queue_many_inserts_keep_order():
+    """bisect-based submit keeps the (arrival, seq) order over many
+    out-of-order inserts — equal arrivals stay FIFO by submission."""
+    rng = np.random.default_rng(0)
+    q = RequestQueue()
+    mk = lambda rid, at: Request(rid=rid, x0=jnp.zeros((1, 1, 1)),
+                                 text_emb=jnp.zeros((1, 1, 1)),
+                                 num_steps=1, arrival=at)
+    arrivals = np.round(rng.uniform(0.0, 4.0, size=200), 1)  # many ties
+    for rid, at in enumerate(arrivals):
+        q.submit(mk(rid, float(at)))
+    want = sorted(range(len(arrivals)), key=lambda r: (arrivals[r], r))
+    got = [q.pop_ready(float("inf")).rid for _ in range(len(arrivals))]
+    assert got == want and len(q) == 0
+
+
 # ---------------------------------------------------------------------------
 # Schedule pad/stack utilities
 # ---------------------------------------------------------------------------
@@ -149,15 +330,37 @@ def test_stack_schedules_pads_and_remaps():
     # Lane 0 pads steps 4..5 with MODE_IDLE; lane 1 has none.
     assert (mode[0, 4:] == MODE_IDLE).all() and (mode[0, :4] != MODE_IDLE).all()
     assert (mode[1] != MODE_IDLE).all()
-    # Ids remap into the merged universe: lane 1's entries address the
-    # step-ramp strategies appended after lane 0's single producer.
+    # Ids remap into the merged universe.  Dedup is by VALUE: step-ramp's
+    # own flashomni instance merges with lane 0's value-equal producer,
+    # so the union holds 3 distinct producers, not 4 objects.
     uni = merge_strategies([s_plain, s_ramp])
-    assert strategies == uni and len(uni) == 4
-    assert ids[0].max() == 0 and ids[1].max() == 3
-    # Remapped rows still select the SAME strategy objects per step.
+    assert strategies == uni and len(uni) == 3
+    assert {s.name for s in uni} == {"flashomni", "skip-only", "cache-all"}
+    assert ids[0].max() == 0 and ids[1].max() == 2
+    # Remapped rows still select a VALUE-equal strategy per step.
     for step in range(6):
         want = s_ramp.strategies[int(np.asarray(s_ramp.strategy_ids)[step, 0])]
-        assert uni[ids[1, step, 0]] is want
+        assert strategy_key(uni[ids[1, step, 0]]) == strategy_key(want)
+
+
+def test_tick_mode_groups_partitions_active_lanes():
+    mode_tab = np.asarray([[1, 2, 2, 2],      # lane 0: update then dispatch
+                           [1, 1, 2, 2],      # lane 1
+                           [1, 2, 2, 2],      # lane 2 (inactive)
+                           [3, 3, 3, 3]],     # lane 3: idle padding
+                          np.int32)
+    steps = np.asarray([1, 1, 0, 0], np.int32)
+    active = np.asarray([True, True, False, False])
+    groups = tick_mode_groups(mode_tab, steps, active)
+    assert [m for m, _ in groups] == [1, 2]
+    np.testing.assert_array_equal(groups[0][1], [False, True, False, False])
+    np.testing.assert_array_equal(groups[1][1], [True, False, False, False])
+    # Homogeneous tick: one group covering exactly the active lanes.
+    groups = tick_mode_groups(mode_tab, np.zeros(4, np.int32), active)
+    assert len(groups) == 1 and groups[0][0] == 1
+    np.testing.assert_array_equal(groups[0][1], active)
+    # No active lanes -> no groups.
+    assert tick_mode_groups(mode_tab, steps, np.zeros(4, bool)) == []
 
 
 def test_schedule_lane_rows_validation():
@@ -170,6 +373,33 @@ def test_schedule_lane_rows_validation():
         schedule_lane_rows(other, s6.strategies, 6)
     with pytest.raises(ValueError, match="at least one schedule"):
         stack_schedules([])
+
+
+def test_lane_state_index_ops_roundtrip():
+    """gather/scatter/merge_lane_states are consistent device-side lane
+    index ops over arbitrary pytrees (set_lane_state stays the eager
+    single-lane special case)."""
+    from repro.core.engine import (gather_lane_states, merge_lane_states,
+                                   scatter_lane_states, set_lane_state)
+    tree = {"a": jnp.arange(12.0).reshape(4, 3),
+            "b": jnp.arange(8, dtype=jnp.int32).reshape(4, 2)}
+    got = gather_lane_states(tree, [2, 0])
+    np.testing.assert_array_equal(got["a"], np.asarray(tree["a"])[[2, 0]])
+    fresh = jax.tree.map(lambda s: -jnp.ones_like(s)[0], tree)
+    via_set = set_lane_state(tree, 1, fresh)
+    via_scatter = scatter_lane_states(
+        tree, [1], jax.tree.map(lambda f: f[None], fresh))
+    for k in tree:
+        np.testing.assert_array_equal(via_set[k], via_scatter[k])
+        np.testing.assert_array_equal(via_set[k][0], tree[k][0])
+        np.testing.assert_array_equal(via_set[k][1], fresh[k])
+    mask = jnp.asarray([False, True, False, True])
+    stacked_fresh = jax.tree.map(
+        lambda f: jnp.broadcast_to(f, (4, *f.shape)), fresh)
+    merged = merge_lane_states(tree, stacked_fresh, mask)
+    for k in tree:
+        np.testing.assert_array_equal(merged[k][0], tree[k][0])
+        np.testing.assert_array_equal(merged[k][1], fresh[k])
 
 
 # ---------------------------------------------------------------------------
