@@ -12,10 +12,15 @@
 #                          (compile time + µs/step)
 #   make bench-serving     sequential vs stacked vs continuous-batching
 #                          serving (req/s + p50/p95 latency, bit parity)
+#   make bench-attention   Fig. 6/10 attention table: fraction-of-peak +
+#                          grid-slot accounting (uniform CSR grid vs the
+#                          occupancy-bucketed layout; asserts the >=2x
+#                          slot cut on the bimodal plan)
 
 PY ?= python
 
-.PHONY: test smoke bench bench-strategies bench-schedule bench-serving
+.PHONY: test smoke bench bench-strategies bench-schedule bench-serving \
+        bench-attention
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -34,3 +39,6 @@ bench-schedule:
 
 bench-serving:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only "serving queue"
+
+bench-attention:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only "fig6/fig10 attention"

@@ -3,7 +3,7 @@ three configurations — feature caching (FC) only, block-sparse skipping
 (BSS) only, and both — with randomly generated sparse symbols, exactly as
 in the paper's kernel evaluation.
 
-Three measurements per point:
+Measurements per density point:
   * measured wall-clock speedup of the STRUCTURAL sparse path vs dense
     attention (CPU XLA — the structural skipping is machine-independent);
   * the PLAN-LEVEL row: the same computation over a precomputed
@@ -13,22 +13,110 @@ Three measurements per point:
     wrapper additionally pays per-call index decoding);
   * structural FLOP reduction from compiled cost analysis (the quantity
     that maps 1:1 onto TPU MXU time, where the Pallas CSR kernel skips the
-    same work at grid granularity).
+    same work at grid granularity), plus the fraction of roofline peak
+    (``benchmarks.roofline.PEAK_FLOPS``) the measured time realises;
+  * kernel GRID-SLOT accounting: uniform CSR grid (``BH·Cq·Ckv``) vs the
+    occupancy-bucketed layout (``bucket_grid_slots``) — padded slots the
+    uniform grid launches on skewed plans are the gap between structural
+    FLOP reduction and realised speedup.
 Theory line: 1/(1−s).
+
+The bucketed section times the two-level-grid kernel against the uniform
+kernel on a bimodal (hunyuan-like) plan — a few full-width rows in one
+head, diagonal-only rows everywhere else — and ASSERTS the bucketed
+layout cuts grid slots ≥ 2× while staying bit-identical to the uniform
+kernel (no truncation on this plan).  CI consumes these rows from the
+``--smoke --json`` artifact.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import flops_of, time_fn
+from benchmarks.roofline import HBM_BW, PEAK_FLOPS
 from repro.core.attention import (SparseAttentionSpec, attention_plan_indices,
                                   dense_attention, sparse_attention_from_plan,
                                   sparse_attention_xla)
+from repro.core.plan import bucket_geometry, bucket_grid_slots
 
 
-def run(csv: list, *, n=2048, d=64, bh=4, block=64):
+def _bucketed_bimodal(csv, *, n=256, d=64, heads=4, block=32, kv_buckets=3):
+    """Fig. 10 bucketed-grid row: bimodal occupancy ACROSS heads.
+
+    Head 0 carries a few full-width rows; every other row (all heads) is
+    diagonal-only.  The uniform grid pads every row to ``cap_kv``; the
+    bucketed layout gives the skinny rows narrow slots.  The wide rows fit
+    the wide bucket here, so no truncation occurs and the two kernels must
+    agree bit-for-bit (interpret mode — same flash accumulation order).
+    """
+    from repro.kernels import ops
+
+    t = n // block
+    bh = heads
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (bh, n, d))
+    k = jax.random.normal(ks[1], (bh, n, d))
+    v = jax.random.normal(ks[2], (bh, n, d))
+    o_reuse = jnp.zeros((bh, n, d))
+
+    diag = jnp.eye(t, dtype=bool)
+    m_s = jnp.broadcast_to(diag, (bh, t, t))
+    m_s = m_s.at[0, :3].set(True)            # 3 full-width rows in head 0
+    m_s = m_s.at[..., 0].set(True)
+    m_c = jnp.ones((bh, t), dtype=bool)
+
+    cap_q, cap_kv = t, t
+    geometry = bucket_geometry(cap_q, cap_kv, heads, kv_buckets)
+    slots_uniform = bh * cap_q * cap_kv
+    slots_bucketed = bucket_grid_slots(geometry)
+    # ISSUE 6 acceptance: bucketed layout cuts grid slots >= 2x on a
+    # bimodal plan (static: equal-area buckets give B/(2^B - 1) ≈ 0.43).
+    assert slots_bucketed * 2 <= slots_uniform, (slots_bucketed, slots_uniform)
+
+    uni = functools.partial(ops.flashomni_attention, block_q=block,
+                            block_kv=block, cap_q=cap_q, cap_kv=cap_kv,
+                            interpret=True)
+    bkt = functools.partial(ops.flashomni_attention, block_q=block,
+                            block_kv=block, cap_q=cap_q, cap_kv=cap_kv,
+                            interpret=True, kv_buckets=kv_buckets, heads=heads)
+    out_uni = uni(q, k, v, m_c, m_s, o_reuse)
+    out_bkt = bkt(q, k, v, m_c, m_s, o_reuse)
+    bit_identical = bool(jnp.all(out_uni == out_bkt))
+    assert bit_identical, float(jnp.max(jnp.abs(out_uni - out_bkt)))
+    t_uni = time_fn(uni, q, k, v, m_c, m_s, o_reuse, iters=3, warmup=1)
+    t_bkt = time_fn(bkt, q, k, v, m_c, m_s, o_reuse, iters=3, warmup=1)
+
+    # Live work: Σ kv cells · (QKᵀ + PV) MACs per (bq, bk, d) tile pair.
+    cells = float(jnp.sum(m_s))
+    f_live = 4.0 * cells * block * block * d
+    bytes_live = 4.0 * (3 * bh * n * d + bh * n * d)     # f32 q,k,v + out
+    geo = "/".join(f"{r}x{w}" for r, w in geometry)
+    csv.append({
+        "name": "fig10_attention_uniform_bimodal",
+        "us_per_call": t_uni * 1e6,
+        "derived": (f"grid_slots={slots_uniform}"
+                    f" frac_peak={f_live / t_uni / PEAK_FLOPS:.2e}"
+                    f" frac_hbm={bytes_live / t_uni / HBM_BW:.2e}"),
+    })
+    csv.append({
+        "name": "fig10_attention_bucketed_bimodal",
+        "us_per_call": t_bkt * 1e6,
+        "derived": (f"grid_slots={slots_bucketed}"
+                    f" grid_slot_cut={slots_uniform / slots_bucketed:.2f}"
+                    f" frac_peak={f_live / t_bkt / PEAK_FLOPS:.2e}"
+                    f" frac_hbm={bytes_live / t_bkt / HBM_BW:.2e}"
+                    f" geometry={geo}"
+                    f" bit_identical_to_uniform={int(bit_identical)}"),
+    })
+
+
+def run(csv: list, *, n=2048, d=64, bh=4, block=64, smoke=False):
+    if smoke:
+        n = 512
     t = n // block
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 6)
@@ -42,7 +130,7 @@ def run(csv: list, *, n=2048, d=64, bh=4, block=64):
     f_dense = flops_of(lambda q, k, v: dense_attention(q, k, v), q, k, v)
 
     for mode in ["FC", "BSS", "both"]:
-        for s_target in [0.2, 0.5, 0.8]:
+        for s_target in ([0.5] if smoke else [0.2, 0.5, 0.8]):
             if mode == "FC":
                 p_c, p_s = 1.0 - s_target, 1.0
             elif mode == "BSS":
@@ -82,6 +170,12 @@ def run(csv: list, *, n=2048, d=64, bh=4, block=64):
             slot_live = jnp.arange(cap_q) < q_cnt[..., None]
             cells = float(jnp.sum(jnp.sum(rows, -1) * slot_live))
             csr_speedup = (bh * t * t) / max(cells, 1.0)
+            # Grid-slot accounting (ISSUE 6): the uniform CSR grid launches
+            # BH·Cq·Ckv slots regardless of per-row occupancy; the bucketed
+            # layout at B=3 shrinks the launch to its static slot total.
+            slots_uniform = bh * cap_q * cap_kv
+            slots_bucketed = bucket_grid_slots(
+                bucket_geometry(cap_q, cap_kv, bh, 3))
             csv.append({
                 "name": f"fig6_attention_{mode}_s{s_target}",
                 "us_per_call": t_sparse * 1e6,
@@ -89,6 +183,9 @@ def run(csv: list, *, n=2048, d=64, bh=4, block=64):
                             f" speedup_time={t_dense / t_sparse:.2f}"
                             f" speedup_flops={f_dense / max(f_sparse, 1):.2f}"
                             f" csr_grid_speedup={csr_speedup:.2f}"
+                            f" grid_slots_uniform={slots_uniform}"
+                            f" grid_slots_bucketed={slots_bucketed}"
+                            f" frac_peak={f_sparse / t_sparse / PEAK_FLOPS:.2e}"
                             f" theory={1 / (1 - s_real):.2f}"),
             })
             csv.append({
@@ -96,9 +193,12 @@ def run(csv: list, *, n=2048, d=64, bh=4, block=64):
                 "us_per_call": t_plan * 1e6,
                 "derived": (f"sparsity={s_real:.3f}"
                             f" speedup_time={t_dense / t_plan:.2f}"
+                            f" frac_peak={f_sparse / t_plan / PEAK_FLOPS:.2e}"
                             f" index_decode_overhead_us="
                             f"{(t_sparse - t_plan) * 1e6:.1f}"),
             })
     csv.append({"name": "fig6_attention_dense_baseline",
                 "us_per_call": t_dense * 1e6,
-                "derived": f"flops={f_dense:.3g}"})
+                "derived": (f"flops={f_dense:.3g}"
+                            f" frac_peak={f_dense / t_dense / PEAK_FLOPS:.2e}")})
+    _bucketed_bimodal(csv)

@@ -51,7 +51,8 @@ def _suites():
 SMOKE_SUITES = ("issue1 dispatch-plan amortization",
                 "issue3 schedule scan vs three-jit",
                 "issue4 serving queue",
-                "fig6/fig11 sparse GEMMs")
+                "fig6/fig11 sparse GEMMs",
+                "fig6/fig10 attention")
 
 
 def main(argv=None) -> None:

@@ -49,6 +49,7 @@ class SparseAttentionSpec(NamedTuple):
     block_kv: int
     cap_q: int       # max live Q blocks per (batch, head)
     cap_kv: int      # max live KV blocks in the per-head union
+    kv_buckets: int = 1  # occupancy buckets in the Pallas CSR grid (plan.py)
 
 
 def dense_attention(q, k, v, *, scale: Optional[float] = None, mask=None):
@@ -194,7 +195,11 @@ def sparse_attention_from_plan(
     t_kv = n_kv // bk
     scale = (d ** -0.5) if scale is None else scale
     q_src_ids = q_ids if q_src_ids is None else q_src_ids
-    per_row = kv_row_ids is not None and spec.cap_kv < t_kv
+    # Per-row layout whenever truncation is possible: cap_kv below the full
+    # union, OR occupancy buckets (a narrow bucket can truncate a row even
+    # with cap_kv == T_kv; the bucket-truncated counts live in kv_row_cnt).
+    per_row = kv_row_ids is not None and (spec.cap_kv < t_kv
+                                          or spec.kv_buckets > 1)
 
     qb = q.reshape(*q.shape[:-2], q.shape[-2] // bq, bq, d)
     kb = k.reshape(*k.shape[:-2], t_kv, bk, d)
@@ -288,7 +293,7 @@ def sparse_attention_xla(
     q_ids, q_cnt, kv_ids, kv_cnt, pair_live = attention_plan_indices(
         m_c, m_s, spec)
     kv_row_ids = kv_row_cnt = None
-    if spec.cap_kv < m_s.shape[-1]:
+    if spec.cap_kv < m_s.shape[-1] or spec.kv_buckets > 1:
         rows = jnp.take_along_axis(m_s, q_ids[..., :, None], axis=-2)
         kv_row_ids, kv_row_cnt = active_indices(rows, spec.cap_kv)
     return sparse_attention_from_plan(

@@ -110,6 +110,25 @@ class PallasBackend:
         b, h, n_q, dh = q.shape
         n = o_reuse.shape[-2]
         flat = lambda a: a.reshape(b * h, *a.shape[2:])
+        if spec.kv_buckets > 1 and plan.bkt_head is not None:
+            # Occupancy-bucketed two-level grid: the layout rows fold the
+            # head axis, so the plan's (B, R)/(B, S) fields stay unflattened.
+            from repro.core.plan import bucket_geometry
+            from repro.kernels.flashomni_attention import (
+                flashomni_attention_csr_bucketed,
+            )
+            geometry = bucket_geometry(spec.cap_q, spec.cap_kv, h,
+                                       spec.kv_buckets)
+            out = flashomni_attention_csr_bucketed(
+                flat(q), flat(k), flat(v), flat(o_reuse),
+                plan.bkt_head, plan.bkt_q_ids,
+                plan.bkt_q_slots if compact_q else plan.bkt_q_src,
+                plan.bkt_kv_ids, plan.bkt_kv_cnt, geometry,
+                heads=h, block_q=spec.block_q, block_kv=spec.block_kv,
+                scale=scale, interpret=self.interpret)
+            # No any_live guard needed: dead layout rows write only to the
+            # trash pad; cached rows keep their aliased o_reuse values.
+            return out.reshape(b, h, n, dh)
         out = flashomni_attention_csr(
             flat(q), flat(k), flat(v), flat(o_reuse),
             flat(plan.q_ids), flat(plan.kv_row_ids), flat(plan.kv_row_cnt),

@@ -119,6 +119,9 @@ class EngineConfig:
     cache_dtype: jnp.dtype = jnp.bfloat16
     backend: str = "xla"              # "xla" | "pallas" | "auto"
     interpret: Optional[bool] = None  # Pallas interpret mode (None: off-TPU)
+    kv_buckets: int = 1               # occupancy buckets in the CSR grid
+                                      # (1 = uniform cap_kv reduction;
+                                      # see core.plan.bucket_geometry)
     strategy: str = "flashomni"       # sparse-symbol producer (registry name)
     schedule: Optional[str] = None    # named SparsitySchedule preset (overrides
                                       # the strategy/interval mapping in
@@ -144,6 +147,7 @@ class EngineConfig:
             block_kv=m.block_kv,
             cap_q=min(self.cap_q_cmp(n_tokens) * fq, t_q),
             cap_kv=min(self.cap_kv_cmp(n_kv) * fk, t_kv),
+            kv_buckets=self.kv_buckets,
         )
 
 

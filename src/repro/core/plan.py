@@ -42,11 +42,21 @@ lowest-mass rows degrade to cache-reuse first.  The score is carried in
 the plan so the legacy rebuild path (:func:`~repro.core.engine.
 plan_from_state`) reproduces the exact same truncation.
 
-Plan memory (HunyuanVideo 33K-token scale): the two O(H·Cq·Ckv)-ish index
-fields — ``kv_row_ids`` and ``row_ids`` — are stored as int16 whenever
-every block index fits in 15 bits (33K tokens / 64-token blocks = 516
-blocks, far under 2¹⁵) and widened to int32 on use via :meth:`DispatchPlan.
-widen`, halving the dominant plan buffers.
+Plan memory (HunyuanVideo 33K-token scale): every block-id index field —
+``kv_row_ids``/``row_ids`` plus ``q_ids``/``q_slots``/``kv_ids`` and the
+bucketed ``bkt_*`` id buffers — is stored as int16 whenever every block
+index fits in 15 bits (33K tokens / 64-token blocks = 516 blocks, far
+under 2¹⁵) and widened to int32 on use via :meth:`DispatchPlan.widen`,
+halving the dominant plan buffers.
+
+Occupancy buckets (``EngineConfig.kv_buckets > 1``): the ``bkt_*`` fields
+re-sort the H·Cq (head, q-slot) layout rows into a static set of
+halving-width KV buckets (:func:`bucket_geometry`) so the Pallas kernel
+grid covers live *work* instead of live *rows* — a row with 3 live KV
+blocks occupies a ≈3-wide reduction, not a ``cap_kv``-wide one.  Bucket
+truncation is scattered back into ``kv_row_cnt`` so the uniform kernel
+and the XLA per-row CSR path consume identical truncated lists (the PR-4
+shared-truncation invariant, extended to buckets).
 """
 
 from __future__ import annotations
@@ -55,12 +65,152 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import masks as masklib
 from repro.core.attention import attention_plan_indices
 from repro.core.symbols import active_indices, clamp_mask_topk, slot_positions
 
-__all__ = ["DispatchPlan", "build_dispatch_plan", "empty_plan_like"]
+__all__ = [
+    "DispatchPlan",
+    "build_dispatch_plan",
+    "empty_plan_like",
+    "bucket_geometry",
+    "bucket_slot_layout",
+    "bucket_grid_slots",
+    "bucket_layout",
+]
+
+
+def bucket_geometry(cap_q: int, cap_kv: int, heads: int,
+                    n_buckets: int) -> tuple[tuple[int, int], ...]:
+    """Static occupancy-bucket geometry: ``((rows, kv_width), ...)``.
+
+    Buckets are ordered widest first; widths halve per bucket
+    (``cap_kv, ⌈cap_kv/2⌉, ⌈cap_kv/4⌉, …``) and row capacities are
+    allocated inversely to width (equal slot area per bucket) over the
+    ``heads · cap_q`` layout rows — the head axis is folded into the row
+    pool, because the skew the buckets exist to absorb (Sparse VideoGen's
+    spatial/temporal split, ``hunyuan-1.5x``'s sliding-window heads) is
+    ACROSS heads.  Total grid slots shrink from ``R · cap_kv`` (uniform)
+    to ``R · cap_kv · B / (2^B − 1)`` — ``3/7 ≈ 0.43×`` at ``B = 3`` —
+    a static bound independent of the plan's occupancy draw.
+    """
+    r_total = heads * cap_q
+    n_buckets = max(1, min(n_buckets, r_total, cap_kv))
+    if n_buckets == 1:
+        return ((r_total, cap_kv),)
+    widths = [-(-cap_kv // (1 << i)) for i in range(n_buckets)]
+    denom = (1 << n_buckets) - 1
+    rows = [max(1, (r_total << i) // denom) for i in range(n_buckets)]
+    rows[-1] += r_total - sum(rows)
+    # Tiny-R edge: the max(1,·) bumps can overdraw; repay from the
+    # narrowest buckets that still have rows to spare.
+    for i in range(n_buckets - 1, -1, -1):
+        if rows[i] < 1:
+            for j in range(n_buckets - 1, -1, -1):
+                if rows[j] > 1:
+                    take = min(rows[j] - 1, 1 - rows[i])
+                    rows[j] -= take
+                    rows[i] += take
+                    if rows[i] >= 1:
+                        break
+    assert sum(rows) == r_total and all(r >= 1 for r in rows)
+    return tuple(zip(rows, widths))
+
+
+def bucket_slot_layout(geometry) -> tuple[np.ndarray, np.ndarray,
+                                          np.ndarray, np.ndarray]:
+    """Flatten a bucket geometry into per-grid-slot static index arrays.
+
+    Returns ``(srow, j_of, soff, slast)`` — all int32 of length
+    ``S = Σ rows·width``: the layout row owning each slot, the slot's
+    j-position within its row's KV reduction, the slot index where the
+    row's reduction starts, and a 0/1 last-slot-of-row flag.  These are
+    compile-time constants of the geometry; the kernel scalar-prefetches
+    them to drive its two-level (bucket × row × per-bucket-Ckv) grid.
+    """
+    srow, j_of, soff, slast = [], [], [], []
+    r = 0
+    s = 0
+    for rows, width in geometry:
+        for _ in range(rows):
+            for j in range(width):
+                srow.append(r)
+                j_of.append(j)
+                soff.append(s)
+                slast.append(1 if j == width - 1 else 0)
+            r += 1
+            s += width
+    mk = lambda a: np.asarray(a, np.int32)
+    return mk(srow), mk(j_of), mk(soff), mk(slast)
+
+
+def bucket_grid_slots(geometry) -> int:
+    """Total kernel grid slots the bucketed layout occupies."""
+    return int(sum(rows * width for rows, width in geometry))
+
+
+def bucket_layout(q_ids, q_cnt, q_slots, kv_row_ids, kv_row_cnt,
+                  row_score_q, geometry, t_q: int):
+    """Sort the H·Cq (head, q-slot) layout rows into the bucket geometry.
+
+    All index arrays are (B, H, Cq[, Ck]) int32 as produced by
+    :func:`~repro.core.attention.attention_plan_indices` +
+    :func:`~repro.core.symbols.active_indices`; ``row_score_q`` is a
+    (B, H, Cq) per-q-row ranking score.  Returns ``(bkt, kv_row_cnt')``:
+    the ``bkt_*`` field dict of :class:`DispatchPlan` and the per-row
+    counts with the bucket truncation folded back in (shared-truncation
+    invariant — uniform kernel and XLA path consume the same lists).
+
+    Runs at Update time only (it sorts); a Dispatch step consumes the
+    emitted layout verbatim.
+    """
+    b_, h_, cq = q_ids.shape
+    r_tot = h_ * cq
+    live = jnp.arange(cq, dtype=jnp.int32) < q_cnt[..., None]      # (B,H,Cq)
+    cnt = jnp.where(live, kv_row_cnt, 0)
+    flat2 = lambda a: a.reshape(b_, r_tot)
+    pid = jnp.broadcast_to(jnp.arange(r_tot, dtype=jnp.int32), (b_, r_tot))
+    # Deterministic lexicographic sort: live first, then descending KV
+    # count, then descending row mass, pair id as the tie-break — the pid
+    # operand doubles as the permutation (plan_from_state must rebuild
+    # this layout bit-exactly from the stored row_score).
+    *_, order = jax.lax.sort(
+        (flat2(~live).astype(jnp.int32), flat2(-cnt),
+         flat2(-row_score_q.astype(jnp.float32)), pid), num_keys=4)
+    g = lambda a: jnp.take_along_axis(flat2(a), order, axis=-1)
+    s_live = g(live.astype(jnp.int32)) > 0                         # (B, R)
+    # Per-position bucket widths (static) and the row_score-consistent
+    # truncation: among equal counts the higher-mass row lands in the
+    # wider slot, so the lowest-mass rows truncate first.
+    w_pos = np.concatenate([np.full(r, w, np.int32) for r, w in geometry])
+    bkt_kv_cnt = jnp.minimum(g(cnt), w_pos)
+    # Scatter the bucket truncation back into the per-row counts so the
+    # uniform kernel and the XLA per-row CSR path see the SAME truncated
+    # lists — bucketed vs uniform stays bit-identical, no carve-outs.
+    new_cnt = jnp.put_along_axis(jnp.zeros_like(flat2(cnt)), order,
+                                 bkt_kv_cnt, axis=-1,
+                                 inplace=False).reshape(b_, h_, cq)
+    last_cnt = jnp.take_along_axis(
+        new_cnt, jnp.maximum(q_cnt - 1, 0)[..., None], axis=-1)
+    # Padding q slots duplicate the last live row; give them its truncated
+    # count too, or their recompute would clobber the live block's output
+    # with the untruncated reduction.
+    kv_row_cnt = jnp.where(live, new_cnt, last_cnt)
+    srow_np, jof_np, _, _ = bucket_slot_layout(geometry)
+    ck = kv_row_ids.shape[-1]
+    sorted_kv = jnp.take_along_axis(
+        kv_row_ids.reshape(b_, r_tot, ck), order[..., None], axis=-2)
+    bkt = dict(
+        bkt_head=(order // cq).astype(jnp.int32),
+        bkt_q_ids=jnp.where(s_live, g(q_ids), t_q),
+        bkt_q_src=jnp.where(s_live, g(q_ids), 0),
+        bkt_q_slots=jnp.where(s_live, g(q_slots), 0),
+        bkt_kv_ids=sorted_kv[:, srow_np, jof_np],                  # (B, S)
+        bkt_kv_cnt=bkt_kv_cnt,
+    )
+    return bkt, kv_row_cnt
 
 
 class DispatchPlan(NamedTuple):
@@ -83,6 +233,16 @@ class DispatchPlan(NamedTuple):
     head_mask: jax.Array   # (B, Cr, H) bool gathered (row, head) mask
     m_ch: jax.Array        # (B, T, H) bool compressed compute mask
     row_score: jax.Array   # (B, T) f32 column-mass row ranking (truncation)
+    # --- occupancy-bucketed CSR layout (None unless cfg.kv_buckets > 1) ---
+    # Layout rows fold the head axis: R = H·Cq (head, q-slot) pairs sorted
+    # by (live, kv count, row_score), widest bucket first; see
+    # :func:`bucket_geometry`.  S = Σ rows·width grid slots.
+    bkt_head: Optional[jax.Array] = None     # (B, R) int32 head of layout row
+    bkt_q_ids: Optional[jax.Array] = None    # (B, R) output q block (dead→T_q)
+    bkt_q_src: Optional[jax.Array] = None    # (B, R) read q block, full layout
+    bkt_q_slots: Optional[jax.Array] = None  # (B, R) read q block, compact
+    bkt_kv_ids: Optional[jax.Array] = None   # (B, S) per-slot kv-block id
+    bkt_kv_cnt: Optional[jax.Array] = None   # (B, R) bucket-truncated count
 
     def widen(self) -> "DispatchPlan":
         """Return a plan with the compact int16 id fields widened to int32.
@@ -92,10 +252,17 @@ class DispatchPlan(NamedTuple):
         int16 at 33K tokens) always see int32 ids, while the stored plan
         keeps the narrow dtype.
         """
-        if self.kv_row_ids.dtype == jnp.int32 and self.row_ids.dtype == jnp.int32:
+        if self.kv_row_ids.dtype == jnp.int32 and self.row_ids.dtype == jnp.int32 \
+                and self.q_ids.dtype == jnp.int32:
             return self
-        return self._replace(kv_row_ids=self.kv_row_ids.astype(jnp.int32),
-                             row_ids=self.row_ids.astype(jnp.int32))
+        w = lambda a: (a if a is None or a.dtype == jnp.int32
+                       else a.astype(jnp.int32))
+        return self._replace(
+            q_ids=w(self.q_ids), q_slots=w(self.q_slots), kv_ids=w(self.kv_ids),
+            kv_row_ids=w(self.kv_row_ids), row_ids=w(self.row_ids),
+            bkt_head=w(self.bkt_head), bkt_q_ids=w(self.bkt_q_ids),
+            bkt_q_src=w(self.bkt_q_src), bkt_q_slots=w(self.bkt_q_slots),
+            bkt_kv_ids=w(self.bkt_kv_ids))
 
 
 def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
@@ -162,6 +329,32 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
     rows = jnp.take_along_axis(m_s_blk, q_ids[..., :, None], axis=-2)
     kv_row_ids, kv_row_cnt = active_indices(rows, spec.cap_kv)
 
+    # Compact-layout remap (needed below by the bucketed layout too): live
+    # q block i (block granularity) lives at block index
+    # slot(i // factor)·factor + i % factor of the compact (Cr·pool, F)
+    # GEMM-Q output.  Live q blocks always fall inside live rows.
+    row_slot = slot_positions(row_ids, row_cnt, t_cmp)             # (B, T)
+    slot_of = jnp.take_along_axis(
+        jnp.broadcast_to(row_slot[:, None, :], (*q_ids.shape[:-1], t_cmp)),
+        q_ids // factor, axis=-1)
+    q_slots = slot_of * factor + q_ids % factor
+
+    # Occupancy-bucketed layout (ISSUE 6 tentpole): sort the H·Cq
+    # (head, q-slot) layout rows by KV occupancy into the static bucket
+    # geometry so the kernel grid covers live WORK, not live rows.  The
+    # sort runs here — Update time — so Dispatch jaxprs stay sort-free.
+    bkt = {}
+    if getattr(spec, "kv_buckets", 1) > 1:
+        b_, h_, _ = q_ids.shape
+        geometry = bucket_geometry(spec.cap_q, spec.cap_kv, h_,
+                                   spec.kv_buckets)
+        score = jnp.take_along_axis(
+            jnp.broadcast_to(row_score[:, None, :], (b_, h_, t_cmp)),
+            (q_ids // factor).astype(jnp.int32), axis=-1)
+        bkt, kv_row_cnt = bucket_layout(
+            q_ids, q_cnt, q_slots, kv_row_ids, kv_row_cnt, score,
+            geometry, t_q)
+
     # GEMM-O reduction sparsity over the kept rows.  Padding slots (slot >=
     # row_cnt) duplicate the last live row id; their head lists MUST be
     # empty — the Pallas GEMM-O output is bias-aliased, so on real TPU a
@@ -174,21 +367,22 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
     heads = m_ch.shape[-1]
     head_ids, head_cnt = active_indices(head_mask, heads)
 
-    # Compact-layout remap: live q block i (block granularity) lives at
-    # block index  slot(i // factor)·factor + i % factor  of the compact
-    # (Cr·pool, F) GEMM-Q output.  Live q blocks always fall inside live
-    # rows (m_c live at (h, i) ⇒ row i live in the any-head union).
-    row_slot = slot_positions(row_ids, row_cnt, t_cmp)             # (B, T)
-    slot_of = jnp.take_along_axis(
-        jnp.broadcast_to(row_slot[:, None, :], (*q_ids.shape[:-1], t_cmp)),
-        q_ids // factor, axis=-1)
-    q_slots = slot_of * factor + q_ids % factor
-
-    # Plan-memory compaction: the two dominant buffers store block ids that
-    # fit in 15 bits at any realistic scale; widen()ed to int32 on use.
-    if compact_ids and max(t_cmp, t_q, t_kv) < 2 ** 15:
-        kv_row_ids = kv_row_ids.astype(jnp.int16)
-        row_ids = row_ids.astype(jnp.int16)
+    # Plan-memory compaction: every block-id buffer fits in 15 bits at any
+    # realistic scale (33K tokens / 64-token blocks = 516 blocks); store
+    # int16, widen()ed to int32 on use.  ``q_ids``/``q_slots``/``kv_ids``
+    # join ``kv_row_ids``/``row_ids`` (ISSUE 6 satellite) — together the
+    # O(H·Cq·Ck) index footprint of the plan.
+    if compact_ids and max(t_cmp, t_q + 1, t_kv) < 2 ** 15:
+        narrow = lambda a: a.astype(jnp.int16)
+        kv_row_ids = narrow(kv_row_ids)
+        row_ids = narrow(row_ids)
+        q_ids = narrow(q_ids)
+        q_slots = narrow(q_slots)
+        kv_ids = narrow(kv_ids)
+        if bkt:
+            for key in ("bkt_head", "bkt_q_ids", "bkt_q_src", "bkt_q_slots",
+                        "bkt_kv_ids"):
+                bkt[key] = narrow(bkt[key])
 
     return DispatchPlan(
         q_ids=q_ids, q_cnt=q_cnt, q_slots=q_slots,
@@ -197,6 +391,7 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
         row_ids=row_ids, row_cnt=row_cnt,
         head_ids=head_ids, head_cnt=head_cnt, head_mask=head_mask,
         m_ch=m_ch, row_score=row_score,
+        **bkt,
     )
 
 

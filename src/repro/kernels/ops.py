@@ -52,7 +52,8 @@ def scatter_rows(compact: jax.Array, row_ids: jax.Array, row_cnt: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "variant",
-                                             "cap_q", "cap_kv", "interpret"))
+                                             "cap_q", "cap_kv", "interpret",
+                                             "kv_buckets", "heads"))
 def flashomni_attention(
     q: jax.Array,            # (BH, N, d)
     k: jax.Array,
@@ -67,8 +68,18 @@ def flashomni_attention(
     cap_q: Optional[int] = None,
     cap_kv: Optional[int] = None,
     interpret: Optional[bool] = None,
+    kv_buckets: int = 1,
+    heads: int = 1,
 ) -> jax.Array:
-    """Unified sparse attention entry (kernel side of paper Fig. 4)."""
+    """Unified sparse attention entry (kernel side of paper Fig. 4).
+
+    ``kv_buckets > 1`` routes to the occupancy-bucketed two-level grid:
+    the leading axis is interpreted as ``B·heads`` and the bucket layout
+    folds the head axis (short sliding-window rows share narrow buckets
+    across heads).  NB: buckets may TRUNCATE a row's KV list to its slot
+    width — callers compare against a reference fed the same truncated
+    counts (see ``tests/test_bucketed.py``).
+    """
     interpret = (not on_tpu()) if interpret is None else interpret
     t_q, t_kv = m_c.shape[-1], m_s.shape[-1]
     if variant == "symbols":
@@ -83,6 +94,26 @@ def flashomni_attention(
     q_ids, q_cnt = active_indices(m_c, cap_q)
     rows = jnp.take_along_axis(m_s, q_ids[..., None], axis=-2)       # (BH, Cq, Tkv)
     kv_ids, kv_cnt = active_indices(rows, cap_kv)
+    if kv_buckets > 1:
+        from repro.core.plan import bucket_geometry, bucket_layout
+        from repro.kernels.flashomni_attention import (
+            flashomni_attention_csr_bucketed,
+        )
+        bh = m_c.shape[0]
+        assert bh % heads == 0, (bh, heads)
+        b = bh // heads
+        geometry = bucket_geometry(cap_q, cap_kv, heads, kv_buckets)
+        shp = lambda a: a.reshape(b, heads, *a.shape[1:])
+        score = jnp.sum(rows, axis=-1).astype(jnp.float32)   # live-mass proxy
+        bkt, _ = bucket_layout(
+            shp(q_ids), shp(q_cnt), shp(q_ids), shp(kv_ids), shp(kv_cnt),
+            shp(score), geometry, t_q)
+        return flashomni_attention_csr_bucketed(
+            q, k, v, o_reuse,
+            bkt["bkt_head"], bkt["bkt_q_ids"], bkt["bkt_q_src"],
+            bkt["bkt_kv_ids"], bkt["bkt_kv_cnt"], geometry,
+            heads=heads, block_q=block_q, block_kv=block_kv,
+            interpret=interpret)
     out = flashomni_attention_csr(
         q, k, v, o_reuse, q_ids, kv_ids, kv_cnt,
         block_q=block_q, block_kv=block_kv, interpret=interpret)

@@ -282,6 +282,21 @@ class ContinuousBatcher:
     queued schedule at ``run`` time; a fixed value keeps the lane shape —
     and hence the executables — stable across ``run`` calls).
 
+    ``shape_buckets`` (ISSUE 6 tentpole, the lane-level analogue of the
+    kernel's occupancy buckets): a production mix of NEAR-MISS resolutions
+    fragments the exact-``shape_key()`` partitioning into many lane
+    partitions, each paying its own compile.  Passing a small tuple of
+    canonical vision-token counts (e.g. ``(64, 96, 128)``) rounds each
+    request's ``N_v`` UP to the smallest bucket that fits at admission —
+    the latent is zero-padded into the lane buffer and the output sliced
+    back to the request's own length — so near-miss shapes share ONE lane
+    executable and the ≤ 4-executable budget holds across the mix.  A
+    request larger than every bucket passes through at its own shape.
+    Per-request outputs equal a sequential run of the same PADDED request
+    sliced identically (bit-parity test-enforced); the mapping actually
+    used is reported in ``stats["shape_buckets"]`` (the lane-bucket map
+    ``serve.py --serving continuous`` prints).
+
     ``grouped`` picks the folding policy.  ``"auto"`` (default) enables
     the mode-group bodies for a ``run`` only when every queued request
     resolves to the SAME mode table and length — the lockstep-capable mix
@@ -301,12 +316,15 @@ class ContinuousBatcher:
                  lanes: int = 4, max_steps: Optional[int] = None,
                  scfg_dtype=jnp.float32, patch_embed=None,
                  sync_every_tick: bool = True, grouped="auto",
-                 with_metrics: bool = True):
+                 with_metrics: bool = True,
+                 shape_buckets: Optional[tuple] = None):
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
         self.lanes = int(lanes)
         self.max_steps = max_steps
+        self.shape_buckets = (tuple(sorted(int(s) for s in shape_buckets))
+                              if shape_buckets else ())
         self.scfg = SamplerConfig(num_steps=0, dtype=scfg_dtype)
         self.patch_embed = patch_embed
         self.sync_every_tick = sync_every_tick
@@ -330,6 +348,19 @@ class ContinuousBatcher:
         self.queue.submit_all(reqs)
 
     # -- internals --------------------------------------------------------
+
+    def _bucket_nv(self, nv: int) -> int:
+        """Smallest canonical vision length that fits ``nv`` (or ``nv``)."""
+        for b in self.shape_buckets:
+            if b >= nv:
+                return b
+        return nv
+
+    def _canon_key(self, req: Request) -> tuple:
+        """``shape_key()`` with ``N_v`` rounded up to its shape bucket."""
+        b, nv, pd = req.x0.shape
+        return ((b, self._bucket_nv(nv), pd), str(req.x0.dtype),
+                req.text_emb.shape, str(req.text_emb.dtype))
 
     def _cache_sizes(self) -> int:
         """Live compiled-executable count across all tick jits."""
@@ -382,9 +413,15 @@ class ContinuousBatcher:
         self._use_grouped = self._grouped_ticks is not None and (
             self.grouped is True or _lockstep_capable(scheds.values()))
         s_max = self.max_steps or max((r.num_steps for r in reqs), default=1)
+        # Shape-bucketed partitioning: near-miss N_v resolutions fold into
+        # one canonical lane shape (see class docstring) instead of each
+        # compiling its own partition.
         by_shape: dict[tuple, list[Request]] = {}
+        bucket_map: dict[tuple, tuple] = {}
         for r in reqs:
-            by_shape.setdefault(r.shape_key(), []).append(r)
+            key = self._canon_key(r)
+            bucket_map[r.shape_key()] = key
+            by_shape.setdefault(key, []).append(r)
         results: dict = {}
         total_ticks = 0
         grouped_ticks = 0
@@ -395,11 +432,11 @@ class ContinuousBatcher:
         # arrival simulation include time spent queued behind an earlier
         # lane-shape partition.
         t0 = time.perf_counter()
-        for shape_reqs in by_shape.values():
+        for key, shape_reqs in by_shape.items():
             q = RequestQueue()
             q.submit_all(shape_reqs)
             part, ticks, gticks, dens, ps, act = self._run_partition(
-                q, scheds, s_max, t0)
+                q, scheds, s_max, t0, nv_lane=key[0][1])
             results.update(part)
             total_ticks += ticks
             grouped_ticks += gticks
@@ -422,14 +459,19 @@ class ContinuousBatcher:
             "lane_active": (np.concatenate(lane_active)
                             if lane_active else
                             np.zeros((0, self.lanes), bool)),
+            "shape_buckets": bucket_map,
+            "shape_partitions": len(by_shape),
         }
         return results
 
     def _run_partition(self, q: RequestQueue, scheds: dict, s_max: int,
-                       t0: float):
+                       t0: float, nv_lane: Optional[int] = None):
         cfg, ecfg, W = self.cfg, self.ecfg, self.lanes
         probe = q.pending()[0]
         b, nv, pd = probe.x0.shape
+        # The partition's canonical (bucketed) vision length; requests
+        # shorter than the lane are zero-padded in and sliced back out.
+        nv = nv if nv_lane is None else nv_lane
         nt, dm = probe.text_emb.shape[1], cfg.d_model
         n_tokens = nv + nt
         patch_embed = self.patch_embed
@@ -469,7 +511,11 @@ class ContinuousBatcher:
                 mode_tab[w], id_tab[w] = mrow, irow
                 dt[w] = np.float32(1.0 / req.num_steps)
                 nsteps[w] = req.num_steps
-                x = x.at[w].set(req.x0)
+                x0w = req.x0
+                if x0w.shape[1] < nv:      # shape-bucket zero pad
+                    x0w = jnp.pad(
+                        x0w, ((0, 0), (0, nv - x0w.shape[1]), (0, 0)))
+                x = x.at[w].set(x0w)
                 text = text.at[w].set(req.text_emb)
                 # Engine state re-initializes ON DEVICE inside the tick
                 # (traced `reset` mask -> trace-constant fresh state): a
@@ -520,7 +566,9 @@ class ContinuousBatcher:
                 log.append((w, req.rid, int(steps[w]), kind))
                 steps[w] += 1
                 if steps[w] >= req.num_steps:
-                    pending_out.append((req.rid, x[w]))
+                    # Slice the shape-bucket pad back off (no-op when the
+                    # request filled its lane).
+                    pending_out.append((req.rid, x[w][:, :req.x0.shape[1]]))
                     results[req.rid] = _result(None, [], req.arrival, now)
                     active[w], lane_req[w] = False, None
             tick_log.append(log)

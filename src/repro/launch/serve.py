@@ -18,6 +18,9 @@ Two serving kinds, matching the paper's domain and the LM shape grid:
         Mode-homogeneous ticks fold same-mode lanes into the model
         batch axis (``ContinuousBatcher(grouped="auto")``), so a
         homogeneous request mix serves at stacked-level throughput.
+        ``--shape-buckets`` rounds near-miss ``N_v`` resolutions up to
+        canonical lane sizes so they share one lane executable; the
+        resulting lane-bucket map is printed after the run.
 
     ``--arrival-interval`` simulates request arrivals (seconds between
     requests); latencies are measured against arrival times.
@@ -48,15 +51,21 @@ def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
                     batch: int = 2, n_vision: int = 96, num_steps: int = 12,
                     strategy: str = "flashomni", schedule: str = None,
                     serving: str = "sequential", lanes: int = 4,
-                    arrival_interval: float = 0.0, mixed_steps: bool = False):
+                    arrival_interval: float = 0.0, mixed_steps: bool = False,
+                    mixed_shapes: bool = False, shape_buckets=None):
     """Queue-driven diffusion serving (see module docstring for modes).
 
     ``schedule`` names a registered SparsitySchedule preset (e.g.
     ``hunyuan-1.5x``, ``step-ramp``); it overrides the per-step mapping of
     ``strategy``.  ``mixed_steps`` alternates request step counts
     (``num_steps`` and ``3·num_steps//4``) to exercise the continuous
-    batcher's mixed-length lane interleaving.  Returns the per-request
-    result dict from :mod:`repro.launch.batching`.
+    batcher's mixed-length lane interleaving.  ``mixed_shapes`` alternates
+    request vision lengths (``n_vision`` and ``n_vision − pool``) to
+    exercise the continuous batcher's shape-bucketed lane partitioning;
+    ``shape_buckets`` passes the canonical N_v bucket sizes through to
+    :class:`~repro.launch.batching.ContinuousBatcher` (default when
+    ``mixed_shapes``: ``(n_vision,)`` so the near-miss shape folds in).
+    Returns the per-request result dict from :mod:`repro.launch.batching`.
     """
     cfg = get_smoke(arch) if smoke else get_config(arch)
     ecfg = EngineConfig(mask=MaskConfig(
@@ -74,7 +83,10 @@ def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
         # latents with the text embeddings sample-for-sample.
         kx, kt = jax.random.split(
             jax.random.fold_in(jax.random.PRNGKey(100), req))
-        x0 = jax.random.normal(kx, (batch, n_vision, cfg.patch_dim))
+        nv = n_vision
+        if mixed_shapes and req % 2:
+            nv = max(n_vision - ecfg.mask.pool, ecfg.mask.pool)
+        x0 = jax.random.normal(kx, (batch, nv, cfg.patch_dim))
         text = jax.random.normal(kt, (batch, cfg.n_text_tokens, cfg.d_model))
         steps = num_steps
         if mixed_steps and req % 2:
@@ -86,13 +98,23 @@ def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
     t0 = time.time()
     extra = ""
     if serving == "continuous":
-        batcher = ContinuousBatcher(params, cfg, ecfg, lanes=lanes)
+        if shape_buckets is None and mixed_shapes:
+            shape_buckets = (n_vision,)
+        batcher = ContinuousBatcher(params, cfg, ecfg, lanes=lanes,
+                                    shape_buckets=shape_buckets)
         batcher.submit_all(requests)
         results = batcher.run()
         extra = (f"  executables {batcher.stats['executables']}"
                  f"  ticks {batcher.stats['ticks']}"
                  f" ({batcher.stats['grouped_ticks']} grouped"
                  f"/{batcher.stats['scan_ticks']} scan)")
+        # Lane-bucket map: which admitted shape folded into which lane
+        # shape (ISSUE 6 — shape-bucketed serving lanes).
+        print(f"[serve] lane shape buckets "
+              f"({batcher.stats['shape_partitions']} partition(s)):")
+        for orig, canon in sorted(batcher.stats["shape_buckets"].items()):
+            fold = "=" if orig == canon else "->"
+            print(f"[serve]   x0 {orig[0]} {fold} lane {canon[0]}")
     elif serving == "stacked":
         results = run_stacked(params, cfg, ecfg, requests)
     elif serving == "sequential":
@@ -169,6 +191,12 @@ def main():
     ap.add_argument("--mixed-steps", action="store_true",
                     help="alternate request step counts (exercises "
                          "mixed-length lane interleaving)")
+    ap.add_argument("--mixed-shapes", action="store_true",
+                    help="alternate request vision lengths (exercises "
+                         "shape-bucketed lane partitioning)")
+    ap.add_argument("--shape-buckets", type=int, nargs="*", default=None,
+                    help="canonical N_v lane bucket sizes for "
+                         "--serving continuous (near-miss shapes round up)")
     args = ap.parse_args()
     if args.kind == "diffusion":
         serve_diffusion(args.arch, smoke=not args.full,
@@ -176,7 +204,10 @@ def main():
                         serving=args.serving, num_requests=args.requests,
                         lanes=args.lanes,
                         arrival_interval=args.arrival_interval,
-                        mixed_steps=args.mixed_steps)
+                        mixed_steps=args.mixed_steps,
+                        mixed_shapes=args.mixed_shapes,
+                        shape_buckets=(tuple(args.shape_buckets)
+                                       if args.shape_buckets else None))
     else:
         serve_lm(args.arch, smoke=not args.full)
 
