@@ -26,11 +26,13 @@ from repro.core import (AttnParams, EngineConfig, MaskConfig, dispatch_layer,
                         init_layer_state, plan_from_state, update_layer)
 
 
-def _setup(n, dm, heads, dh, pool, blk, dtype=jnp.float32):
+def _setup(n, dm, heads, dh, pool, blk, dtype=jnp.float32, mesh=(1, 1),
+           cap_kv_frac=0.9):
     cfg = EngineConfig(
         mask=MaskConfig(pool=pool, block_q=blk, block_kv=blk, interval=4,
                         order=1, warmup_steps=1, tau_q=0.5, tau_kv=0.1),
-        cap_q_frac=0.75, cap_kv_frac=0.9, cache_dtype=dtype)
+        cap_q_frac=0.75, cap_kv_frac=cap_kv_frac, cache_dtype=dtype,
+        mesh_dp=mesh[0], mesh_sp=mesh[1])
     ks = jax.random.split(jax.random.PRNGKey(0), 6)
     p = AttnParams(
         wq=jax.random.normal(ks[0], (dm, heads * dh), dtype) * 0.05,
@@ -95,3 +97,41 @@ def run(csv: list, smoke: bool = False) -> None:
         csv.append({"name": f"schedule_interval4_rebuild/{tag}",
                     "us_per_call": step_i4_rebuild,
                     "derived": f"vs_interval1={step_i1 / step_i4_rebuild:.3f}x"})
+
+    # Plan-sharded dispatch row (ISSUE 7): same plan, attention running
+    # shard_map'ed over a (1, 4) engine mesh with the plan-aware KV
+    # exchange.  Needs >= 4 devices — CI's forced-8-device job runs it;
+    # on a single-device host the row is skipped (and said so: a silently
+    # missing row reads as covered).
+    if jax.device_count() >= 4:
+        n, dm, heads, dh, pool, blk = 1024, 256, 4, 64, 128, 64
+        # 25% density: the regime where the plan-aware exchange beats the
+        # dense all-gather (the --sharded-gate regime, here with timing).
+        cfgm, p, x, state, h = _setup(n, dm, heads, dh, pool, blk,
+                                      mesh=(1, 4), cap_kv_frac=0.25)
+        cfg1 = dataclasses.replace(cfgm, mesh_dp=1, mesh_sp=1)
+        disp_mesh = jax.jit(lambda xx, ss: dispatch_layer(
+            p, xx, ss, cfgm, n_text=pool, heads=h)[0])
+        disp_one = jax.jit(lambda xx, ss: dispatch_layer(
+            p, xx, ss, cfg1, n_text=pool, heads=h)[0])
+        iters = 9 if smoke else 15
+        t_mesh = time_fn(disp_mesh, x, state, iters=iters) * 1e6
+        t_one = time_fn(disp_one, x, state, iters=iters) * 1e6
+        bit = bool((jnp.asarray(disp_mesh(x, state))
+                    == jnp.asarray(disp_one(x, state))).all())
+
+        from repro.distributed.plan_shard import (dense_exchange_blocks,
+                                                  exchange_blocks,
+                                                  shard_geometry)
+        t_kv = cfgm.mask.n_blocks(n) * (pool // blk)
+        geom = shard_geometry(cfgm.caps(n), t_kv, t_kv, 4,
+                              cfgm.mesh_pair_slack)
+        csv.append({"name": f"dispatch_plan_sharded/N{n}sp4",
+                    "us_per_call": t_mesh,
+                    "derived": (f"bit_identical_to_oracle={int(bit)} "
+                                f"exchange_blocks={exchange_blocks(geom)} "
+                                f"dense_blocks={dense_exchange_blocks(t_kv)} "
+                                f"oracle_us={t_one:.1f}")})
+    else:
+        print("[bench_dispatch_plan] sharded row skipped: "
+              f"{jax.device_count()} device(s) < 4")

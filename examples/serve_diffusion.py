@@ -8,6 +8,15 @@ schedules in a fixed-width lane microbatch without recompiling).
 
 Usage:  PYTHONPATH=src python examples/serve_diffusion.py [--steps 12]
             [--serving continuous --requests 4 --mixed-steps]
+
+Multi-device: ``--mesh dp,sp`` runs plan-sharded dispatch over a
+``(data, seq)`` device mesh — Update emits per-shard CSR partitions and
+attention exchanges only plan-live KV blocks (bit-identical to the
+single-device run; see ``repro/distributed/plan_shard.py``).  Try it on
+a CPU host with forced devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_diffusion.py --mesh 2,4
 """
 
 import argparse
@@ -25,10 +34,14 @@ def main():
     ap.add_argument("--mixed-steps", action="store_true",
                     help="alternate request step counts (mixed-length "
                          "lane interleaving)")
+    ap.add_argument("--mesh", default="1,1", metavar="DP,SP",
+                    help="engine mesh: sp>1 shards dispatch over a "
+                         "(data, seq) mesh with plan-aware KV collectives")
     args = ap.parse_args()
+    dp, sp = (int(x) for x in args.mesh.split(","))
     serve_diffusion(args.arch, smoke=True, num_requests=args.requests,
                     num_steps=args.steps, serving=args.serving,
-                    mixed_steps=args.mixed_steps)
+                    mixed_steps=args.mixed_steps, mesh=(dp, sp))
 
 
 if __name__ == "__main__":

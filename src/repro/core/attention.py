@@ -164,6 +164,7 @@ def sparse_attention_from_plan(
     q_src_ids: Optional[jax.Array] = None,
     kv_row_ids: Optional[jax.Array] = None,
     kv_row_cnt: Optional[jax.Array] = None,
+    force_per_row: bool = False,
 ) -> jax.Array:
     """Structurally sparse attention over PRECOMPUTED indices.
 
@@ -197,8 +198,11 @@ def sparse_attention_from_plan(
     q_src_ids = q_ids if q_src_ids is None else q_src_ids
     # Per-row layout whenever truncation is possible: cap_kv below the full
     # union, OR occupancy buckets (a narrow bucket can truncate a row even
-    # with cap_kv == T_kv; the bucket-truncated counts live in kv_row_cnt).
-    per_row = kv_row_ids is not None and (spec.cap_kv < t_kv
+    # with cap_kv == T_kv; the bucket-truncated counts live in kv_row_cnt),
+    # OR the caller forces it (mesh-folded plans: the pair clamp lives in
+    # kv_row_cnt, which the union layout would ignore).
+    per_row = kv_row_ids is not None and (force_per_row
+                                          or spec.cap_kv < t_kv
                                           or spec.kv_buckets > 1)
 
     qb = q.reshape(*q.shape[:-2], q.shape[-2] // bq, bq, d)

@@ -40,7 +40,8 @@ from repro.core import sparse_gemm
 from repro.core.attention import SparseAttentionSpec, sparse_attention_from_plan
 from repro.core.plan import DispatchPlan
 
-__all__ = ["XlaBackend", "PallasBackend", "get_backend", "available_backends"]
+__all__ = ["XlaBackend", "PallasBackend", "MeshBackend", "get_backend",
+           "available_backends"]
 
 
 class XlaBackend:
@@ -69,7 +70,12 @@ class XlaBackend:
             q, k, v, o_reuse, plan.q_ids, plan.q_cnt, plan.kv_ids,
             plan.kv_cnt, plan.pair_live, spec, scale=scale,
             q_src_ids=plan.q_slots if compact_q else None,
-            kv_row_ids=plan.kv_row_ids, kv_row_cnt=plan.kv_row_cnt)
+            kv_row_ids=plan.kv_row_ids, kv_row_cnt=plan.kv_row_cnt,
+            # Mesh-folded plans carry the pair clamp in kv_row_cnt only;
+            # the union layout (which ignores it) must never be taken even
+            # when cap_kv admits the full union — this is how the single-
+            # device oracle consumes a mesh plan bit-identically.
+            force_per_row=plan.shd_q_ids is not None)
 
     def gemm_o(self, o_tok, w, plan: DispatchPlan, bias: jax.Array, *,
                block: int) -> jax.Array:
@@ -153,6 +159,33 @@ class PallasBackend:
             interpret=self.interpret)
 
 
+class MeshBackend:
+    """Mesh-sharded dispatch: the inner backend runs per shard under a
+    ``shard_map`` over the (data, seq) engine mesh, exchanging only the
+    plan-live KV blocks (``distributed/plan_shard.py``).  GEMM-Q/GEMM-O
+    delegate to the inner backend unchanged — their sharding is GSPMD's
+    job via the state specs; only attention needs explicit collectives."""
+
+    def __init__(self, inner, cfg):
+        self.inner = inner
+        self.cfg = cfg
+        self.name = f"mesh-{inner.name}"
+        self.compact_q = inner.compact_q
+
+    def gemm_q(self, x, w, plan, *, block):
+        return self.inner.gemm_q(x, w, plan, block=block)
+
+    def attention(self, q, k, v, o_reuse, plan: DispatchPlan,
+                  spec: SparseAttentionSpec, *, scale: Optional[float] = None,
+                  compact_q: bool = False):
+        from repro.distributed.plan_shard import mesh_attention
+        return mesh_attention(self.inner, self.cfg, q, k, v, o_reuse, plan,
+                              spec, scale=scale, compact_q=compact_q)
+
+    def gemm_o(self, o_tok, w, plan, bias, *, block):
+        return self.inner.gemm_o(o_tok, w, plan, bias, block=block)
+
+
 _XLA = XlaBackend()
 
 
@@ -161,14 +194,21 @@ def available_backends() -> tuple[str, ...]:
 
 
 def get_backend(cfg):
-    """Resolve ``EngineConfig.backend`` to a backend instance."""
+    """Resolve ``EngineConfig.backend`` to a backend instance.
+
+    ``cfg.mesh_sp > 1`` wraps the resolved backend in :class:`MeshBackend`
+    — the same Update→Dispatch flow, with attention running sharded."""
     name = cfg.backend
     if name == "auto":
         name = "pallas" if jax.default_backend() == "tpu" else "xla"
     if name == "xla":
-        return _XLA
-    if name == "pallas":
-        return PallasBackend(interpret=getattr(cfg, "interpret", None))
-    raise ValueError(
-        f"unknown engine backend {cfg.backend!r}; expected one of "
-        f"{available_backends()}")
+        inner = _XLA
+    elif name == "pallas":
+        inner = PallasBackend(interpret=getattr(cfg, "interpret", None))
+    else:
+        raise ValueError(
+            f"unknown engine backend {cfg.backend!r}; expected one of "
+            f"{available_backends()}")
+    if getattr(cfg, "mesh_sp", 1) > 1:
+        return MeshBackend(inner, cfg)
+    return inner

@@ -126,6 +126,18 @@ class EngineConfig:
     schedule: Optional[str] = None    # named SparsitySchedule preset (overrides
                                       # the strategy/interval mapping in
                                       # resolve_schedule; see core.schedule)
+    # Plan-sharded mesh dispatch (distributed/plan_shard.py).  mesh_sp > 1
+    # routes attention through a shard_map over the (data, seq) engine
+    # mesh; with mesh_axis == "seq" the plan carries per-shard partitions
+    # + the plan-aware collective schedule (shd_* fields).  All statics —
+    # they key jit caches and the LRU memos like every other field here.
+    mesh_dp: int = 1                  # data-parallel shards (batch axis)
+    mesh_sp: int = 1                  # sequence/head-parallel shards
+    mesh_axis: str = "seq"            # "seq" (token shards + plan-aware
+                                      # collectives) | "head" (no collectives)
+    mesh_pair_slack: float = 1.5      # per-(src,dst) shipped-block capacity
+                                      # slack over cap_kv/P (≥ 1 keeps the
+                                      # per-shard union clamp a no-op)
 
     # Capacity bookkeeping.  The single source of truth is the COMPRESSED
     # granularity capacity (symbols live there); block-granularity caps are

@@ -243,6 +243,21 @@ class DispatchPlan(NamedTuple):
     bkt_q_slots: Optional[jax.Array] = None  # (B, R) read q block, compact
     bkt_kv_ids: Optional[jax.Array] = None   # (B, S) per-slot kv-block id
     bkt_kv_cnt: Optional[jax.Array] = None   # (B, R) bucket-truncated count
+    # --- plan-sharded mesh partition (None unless cfg.mesh_sp > 1 with
+    # mesh_axis == "seq"; see distributed/plan_shard.py).  Axis P indexes
+    # the destination shard of the (data, seq) mesh; Cqs/Cks/pc are the
+    # static per-shard row / union / per-pair capacities of ShardGeometry.
+    shd_q_ids: Optional[jax.Array] = None      # (B,H,P,Cqs) shard-LOCAL q blocks
+    shd_q_src: Optional[jax.Array] = None      # (B,H,P,Cqs) same, full layout
+    shd_q_slots: Optional[jax.Array] = None    # (B,H,P,Cqs) same, compact layout
+    shd_q_cnt: Optional[jax.Array] = None      # (B,H,P)
+    shd_kv_ids: Optional[jax.Array] = None     # (B,H,P,Cks) union, GLOBAL ids
+    shd_kv_cnt: Optional[jax.Array] = None     # (B,H,P)
+    shd_kv_row_ids: Optional[jax.Array] = None  # (B,H,P,Cqs,Ck) union-slot CSR
+    shd_kv_row_cnt: Optional[jax.Array] = None  # (B,H,P,Cqs)
+    shd_gather_idx: Optional[jax.Array] = None  # (B,H,P,Cks) buffer placement
+    shd_send_ids: Optional[jax.Array] = None   # (B,H,Psrc,Pdst,pc) local ids
+    shd_send_cnt: Optional[jax.Array] = None   # (B,H,Psrc,Pdst)
 
     def widen(self) -> "DispatchPlan":
         """Return a plan with the compact int16 id fields widened to int32.
@@ -262,7 +277,12 @@ class DispatchPlan(NamedTuple):
             kv_row_ids=w(self.kv_row_ids), row_ids=w(self.row_ids),
             bkt_head=w(self.bkt_head), bkt_q_ids=w(self.bkt_q_ids),
             bkt_q_src=w(self.bkt_q_src), bkt_q_slots=w(self.bkt_q_slots),
-            bkt_kv_ids=w(self.bkt_kv_ids))
+            bkt_kv_ids=w(self.bkt_kv_ids),
+            shd_q_ids=w(self.shd_q_ids), shd_q_src=w(self.shd_q_src),
+            shd_q_slots=w(self.shd_q_slots), shd_kv_ids=w(self.shd_kv_ids),
+            shd_kv_row_ids=w(self.shd_kv_row_ids),
+            shd_gather_idx=w(self.shd_gather_idx),
+            shd_send_ids=w(self.shd_send_ids))
 
 
 def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
@@ -327,6 +347,19 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
 
     # Pallas reduction layout: per-live-row CSR column lists.
     rows = jnp.take_along_axis(m_s_blk, q_ids[..., :, None], axis=-2)
+    # Plan-sharded mesh fold (distributed/plan_shard.py): the per-(src,
+    # dst) shipped-block clamp is applied to the ROW MASKS before the
+    # lists are extracted — shared truncation, so every backend (sharded
+    # or the single-device oracle) consumes identical lists.  With
+    # pair_cap at its safe bound this is the identity and the plan below
+    # matches the non-mesh build bit-for-bit.
+    geom = None
+    mesh_sp = getattr(cfg, "mesh_sp", 1)
+    if mesh_sp > 1 and getattr(cfg, "mesh_axis", "seq") == "seq":
+        from repro.distributed.plan_shard import mesh_keep_rows, shard_geometry
+        geom = shard_geometry(spec, t_q, t_kv, mesh_sp,
+                              getattr(cfg, "mesh_pair_slack", 1.5))
+        rows = mesh_keep_rows(rows, q_ids, q_cnt, geom)
     kv_row_ids, kv_row_cnt = active_indices(rows, spec.cap_kv)
 
     # Compact-layout remap (needed below by the bucketed layout too): live
@@ -354,6 +387,16 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
         bkt, kv_row_cnt = bucket_layout(
             q_ids, q_cnt, q_slots, kv_row_ids, kv_row_cnt, score,
             geometry, t_q)
+
+    # Per-shard partition + collective schedule, emitted AFTER every
+    # truncation (pair clamp above, bucket layout here) has been folded
+    # into kv_row_cnt — the partition consumes final lists and never
+    # truncates on its own (see plan_shard.partition_plan).
+    shd = {}
+    if geom is not None:
+        from repro.distributed.plan_shard import partition_plan
+        shd = partition_plan(q_ids, q_cnt, q_slots, kv_row_ids, kv_row_cnt,
+                             t_kv, geom)
 
     # GEMM-O reduction sparsity over the kept rows.  Padding slots (slot >=
     # row_cnt) duplicate the last live row id; their head lists MUST be
@@ -383,6 +426,12 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
             for key in ("bkt_head", "bkt_q_ids", "bkt_q_src", "bkt_q_slots",
                         "bkt_kv_ids"):
                 bkt[key] = narrow(bkt[key])
+        # shd_gather_idx indexes the KV exchange buffer, which can hold up
+        # to buf_blocks > t_kv entries — gate its compaction separately.
+        if shd and geom.buf_blocks < 2 ** 15:
+            for key in ("shd_q_ids", "shd_q_src", "shd_q_slots", "shd_kv_ids",
+                        "shd_kv_row_ids", "shd_gather_idx", "shd_send_ids"):
+                shd[key] = narrow(shd[key])
 
     return DispatchPlan(
         q_ids=q_ids, q_cnt=q_cnt, q_slots=q_slots,
@@ -391,7 +440,7 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
         row_ids=row_ids, row_cnt=row_cnt,
         head_ids=head_ids, head_cnt=head_cnt, head_mask=head_mask,
         m_ch=m_ch, row_score=row_score,
-        **bkt,
+        **bkt, **shd,
     )
 
 

@@ -1,7 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
 # ^ MUST precede every other import (jax locks the device count on first
 #   init).  The 512 placeholder host devices exist ONLY for the dry-run.
+#   ``setdefault`` so CI can pin a smaller forced-device count (the
+#   8-device sharded-parity job reuses ``--sharded-gate`` on its mesh).
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
 record memory/cost/collective analyses for EXPERIMENTS.md §Dry-run/§Roofline.
@@ -36,8 +39,13 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
 # reduce-scatter result = shard received; a2a tuple = total moved).
 _COLL_RE = re.compile(
     r"=\s+(\([^)]*\)|[a-z0-9_\[\]{},]+)\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(ragged-all-to-all|all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute|collective-broadcast)"
     r"(?:-start)?\(")
+# ``ragged-all-to-all`` must precede ``all-to-all`` in the alternation and
+# both must be present: the plan-sharded dispatch exchange lowers to one of
+# these, and a gate reading 0 bytes because the op name was missing from
+# this list would pass vacuously (see ``--sharded-gate``).
 _SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
                        r"f8e4m3\w*|f8e5m2\w*)\[([0-9,]*)\]")
 
@@ -66,6 +74,99 @@ def collective_bytes(hlo_text: str) -> dict:
         out.setdefault(kind + "_count", 0)
         out[kind + "_count"] += 1
     return out
+
+
+def sharded_dispatch_report(out_dir: Path, *, mesh_sp: int = 8,
+                            density: float = 0.25,
+                            pair_slack: float = 1.5) -> dict:
+    """Lower the plan-sharded dispatch and account its collective bytes.
+
+    Builds a small engine cell at ``cap_kv_frac = density``, lowers the
+    mesh-sharded attention (``distributed/plan_shard.mesh_attention``) and
+    a dense baseline that all-gathers the full K/V over the same mesh, and
+    reads both collective byte totals out of the compiled HLO via
+    :func:`collective_bytes`.  The plan-aware exchange ships only
+    ``mesh_sp · pair_cap`` blocks per shard (vs ``T_kv`` for the dense
+    all-gather), so at 25% density and default slack the ratio lands at
+    ``⌈slack · cap_kv / P⌉ · P / T_kv ≈ 0.375`` — the ``--sharded-gate``
+    CI flag asserts it stays below 0.5.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import engine as E
+    from repro.core.backend import get_backend
+    from repro.core.engine import (AttnParams, EngineConfig, init_layer_state,
+                                   update_layer)
+    from repro.core.masks import MaskConfig
+    from repro.distributed.plan_shard import (dense_exchange_blocks,
+                                              exchange_blocks, shard_geometry)
+    from repro.launch.mesh import make_engine_mesh
+
+    b, heads, n, dm, dh = 1, 2, 1024, 32, 16
+    m = MaskConfig(tau_q=0.5, tau_kv=0.15, interval=4, order=1, degrade=0.3,
+                   block_q=16, block_kv=16, pool=16, warmup_steps=2)
+    cfg = EngineConfig(mask=m, backend="xla", cap_kv_frac=density,
+                       mesh_dp=1, mesh_sp=mesh_sp, mesh_pair_slack=pair_slack)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    params = AttnParams(
+        wq=jax.random.normal(ks[0], (dm, heads * dh)) * 0.05,
+        wk=jax.random.normal(ks[1], (dm, heads * dh)) * 0.05,
+        wv=jax.random.normal(ks[2], (dm, heads * dh)) * 0.05,
+        wo=jax.random.normal(ks[3], (heads * dh, dm)) * 0.05,
+        q_scale=jnp.ones((dh,)), k_scale=jnp.ones((dh,)))
+    x = jax.random.normal(ks[4], (b, n, dm), jnp.float32)
+    st0 = init_layer_state(b, heads, n, dm, dh, cfg)
+    _, st = update_layer(params, x, st0, cfg, heads=heads)
+    plan = st.plan.widen()
+    spec = cfg.caps(n)
+    q, k = E._qk(params, x, heads, None)
+    v = E._project_heads(x, params.wv, heads)
+    o_reuse = jnp.zeros((b, heads, n, dh), q.dtype)
+
+    backend = get_backend(cfg)                       # MeshBackend(xla)
+    sharded = jax.jit(lambda q_, k_, v_, o_: backend.attention(
+        q_, k_, v_, o_, plan, spec))
+    coll = collective_bytes(sharded.lower(q, k, v, o_reuse).compile().as_text())
+    plan_bytes = sum(v_ for k_, v_ in coll.items()
+                     if "all-to-all" in k_ and not k_.endswith("_count"))
+
+    mesh = make_engine_mesh(1, mesh_sp)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    def dense(k_, v_):
+        kg = jax.lax.all_gather(k_, "seq", axis=2, tiled=True)
+        vg = jax.lax.all_gather(v_, "seq", axis=2, tiled=True)
+        return kg, vg
+
+    dfn = shard_map(dense, mesh=mesh,
+                    in_specs=(PS(None, None, "seq", None),) * 2,
+                    out_specs=(PS(None, None, None, None),) * 2,
+                    check_rep=False)
+    dcoll = collective_bytes(jax.jit(dfn).lower(k, v).compile().as_text())
+    dense_bytes = sum(v_ for k_, v_ in dcoll.items()
+                      if "all-gather" in k_ and not k_.endswith("_count"))
+
+    t_q = m.n_blocks(n) * (m.pool // m.block_q)
+    t_kv = m.n_blocks(n) * (m.pool // m.block_kv)
+    geom = shard_geometry(spec, t_q, t_kv, mesh_sp, pair_slack)
+    rec = {
+        "mesh_sp": mesh_sp, "density": density, "pair_slack": pair_slack,
+        "plan_collective_bytes": plan_bytes,
+        "dense_collective_bytes": dense_bytes,
+        "ratio": plan_bytes / dense_bytes if dense_bytes else float("inf"),
+        "exchange_blocks_per_shard": exchange_blocks(geom),
+        "dense_exchange_blocks": dense_exchange_blocks(t_kv),
+        "sharded_hlo_collectives": coll,
+        "dense_hlo_collectives": dcoll,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"sharded_dispatch__sp{mesh_sp}__d{density}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+    print(f"[dryrun] sharded dispatch: plan={plan_bytes}B "
+          f"dense={dense_bytes}B ratio={rec['ratio']:.3f} -> {path}")
+    return rec
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
@@ -154,9 +255,26 @@ def main():
     ap.add_argument("--mode", default=None, help="dit: update|dispatch")
     ap.add_argument("--unroll", action="store_true",
                     help="unroll layer loops for exact cost analysis")
+    ap.add_argument("--sharded-gate", action="store_true",
+                    help="lower the plan-sharded dispatch at 25%% density "
+                         "and assert its collective bytes < 0.5x the dense "
+                         "KV all-gather over the same mesh")
+    ap.add_argument("--mesh-sp", type=int, default=8,
+                    help="seq-shard count for --sharded-gate")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args()
     out_dir = Path(args.out)
+
+    if args.sharded_gate:
+        rec = sharded_dispatch_report(out_dir, mesh_sp=args.mesh_sp)
+        if not rec["plan_collective_bytes"]:
+            raise SystemExit("[dryrun] sharded gate: 0 collective bytes read "
+                             "from the sharded HLO — op regex is stale")
+        if rec["ratio"] >= 0.5:
+            raise SystemExit(f"[dryrun] sharded gate FAIL: plan-aware "
+                             f"exchange at {rec['ratio']:.3f}x dense (>= 0.5)")
+        print(f"[dryrun] sharded gate OK: {rec['ratio']:.3f}x dense")
+        return
 
     cells = []
     if args.all:

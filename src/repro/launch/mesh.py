@@ -3,15 +3,62 @@ so importing this never touches jax device state)."""
 
 from __future__ import annotations
 
-import jax
+import functools
 
-__all__ = ["make_production_mesh", "rules_for"]
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_engine_mesh", "mesh_shape_for",
+           "rules_for"]
+
+
+def mesh_shape_for(n_devices: int, cap_shape: tuple[int, ...]) -> tuple[int, ...]:
+    """Largest power-of-two mesh ≤ ``cap_shape`` that fits ``n_devices``.
+
+    The production shapes are the CAP, not a requirement: on a host with
+    fewer devices (CI's forced-8-device CPU, a dev box with 1) the mesh
+    degrades to what is actually there.  Axes fill from the LAST (model)
+    axis first — the innermost axis keeps the best locality — and every
+    axis stays a power of two so collectives get regular groups.
+    """
+    if n_devices < 1:
+        raise ValueError(f"need at least one device, got {n_devices}")
+    total = 1 << (max(n_devices, 1).bit_length() - 1)      # floor pow2
+    total = min(total, int(np.prod(cap_shape)))
+    shape = []
+    for cap in reversed(cap_shape):
+        if cap & (cap - 1):
+            raise ValueError(f"cap_shape axes must be powers of two: {cap_shape}")
+        a = min(cap, total)
+        total //= a
+        shape.append(a)
+    return tuple(reversed(shape))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    cap = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    devices = jax.devices()
+    shape = mesh_shape_for(len(devices), cap)
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+@functools.lru_cache(maxsize=16)
+def make_engine_mesh(dp: int = 1, sp: int = 1):
+    """(data, seq) mesh for plan-sharded dispatch (distributed/plan_shard).
+
+    Cached so every Dispatch trace of a given shape reuses the SAME Mesh
+    object — mesh identity keys jit caches, and a fresh mesh per call
+    would break the one-executable-per-(mesh shape, plan shape) budget.
+    """
+    devices = jax.devices()
+    if dp * sp > len(devices):
+        raise ValueError(
+            f"mesh ({dp}, {sp}) needs {dp * sp} devices, have {len(devices)}")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:dp * sp]).reshape(dp, sp), ("data", "seq"))
 
 
 def rules_for(cfg, shape, *, multi_pod: bool):

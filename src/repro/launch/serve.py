@@ -52,7 +52,8 @@ def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
                     strategy: str = "flashomni", schedule: str = None,
                     serving: str = "sequential", lanes: int = 4,
                     arrival_interval: float = 0.0, mixed_steps: bool = False,
-                    mixed_shapes: bool = False, shape_buckets=None):
+                    mixed_shapes: bool = False, shape_buckets=None,
+                    mesh: tuple = (1, 1)):
     """Queue-driven diffusion serving (see module docstring for modes).
 
     ``schedule`` names a registered SparsitySchedule preset (e.g.
@@ -65,13 +66,17 @@ def serve_diffusion(arch: str, *, smoke: bool = True, num_requests: int = 2,
     ``shape_buckets`` passes the canonical N_v bucket sizes through to
     :class:`~repro.launch.batching.ContinuousBatcher` (default when
     ``mixed_shapes``: ``(n_vision,)`` so the near-miss shape folds in).
+    ``mesh`` is ``(dp, sp)``: with ``sp > 1`` the engine runs plan-sharded
+    dispatch over a ``(data, seq)`` device mesh (``distributed/plan_shard``)
+    — the Update step emits per-shard CSR partitions and attention
+    exchanges only plan-live KV blocks.  Needs ``dp·sp`` local devices.
     Returns the per-request result dict from :mod:`repro.launch.batching`.
     """
     cfg = get_smoke(arch) if smoke else get_config(arch)
     ecfg = EngineConfig(mask=MaskConfig(
         tau_q=0.5, tau_kv=0.15, interval=4, order=1, degrade=0.3,
         block_q=16, block_kv=16, pool=32, warmup_steps=2),
-        strategy=strategy)
+        strategy=strategy, mesh_dp=mesh[0], mesh_sp=mesh[1])
     from repro.models import dit as ditmod
     params = ditmod.init_params(cfg, jax.random.PRNGKey(0))
     label = schedule or strategy
@@ -197,7 +202,19 @@ def main():
     ap.add_argument("--shape-buckets", type=int, nargs="*", default=None,
                     help="canonical N_v lane bucket sizes for "
                          "--serving continuous (near-miss shapes round up)")
+    ap.add_argument("--mesh", default="1,1", metavar="DP,SP",
+                    help="engine mesh 'dp,sp' for --kind diffusion: sp>1 "
+                         "runs plan-sharded dispatch over a (data, seq) "
+                         "mesh, exchanging only plan-live KV blocks "
+                         "(needs dp*sp local devices; e.g. --mesh 2,4 "
+                         "under XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8)")
     args = ap.parse_args()
+    try:
+        mesh = tuple(int(p) for p in args.mesh.split(","))
+        assert len(mesh) == 2 and mesh[0] >= 1 and mesh[1] >= 1
+    except (ValueError, AssertionError):
+        ap.error(f"--mesh expects 'dp,sp' positive ints, got {args.mesh!r}")
     if args.kind == "diffusion":
         serve_diffusion(args.arch, smoke=not args.full,
                         strategy=args.strategy, schedule=args.schedule,
@@ -207,7 +224,8 @@ def main():
                         mixed_steps=args.mixed_steps,
                         mixed_shapes=args.mixed_shapes,
                         shape_buckets=(tuple(args.shape_buckets)
-                                       if args.shape_buckets else None))
+                                       if args.shape_buckets else None),
+                        mesh=mesh)
     else:
         serve_lm(args.arch, smoke=not args.full)
 

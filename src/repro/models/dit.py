@@ -108,28 +108,49 @@ def engine_state_specs(cfg: ArchConfig, ecfg: EngineConfig) -> LayerState:
     # not divide the 16-wide model axis).  The DispatchPlan index arrays are
     # likewise small (int32 at block/pool granularity) and capacity-shaped;
     # shard them on batch only so scalar-prefetch gathers stay local.
+    plan = DispatchPlan(
+        q_ids=(None, "dp", None, None),
+        q_cnt=(None, "dp", None),
+        q_slots=(None, "dp", None, None),
+        kv_ids=(None, "dp", None, None),
+        kv_cnt=(None, "dp", None),
+        pair_live=(None, "dp", None, None, None),
+        kv_row_ids=(None, "dp", None, None, None),
+        kv_row_cnt=(None, "dp", None, None),
+        row_ids=(None, "dp", None),
+        row_cnt=(None, "dp"),
+        head_ids=(None, "dp", None, None),
+        head_cnt=(None, "dp", None),
+        head_mask=(None, "dp", None, None),
+        m_ch=(None, "dp", None, None),
+        row_score=(None, "dp", None),
+    )
+    if ecfg.kv_buckets > 1:
+        # Optional bucketed-layout fields become pytree leaves only when
+        # the config emits them — the spec tree must match leaf-for-leaf.
+        plan = plan._replace(
+            bkt_head=(None, "dp", None), bkt_q_ids=(None, "dp", None),
+            bkt_q_src=(None, "dp", None), bkt_q_slots=(None, "dp", None),
+            bkt_kv_ids=(None, "dp", None), bkt_kv_cnt=(None, "dp", None))
+    if ecfg.mesh_sp > 1 and ecfg.mesh_axis == "seq":
+        # Plan-sharded mesh partition (distributed/plan_shard.py): batch-
+        # sharded like every other plan field; the destination-shard axis
+        # is consumed by the dispatch shard_map, not by GSPMD.
+        p3 = (None, "dp", None, None)
+        p4 = (None, "dp", None, None, None)
+        plan = plan._replace(
+            shd_q_ids=p4, shd_q_src=p4, shd_q_slots=p4, shd_q_cnt=p3,
+            shd_kv_ids=p4, shd_kv_cnt=p3,
+            shd_kv_row_ids=(None, "dp", None, None, None, None),
+            shd_kv_row_cnt=p4, shd_gather_idx=p4,
+            shd_send_ids=(None, "dp", None, None, None, None),
+            shd_send_cnt=p4)
     return LayerState(
         s_c=(None, "dp", None, None),
         s_s=(None, "dp", None, None),
         taylor=TaylorState(derivs=taylor_feat, n_updates=(None,)),
         k_since=(None,),
-        plan=DispatchPlan(
-            q_ids=(None, "dp", None, None),
-            q_cnt=(None, "dp", None),
-            q_slots=(None, "dp", None, None),
-            kv_ids=(None, "dp", None, None),
-            kv_cnt=(None, "dp", None),
-            pair_live=(None, "dp", None, None, None),
-            kv_row_ids=(None, "dp", None, None, None),
-            kv_row_cnt=(None, "dp", None, None),
-            row_ids=(None, "dp", None),
-            row_cnt=(None, "dp"),
-            head_ids=(None, "dp", None, None),
-            head_cnt=(None, "dp", None),
-            head_mask=(None, "dp", None, None),
-            m_ch=(None, "dp", None, None),
-            row_score=(None, "dp", None),
-        ),
+        plan=plan,
     )
 
 

@@ -120,6 +120,115 @@ def test_collective_matmul_subprocess():
     assert "COLLECTIVE_OK" in r.stdout, r.stdout + r.stderr
 
 
+def _run_sub(code: str, sentinel: str, timeout: int = 600):
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True, timeout=timeout,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
+    assert sentinel in r.stdout, r.stdout + r.stderr
+
+
+_MESH_PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.engine import (EngineConfig, AttnParams, init_layer_state,
+                                   update_layer, dispatch_layer)
+    from repro.core.masks import MaskConfig
+    m = MaskConfig(tau_q=0.5, tau_kv=0.15, interval=4, order=1, degrade=0.3,
+                   block_q=16, block_kv=16, pool=32, warmup_steps=2)
+    B, H, n, dm, dh = 2, 4, 256, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 8)
+    params = AttnParams(
+        wq=jax.random.normal(ks[0], (dm, H*dh)) * 0.05,
+        wk=jax.random.normal(ks[1], (dm, H*dh)) * 0.05,
+        wv=jax.random.normal(ks[2], (dm, H*dh)) * 0.05,
+        wo=jax.random.normal(ks[3], (H*dh, dm)) * 0.05,
+        q_scale=jnp.ones((dh,)), k_scale=jnp.ones((dh,)))
+    x = jax.random.normal(ks[4], (B, n, dm), jnp.float32)
+""")
+
+# Tentpole acceptance: 8-device sharded dispatch is BIT-identical to the
+# single-device oracle (same state, mesh_dp=mesh_sp=1) for every tested
+# strategy x kv_buckets combination.  One subprocess per backend keeps
+# each under the interpreter+compile budget.
+_MESH_PARITY = _MESH_PRELUDE + textwrap.dedent("""
+    backend = {backend!r}
+    for strat in ("flashomni", "hunyuan-1.5x", "multi-granularity"):
+        for kvb in (1, 3):
+            cfgm = EngineConfig(mask=m, backend=backend, strategy=strat,
+                                kv_buckets=kvb, mesh_dp=2, mesh_sp=4)
+            cfg1 = dataclasses.replace(cfgm, mesh_dp=1, mesh_sp=1)
+            st0 = init_layer_state(B, H, n, dm, dh, cfgm)
+            _, st = update_layer(params, x, st0, cfgm, heads=H)
+            om, _ = dispatch_layer(params, x, st, cfgm, heads=H)
+            o1, _ = dispatch_layer(params, x, st, cfg1, heads=H)
+            assert (np.asarray(om) == np.asarray(o1)).all(), (strat, kvb)
+    print("MESH_PARITY_OK")
+""")
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_mesh_dispatch_bit_parity_subprocess(backend):
+    _run_sub(_MESH_PARITY.format(backend=backend), "MESH_PARITY_OK")
+
+
+# Head mode: Pallas parity is bitwise (the kernel's flash accumulation
+# order per (b, h) grid cell is shape-independent); XLA is allclose only —
+# shrinking the head batch lets the compiler reassociate its reductions
+# (observed max |delta| ~ 2e-8).  See distributed/plan_shard docstring.
+_MESH_HEAD = _MESH_PRELUDE + textwrap.dedent("""
+    for backend, bitwise in (("pallas", True), ("xla", False)):
+        cfgm = EngineConfig(mask=m, backend=backend, mesh_dp=2, mesh_sp=4,
+                            mesh_axis="head")
+        cfg1 = dataclasses.replace(cfgm, mesh_dp=1, mesh_sp=1)
+        st0 = init_layer_state(B, H, n, dm, dh, cfgm)
+        _, st = update_layer(params, x, st0, cfgm, heads=H)
+        om, _ = dispatch_layer(params, x, st, cfgm, heads=H)
+        o1, _ = dispatch_layer(params, x, st, cfg1, heads=H)
+        a, b = np.asarray(om), np.asarray(o1)
+        if bitwise:
+            assert (a == b).all(), backend
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    print("MESH_HEAD_OK")
+""")
+
+
+def test_mesh_head_mode_parity_subprocess():
+    _run_sub(_MESH_HEAD, "MESH_HEAD_OK")
+
+
+# Executable budget: repeated Dispatch at one (mesh shape, plan shape)
+# reuses ONE executable (make_engine_mesh is cached, so mesh identity is
+# stable across traces); a different mesh shape adds exactly one more.
+_MESH_BUDGET = _MESH_PRELUDE + textwrap.dedent("""
+    import functools
+    @functools.partial(jax.jit, static_argnames=("cfg", "heads"))
+    def step(params, x, st, cfg, heads):
+        o, _ = dispatch_layer(params, x, st, cfg, heads=heads)
+        return o
+    def run(cfg):
+        st0 = init_layer_state(B, H, n, dm, dh, cfg)
+        _, st = update_layer(params, x, st0, cfg, heads=H)
+        for _ in range(3):
+            step(params, x, st, cfg, H).block_until_ready()
+    cfg_a = EngineConfig(mask=m, backend="xla", mesh_dp=2, mesh_sp=4)
+    run(cfg_a)
+    assert step._cache_size() == 1, step._cache_size()
+    run(cfg_a)                       # fresh state, same shapes: no retrace
+    assert step._cache_size() == 1, step._cache_size()
+    run(dataclasses.replace(cfg_a, mesh_dp=1, mesh_sp=2))
+    assert step._cache_size() == 2, step._cache_size()
+    print("MESH_BUDGET_OK")
+""")
+
+
+def test_mesh_executable_budget_subprocess():
+    _run_sub(_MESH_BUDGET, "MESH_BUDGET_OK")
+
+
 _SUBPROC_ELASTIC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
