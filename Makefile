@@ -16,11 +16,20 @@
 #                          grid-slot accounting (uniform CSR grid vs the
 #                          occupancy-bucketed layout; asserts the >=2x
 #                          slot cut on the bimodal plan)
+#   make bench-gemm        Fig. 6/11 sparse-GEMM table: fraction-of-peak +
+#                          grid-slot accounting per density point and the
+#                          skewed-occupancy GEMM-O rows (asserts the >=2x
+#                          slot cut + bit-identity to the uniform kernel)
+#   make autotune          measure per-strategy occupancy histograms (and,
+#                          on a real TPU, sweep GEMM tile shapes) into
+#                          src/repro/kernels/default_calibration.json;
+#                          `make autotune-check` validates the table the
+#                          way CI does
 
 PY ?= python
 
 .PHONY: test smoke bench bench-strategies bench-schedule bench-serving \
-        bench-attention
+        bench-attention bench-gemm autotune autotune-check
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -42,3 +51,12 @@ bench-serving:
 
 bench-attention:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only "fig6/fig10 attention"
+
+bench-gemm:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only "fig6/fig11 sparse GEMMs"
+
+autotune:
+	PYTHONPATH=src:. $(PY) benchmarks/autotune.py --measure
+
+autotune-check:
+	PYTHONPATH=src:. $(PY) benchmarks/autotune.py --check

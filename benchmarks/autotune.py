@@ -1,0 +1,236 @@
+"""Plan-calibrated kernel autotuner (ISSUE 8 tentpole, calibration half).
+
+Populates the JSON calibration table consumed by
+:mod:`repro.kernels.tuning` — two independent signals:
+
+  * **Per-strategy occupancy histograms** (``strategies`` section): for
+    every registered sparsity strategy, build a small engine, run a few
+    Update steps and accumulate the plan's ``occ_hist`` (the halving
+    width-class histogram of live-row KV occupancy,
+    :func:`repro.core.plan.occupancy_histogram`), normalized to
+    fractions.  Occupancy is a PLAN property, not a timing — measuring it
+    with interpret-mode kernels on CPU is exact, so the checked-in
+    default table stays valid for CPU CI (``interpret_safe: true``).
+
+  * **Tile shapes** (``tiles`` section): a ``block_k``/``block_f`` timing
+    sweep over the sparse GEMM kernels.  Timings only mean anything on a
+    real TPU; off-TPU the sweep is skipped and the hand-picked 512
+    defaults are written unchanged.
+
+Usage::
+
+    PYTHONPATH=src:. python benchmarks/autotune.py --measure \
+        [--out src/repro/kernels/default_calibration.json] [--steps 6]
+    PYTHONPATH=src:. python benchmarks/autotune.py --check [--table PATH]
+
+``--check`` (the CI step) validates the table schema and asserts that
+:func:`repro.kernels.tuning.select_kv_buckets` resolves every registered
+strategy — calibrated or not — to a member of ``CANDIDATE_BUCKETS``, so a
+bad table can never leave the engine without a bucket count.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# --measure: per-strategy occupancy histograms
+# ---------------------------------------------------------------------------
+
+def _engine(strategy):
+    """Small-but-representative engine (mirrors tests/test_bucketed.py).
+
+    ``N = 1024`` (32 pool blocks) is the floor at which window/phase
+    strategies show their real occupancy skew — at toy scale a sliding
+    window spans most of the sequence and every row reads as full-width,
+    which would mis-calibrate the bucket model toward uniform grids."""
+    from repro.core import AttnParams, EngineConfig, init_layer_state
+    from repro.core.masks import MaskConfig
+    B, H, N, dm, dh = 1, 4, 1024, 64, 32
+    cfg = EngineConfig(
+        mask=MaskConfig(pool=32, block_q=16, block_kv=16, interval=4,
+                        order=1, warmup_steps=1, tau_kv=0.15, tau_q=0.5),
+        cap_q_frac=1.0, cap_kv_frac=1.0, cache_dtype=jnp.float32,
+        backend="xla", strategy=strategy, kv_buckets=1)
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    p = AttnParams(
+        wq=jax.random.normal(ks[0], (dm, H * dh)) * 0.05,
+        wk=jax.random.normal(ks[1], (dm, H * dh)) * 0.05,
+        wv=jax.random.normal(ks[2], (dm, H * dh)) * 0.05,
+        wo=jax.random.normal(ks[3], (H * dh, dm)) * 0.05,
+        q_scale=jnp.ones(dh), k_scale=jnp.ones(dh))
+    x = jax.random.normal(ks[4], (B, N, dm))
+    state = init_layer_state(B, H, N, dm, dh, cfg)
+    return cfg, p, x, state, H, N
+
+
+def measure_strategy(name: str, steps: int = 6) -> dict:
+    """Accumulated post-warmup occ_hist fractions for one strategy."""
+    from repro.core import update_layer
+    cfg, p, x, state, H, N = _engine(name)
+    warm = cfg.mask.warmup_steps
+    hist = np.zeros((), np.float64)
+    rows = 0
+    acc = None
+    for s in range(steps):
+        xs = x + 0.01 * jax.random.normal(jax.random.PRNGKey(10 + s), x.shape)
+        _, state = update_layer(p, xs, state, cfg, n_text=64, heads=H,
+                                step_idx=jnp.asarray(s, jnp.int32),
+                                num_steps=steps)
+        if s < warm:
+            continue   # warmup plans are all-live by construction
+        h = np.asarray(state.plan.occ_hist, np.float64).sum(axis=0)
+        acc = h if acc is None else acc + h
+    total = float(acc.sum()) if acc is not None else 0.0
+    frac = (acc / total).tolist() if total > 0 else []
+    return {"occ_hist": [round(f, 6) for f in frac], "rows": int(total)}
+
+
+# ---------------------------------------------------------------------------
+# --measure: tile sweep (real TPU only; timings are meaningless elsewhere)
+# ---------------------------------------------------------------------------
+
+_DEFAULT_TILES = {
+    "gemm_q": {"default": {"block_k": 512, "block_f": 512}},
+    "gemm_o": {"default": {"block_f": 512}},
+    "attention": {"default": {}},
+}
+
+
+def sweep_tiles() -> tuple[dict, bool]:
+    """Returns ``(tiles, interpret_safe)``.  Off-TPU: defaults, True."""
+    if jax.default_backend() != "tpu":
+        return json.loads(json.dumps(_DEFAULT_TILES)), True
+    from benchmarks.common import time_fn
+    from repro.core.symbols import active_indices
+    from repro.kernels.gemm_o import gemm_o_sparse_kernel
+    from repro.kernels.gemm_q import gemm_q_sparse_kernel
+    tiles = json.loads(json.dumps(_DEFAULT_TILES))
+    n, d, f, h, block = 4096, 1024, 1024, 8, 128
+    t = n // block
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (n, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, f), jnp.float32)
+    mask = jnp.zeros((t,), bool).at[: t // 2].set(True)
+    ids, cnt = active_indices(mask, t // 2)
+    best, best_t = None, float("inf")
+    for bk in (256, 512, 1024):
+        for bf in (256, 512, 1024):
+            fn = jax.jit(lambda x, w, i, c, bk=bk, bf=bf: gemm_q_sparse_kernel(
+                x, w, i, block_rows=block, block_k=bk, block_f=bf, row_cnt=c))
+            dt = time_fn(fn, x, w, ids, cnt)
+            if dt < best_t:
+                best, best_t = {"block_k": bk, "block_f": bf}, dt
+    tiles["gemm_q"][str(d)] = best
+    tiles["gemm_q"]["default"] = dict(best)
+    dh = d // h
+    oh = jax.random.normal(ks[2], (h, n, dh), jnp.float32)
+    wh = jax.random.normal(ks[3], (h, dh, f), jnp.float32)
+    bias = jax.random.normal(ks[4], (n, f), jnp.float32)
+    m_ch = jnp.zeros((t, h), bool).at[: t // 2, :].set(True)
+    rids, rcnt = active_indices(jnp.any(m_ch, -1), t // 2)
+    hids, hcnt = active_indices(jnp.take(m_ch, rids, axis=0), h)
+    hcnt = jnp.where(jnp.arange(t // 2) < rcnt, hcnt, 0)
+    best, best_t = None, float("inf")
+    for bf in (256, 512, 1024):
+        fn = jax.jit(lambda o, w, b, i, hi, hc, bf=bf: gemm_o_sparse_kernel(
+            o, w, b, i, hi, hc, block_rows=block, block_f=bf))
+        dt = time_fn(fn, oh, wh, bias, rids, hids, hcnt)
+        if dt < best_t:
+            best, best_t = {"block_f": bf}, dt
+    tiles["gemm_o"][str(h)] = best
+    tiles["gemm_o"]["default"] = dict(best)
+    return tiles, False
+
+
+def measure(out_path: Path, steps: int) -> dict:
+    from repro.core.strategy import available_strategies
+    from repro.kernels.tuning import select_kv_buckets, validate_table
+    tiles, interpret_safe = sweep_tiles()
+    strategies = {}
+    for name in available_strategies():
+        ent = measure_strategy(name, steps=steps)
+        strategies[name] = ent
+        print(f"# {name}: rows={ent['rows']} occ_hist={ent['occ_hist']}",
+              file=sys.stderr)
+    table = {
+        "version": 1,
+        "interpret_safe": interpret_safe,
+        "tiles": tiles,
+        "bucket_model": {"max_clamp_frac": 0.02},
+        "strategies": strategies,
+    }
+    validate_table(table)
+    for name in strategies:
+        b = select_kv_buckets(name, table)
+        print(f"# {name}: select_kv_buckets -> {b}", file=sys.stderr)
+    out_path.write_text(json.dumps(table, indent=2) + "\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# --check: schema + selection sanity (the CI step)
+# ---------------------------------------------------------------------------
+
+def check(table_path: Path | None) -> int:
+    from repro.core.strategy import available_strategies
+    from repro.kernels.tuning import (CANDIDATE_BUCKETS, DEFAULT_TABLE_PATH,
+                                      select_kv_buckets, validate_table)
+    p = table_path or DEFAULT_TABLE_PATH
+    try:
+        table = json.loads(p.read_text())
+        validate_table(table)
+    except (OSError, ValueError) as e:
+        print(f"FAIL: {p}: {e}", file=sys.stderr)
+        return 1
+    names = set(available_strategies()) | set(table.get("strategies", {}))
+    bad = []
+    for name in sorted(names):
+        b = select_kv_buckets(name, table)
+        calibrated = name in table.get("strategies", {})
+        print(f"# {name}: kv_buckets={b}"
+              f" ({'calibrated' if calibrated else 'uncalibrated -> uniform'})")
+        if b not in CANDIDATE_BUCKETS:
+            bad.append((name, b))
+    if bad:
+        print(f"FAIL: selections outside {CANDIDATE_BUCKETS}: {bad}",
+              file=sys.stderr)
+        return 1
+    print(f"# OK: {p} valid; {len(names)} strategies resolve within "
+          f"{CANDIDATE_BUCKETS}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--measure", action="store_true",
+                      help="measure histograms (+ TPU tile sweep), write table")
+    mode.add_argument("--check", action="store_true",
+                      help="validate a table and the bucket selections (CI)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="--measure output path (default: checked-in table)")
+    ap.add_argument("--table", default=None, metavar="PATH",
+                    help="--check input path (default: checked-in table)")
+    ap.add_argument("--steps", type=int, default=6,
+                    help="Update steps per strategy in --measure")
+    args = ap.parse_args(argv)
+    if args.measure:
+        from repro.kernels.tuning import DEFAULT_TABLE_PATH
+        out = Path(args.out) if args.out else DEFAULT_TABLE_PATH
+        measure(out, args.steps)
+        return 0
+    return check(Path(args.table) if args.table else None)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

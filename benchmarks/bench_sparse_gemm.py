@@ -12,20 +12,103 @@ kernel-vs-XLA comparisons are apples-to-apples with the engine's
 compile-once path.  On real TPUs a ``*_kernel_*`` row times the Pallas
 kernel over the same indices (interpret mode timings are meaningless, so
 the row is skipped off-TPU).
+
+Roofline accounting (ISSUE 8): every density point reports the fraction
+of MXU peak (``benchmarks.roofline.PEAK_FLOPS``) and of HBM bandwidth the
+LIVE work realises, plus the kernel GRID-SLOT count — uniform
+``Cr·Hc`` reduction slots vs the occupancy-bucketed layout
+(``bucket_grid_slots``) for GEMM-O.  The ``*_skewed`` rows exercise the
+bucketed kernel on a skewed live-head plan (one all-heads row among
+single-head rows), ASSERT the ≥2× grid-slot cut and bit-identity to the
+uniform kernel, and are consumed by the CI regression gate from the
+``--smoke --json`` artifact.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import flops_of, time_fn
+from benchmarks.roofline import HBM_BW, PEAK_FLOPS
+from repro.core.plan import bucket_geometry, bucket_grid_slots
 from repro.core.sparse_gemm import (gemm_o_from_plan, gemm_o_sparse,
                                     gemm_q_from_plan, gemm_q_sparse)
 from repro.core.symbols import active_indices
 
 
-def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128):
+def _bucketed_skewed(csv, *, n=512, d=512, f=512, h=8, block=64,
+                     hc_buckets=3):
+    """Fig. 11 bucketed GEMM-O rows: skewed live-head occupancy.
+
+    One row block keeps all ``h`` heads live, every other live row keeps
+    exactly one — the per-head sparsity shape behind the paper's GEMM-O
+    2.5–3.8×.  The uniform grid pays ``Hc = h`` reduction slots for every
+    row; the bucketed layout gives the 1-head rows 1–2-deep slots.  The
+    all-heads row fits the widest bucket, so no head list truncates and
+    the two kernels must agree BIT-for-bit (interpret mode — identical
+    accumulation order).  CI gates on the emitted ``grid_slot_cut`` /
+    ``bit_identical_to_uniform`` keys.
+    """
+    from repro.kernels import ops
+
+    t = n // block
+    dh = d // h
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    oh = jax.random.normal(ks[0], (h, n, dh), jnp.float32)
+    wh = jax.random.normal(ks[1], (h, dh, f), jnp.float32)
+    bias = jax.random.normal(ks[2], (n, f), jnp.float32)
+
+    m_ch = jnp.zeros((t, h), bool)
+    m_ch = m_ch.at[0, :].set(True)                     # one all-heads row
+    m_ch = m_ch.at[jnp.arange(1, t), jnp.arange(1, t) % h].set(True)
+
+    geometry = bucket_geometry(t, h, 1, hc_buckets)
+    slots_uniform = t * h
+    slots_bucketed = bucket_grid_slots(geometry)
+    # ISSUE 8 acceptance: the bucketed layout cuts GEMM-O grid slots >= 2x
+    # on the skewed row (static: equal-area buckets give B/(2^B - 1)).
+    assert slots_bucketed * 2 <= slots_uniform, (slots_bucketed, slots_uniform)
+
+    uni = functools.partial(ops.gemm_o, block_rows=block, interpret=True)
+    bkt = functools.partial(ops.gemm_o, block_rows=block, interpret=True,
+                            hc_buckets=hc_buckets)
+    out_uni = uni(oh, wh, bias, m_ch)
+    out_bkt = bkt(oh, wh, bias, m_ch)
+    bit_identical = bool(jnp.all(out_uni == out_bkt))
+    assert bit_identical, float(jnp.max(jnp.abs(out_uni - out_bkt)))
+    t_uni = time_fn(uni, oh, wh, bias, m_ch, iters=3, warmup=1)
+    t_bkt = time_fn(bkt, oh, wh, bias, m_ch, iters=3, warmup=1)
+
+    # Live work: one (block x dh) @ (dh x f) MAC tile per live (row, head).
+    pairs = float(jnp.sum(m_ch))
+    f_live = 2.0 * pairs * block * dh * f
+    bytes_live = 4.0 * (pairs * block * dh + h * dh * f + 2 * t * block * f)
+    geo = "/".join(f"{r}x{w}" for r, w in geometry)
+    csv.append({
+        "name": "fig11_gemm_o_uniform_skewed",
+        "us_per_call": t_uni * 1e6,
+        "derived": (f"grid_slots={slots_uniform}"
+                    f" frac_peak={f_live / t_uni / PEAK_FLOPS:.2e}"
+                    f" frac_hbm={bytes_live / t_uni / HBM_BW:.2e}"),
+    })
+    csv.append({
+        "name": "fig11_gemm_o_bucketed_skewed",
+        "us_per_call": t_bkt * 1e6,
+        "derived": (f"grid_slots={slots_bucketed}"
+                    f" grid_slot_cut={slots_uniform / slots_bucketed:.2f}"
+                    f" frac_peak={f_live / t_bkt / PEAK_FLOPS:.2e}"
+                    f" frac_hbm={bytes_live / t_bkt / HBM_BW:.2e}"
+                    f" geometry={geo}"
+                    f" bit_identical_to_uniform={int(bit_identical)}"),
+    })
+
+
+def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128, smoke=False):
+    if smoke:
+        n, d, f = 1024, 512, 512
     t = n // block
     on_tpu = jax.default_backend() == "tpu"
     key = jax.random.PRNGKey(1)
@@ -42,9 +125,16 @@ def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128):
         fn = jax.jit(lambda x, w, m: gemm_q_sparse(x, w, m, block=block, cap=keep))
         t_s = time_fn(fn, x, w, mask)
         s_real = 1 - keep / t
+        # Live-work roofline: the kernel grid launches exactly ``keep``
+        # row-block slots (row_cnt guard skips padding on the MXU).
+        f_live = 2.0 * keep * block * d * f
+        b_live = 4.0 * (keep * block * d + d * f + keep * block * f)
         csv.append({"name": f"fig6_gemm_q_s{s}", "us_per_call": t_s * 1e6,
                     "derived": (f"sparsity={s_real:.3f}"
                                 f" speedup_time={t_dense / t_s:.2f}"
+                                f" grid_slots={keep}"
+                                f" frac_peak={f_live / t_s / PEAK_FLOPS:.2e}"
+                                f" frac_hbm={b_live / t_s / HBM_BW:.2e}"
                                 f" theory={1 / max(1 - s_real, 1e-9):.2f}")})
         # Plan-level row: live-row indices precomputed once (Update time).
         ids, cnt = jax.jit(lambda m: active_indices(m, keep))(mask)
@@ -81,9 +171,20 @@ def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128):
                                                       cap=keep_rows))
         t_s = time_fn(fn, oh, wh, m_ch, bias)
         s_real = 1 - keep_rows / t
+        # Grid-slot accounting (ISSUE 8): uniform GEMM-O pays Cr·Hc
+        # reduction slots; the bucketed layout's static total at B = 3.
+        slots_uniform = keep_rows * h
+        slots_bucketed = bucket_grid_slots(
+            bucket_geometry(keep_rows, h, 1, 3))
+        f_live = 2.0 * keep_rows * block * d * f
+        b_live = 4.0 * (keep_rows * block * d + d * f + 2 * n * f)
         csv.append({"name": f"fig6_gemm_o_s{s}", "us_per_call": t_s * 1e6,
                     "derived": (f"sparsity={s_real:.3f}"
                                 f" speedup_time={t_dense_o / t_s:.2f}"
+                                f" grid_slots_uniform={slots_uniform}"
+                                f" grid_slots_bucketed={slots_bucketed}"
+                                f" frac_peak={f_live / t_s / PEAK_FLOPS:.2e}"
+                                f" frac_hbm={b_live / t_s / HBM_BW:.2e}"
                                 f" theory={1 / max(1 - s_real, 1e-9):.2f}")})
         # Plan-level row: row/head lists precomputed once (Update time).
         ids, cnt = jax.jit(lambda m: active_indices(
@@ -113,3 +214,4 @@ def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128):
     csv.append({"name": "fig6_gemm_dense_baselines",
                 "us_per_call": t_dense * 1e6,
                 "derived": f"gemm_o_dense_us={t_dense_o * 1e6:.1f}"})
+    _bucketed_skewed(csv)

@@ -12,6 +12,13 @@ JSON document.  The JSON is a build ARTIFACT: CI uploads the smoke run's
 it from the Actions run page) and a guard step fails the build if a
 ``bench-*.json`` ever lands in the tree — keep local copies out of
 commits (``.gitignore`` covers the default names).
+
+Not a suite here (it writes a tracked table, not CSV rows):
+``benchmarks/autotune.py --measure`` calibrates the kernel-tuning
+table (``src/repro/kernels/default_calibration.json`` — per-strategy
+occupancy histograms + GEMM tile shapes, see ``repro.kernels.tuning``);
+``--check`` validates it in CI.  ``make autotune`` / ``make
+autotune-check``.
 """
 
 from __future__ import annotations

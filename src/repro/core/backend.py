@@ -78,8 +78,14 @@ class XlaBackend:
             force_per_row=plan.shd_q_ids is not None)
 
     def gemm_o(self, o_tok, w, plan: DispatchPlan, bias: jax.Array, *,
-               block: int) -> jax.Array:
-        """o_tok (B,N,H,dh), w (H,dh,F), bias (B,N,F) -> (B,N,F)."""
+               block: int,
+               spec: Optional[SparseAttentionSpec] = None) -> jax.Array:
+        """o_tok (B,N,H,dh), w (H,dh,F), bias (B,N,F) -> (B,N,F).
+
+        ``plan.head_mask`` already carries any bucket-induced head clamp
+        (folded back at Update time, see ``plan.gmo_layout``), so this
+        path needs no bucket awareness to stay bit-consistent with the
+        bucketed kernel."""
         plan = plan.widen()
         return sparse_gemm.gemm_o_from_plan(
             o_tok, w, plan.head_mask, plan.row_ids, plan.row_cnt, bias,
@@ -105,7 +111,12 @@ class PallasBackend:
         whole batch (ROADMAP item: no Python unroll over B)."""
         plan = plan.widen()
         from repro.kernels.gemm_q import gemm_q_sparse_kernel
+        from repro.kernels.tuning import kernel_tiles
+        tiles = kernel_tiles("gemm_q", x.shape[-1])
         return gemm_q_sparse_kernel(x, w, plan.row_ids, block_rows=block,
+                                    block_k=tiles.get("block_k", 512),
+                                    block_f=tiles.get("block_f", 512),
+                                    row_cnt=plan.row_cnt,
                                     interpret=self.interpret)
 
     def attention(self, q, k, v, o_reuse, plan: DispatchPlan,
@@ -149,13 +160,36 @@ class PallasBackend:
         return out.reshape(b, h, n, dh)
 
     def gemm_o(self, o_tok, w, plan: DispatchPlan, bias: jax.Array, *,
-               block: int) -> jax.Array:
-        """Batched in the kernel grid, like :meth:`gemm_q`."""
+               block: int,
+               spec: Optional[SparseAttentionSpec] = None) -> jax.Array:
+        """Batched in the kernel grid, like :meth:`gemm_q`.
+
+        With ``spec.kv_buckets > 1`` and a plan carrying the ``gmo_*``
+        layout, routes to the occupancy-bucketed two-level grid — the
+        geometry is re-derived statically from the spec exactly as the
+        plan build derived it, and the plan's ``head_cnt``/``head_mask``
+        already fold the bucket clamp, so uniform vs bucketed stays
+        bit-identical."""
         plan = plan.widen()
+        from repro.kernels.tuning import kernel_tiles
+        h = w.shape[0]
+        tiles = kernel_tiles("gemm_o", h)
+        block_f = tiles.get("block_f", 512)
+        if spec is not None and spec.kv_buckets > 1 \
+                and plan.gmo_rows is not None:
+            from repro.core.plan import bucket_geometry
+            from repro.kernels.gemm_o import gemm_o_sparse_bucketed_kernel
+            cr = plan.row_ids.shape[-1]
+            geometry = bucket_geometry(cr, h, 1, spec.kv_buckets)
+            return gemm_o_sparse_bucketed_kernel(
+                o_tok.transpose(0, 2, 1, 3), w, bias, plan.gmo_rows,
+                plan.gmo_src, plan.gmo_head_ids, plan.gmo_head_cnt,
+                geometry, block_rows=block, block_f=block_f,
+                interpret=self.interpret)
         from repro.kernels.gemm_o import gemm_o_sparse_kernel
         return gemm_o_sparse_kernel(
             o_tok.transpose(0, 2, 1, 3), w, bias, plan.row_ids,
-            plan.head_ids, plan.head_cnt, block_rows=block,
+            plan.head_ids, plan.head_cnt, block_rows=block, block_f=block_f,
             interpret=self.interpret)
 
 
@@ -182,8 +216,8 @@ class MeshBackend:
         return mesh_attention(self.inner, self.cfg, q, k, v, o_reuse, plan,
                               spec, scale=scale, compact_q=compact_q)
 
-    def gemm_o(self, o_tok, w, plan, bias, *, block):
-        return self.inner.gemm_o(o_tok, w, plan, bias, block=block)
+    def gemm_o(self, o_tok, w, plan, bias, *, block, spec=None):
+        return self.inner.gemm_o(o_tok, w, plan, bias, block=block, spec=spec)
 
 
 _XLA = XlaBackend()

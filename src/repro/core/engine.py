@@ -121,6 +121,10 @@ class EngineConfig:
     interpret: Optional[bool] = None  # Pallas interpret mode (None: off-TPU)
     kv_buckets: int = 1               # occupancy buckets in the CSR grid
                                       # (1 = uniform cap_kv reduction;
+                                      # 0 = AUTO: pick from the calibrated
+                                      # occupancy histogram at schedule-
+                                      # resolution time, see
+                                      # kernels.tuning.select_kv_buckets;
                                       # see core.plan.bucket_geometry)
     strategy: str = "flashomni"       # sparse-symbol producer (registry name)
     schedule: Optional[str] = None    # named SparsitySchedule preset (overrides
@@ -148,6 +152,24 @@ class EngineConfig:
     def cap_kv_cmp(self, n_kv: int) -> int:
         return capacity_for(self.mask.n_blocks(n_kv), self.cap_kv_frac, quantum=1)
 
+    def resolved_kv_buckets(self) -> int:
+        """``kv_buckets`` with the 0 = "auto" sentinel resolved.
+
+        Auto consults the calibration table's occupancy histogram for
+        ``self.strategy`` (:func:`repro.kernels.tuning.select_kv_buckets`)
+        — a pure function of the STATIC config, evaluated at schedule /
+        spec-resolution time, so every jit cache keyed on this config
+        still maps one configuration to one executable and Dispatch
+        jaxprs stay sort-free.  Under a mesh the choice is forced to 1:
+        the seq-sharded inner spec runs uniform per shard and the head
+        mesh rejects buckets outright (distributed/plan_shard.py)."""
+        if self.kv_buckets != 0:
+            return self.kv_buckets
+        if self.mesh_sp > 1:
+            return 1
+        from repro.kernels.tuning import select_kv_buckets
+        return select_kv_buckets(self.strategy)
+
     def caps(self, n_tokens: int, n_kv: Optional[int] = None) -> SparseAttentionSpec:
         n_kv = n_tokens if n_kv is None else n_kv
         m = self.mask
@@ -159,7 +181,7 @@ class EngineConfig:
             block_kv=m.block_kv,
             cap_q=min(self.cap_q_cmp(n_tokens) * fq, t_q),
             cap_kv=min(self.cap_kv_cmp(n_kv) * fk, t_kv),
-            kv_buckets=self.kv_buckets,
+            kv_buckets=self.resolved_kv_buckets(),
         )
 
 
@@ -315,6 +337,14 @@ def resolve_schedule(cfg: EngineConfig, num_steps: int, n_layers: int, *,
     object — the sampler's jit cache keys on the schedule's strategy
     identities, and a stable resolution means the second request reuses
     the first request's compiled executable instead of re-tracing.
+
+    Bucket-count auto-selection (``cfg.kv_buckets == 0``) happens at this
+    resolution boundary too — :meth:`EngineConfig.resolved_kv_buckets`
+    consults the calibration table per (strategy, config), so the chosen
+    depth is frozen before any trace: one executable per configuration,
+    and the serving ≤4-executable budget is unchanged (the candidate set
+    {1, 2, 3} never multiplies executables — a config resolves to exactly
+    one depth).
     """
     from repro.core.schedule import SparsitySchedule, get_schedule
     try:
@@ -561,7 +591,8 @@ def dispatch_layer(
     if cfg.cache_mode == "bias":
         bias_f = taylorseer.forecast(state.taylor, k_since, m.interval).astype(x.dtype)
         if cfg.use_gemm_o:
-            out = backend.gemm_o(o_tok, wo_h, plan, bias_f, block=m.pool)
+            out = backend.gemm_o(o_tok, wo_h, plan, bias_f, block=m.pool,
+                                 spec=spec_c)
         else:
             # Dense GEMM over (zero-filled) cached heads + forecast bias —
             # numerically identical, no FLOP saving (fidelity fallback).

@@ -57,6 +57,24 @@ blocks occupies a ≈3-wide reduction, not a ``cap_kv``-wide one.  Bucket
 truncation is scattered back into ``kv_row_cnt`` so the uniform kernel
 and the XLA per-row CSR path consume identical truncated lists (the PR-4
 shared-truncation invariant, extended to buckets).
+
+GEMM-O buckets (ISSUE 8 tentpole): the same treatment for the OUTPUT
+projection's reduction axis.  The ``gmo_*`` fields sort the ``Cr`` compact
+row slots by LIVE-HEAD count into :func:`bucket_geometry` buckets over the
+head axis (``bucket_geometry(Cr, H, 1, kv_buckets)``), so a row with one
+live head occupies a 1-deep reduction slot instead of the uniform grid's
+``Hc``-deep one — the paper's GEMM-O 2.5–3.8× comes from exactly this
+skew.  Any bucket-induced head clamp is folded BACK into
+``head_cnt``/``head_mask`` before extraction (:func:`gmo_layout`), so the
+bucketed kernel, the uniform kernel, and the XLA masked-einsum path all
+consume the same truncated head lists — bit-identical outputs.
+
+``occ_hist`` (always emitted) is the Update-time KV-occupancy histogram
+over halving width classes (:func:`occupancy_histogram`) — the signal
+``benchmarks/autotune.py`` calibrates and ``kernels/tuning.py``'s cost
+model consumes to pick ``kv_buckets`` per (strategy, config) at
+schedule-resolution time.  It is a pure function of the plan's final
+``kv_row_cnt``, so ``plan_from_state`` rebuilds it bit-exactly.
 """
 
 from __future__ import annotations
@@ -79,7 +97,36 @@ __all__ = [
     "bucket_slot_layout",
     "bucket_grid_slots",
     "bucket_layout",
+    "gmo_layout",
+    "occupancy_histogram",
+    "OCC_BINS",
 ]
+
+#: Width classes of the occupancy histogram carried in ``DispatchPlan.
+#: occ_hist`` — class ``i`` holds live rows whose KV list fits width
+#: ``⌈cap_kv/2^{i+1}⌉`` (class 0 = needs more than half the capacity).
+OCC_BINS = 8
+
+
+def occupancy_histogram(kv_row_cnt: jax.Array, q_cnt: jax.Array,
+                        cap_kv: int) -> jax.Array:
+    """Per-sample halving-width-class histogram of live-row KV occupancy.
+
+    ``kv_row_cnt`` (B, H, Cq) int32, ``q_cnt`` (B, H) int32 →
+    (B, :data:`OCC_BINS`) int32.  A live row lands in class
+    ``#{i : cnt ≤ ⌈cap_kv/2^{i+1}⌉}`` — 0 means it needs (more than) the
+    full/half capacity, higher classes fit ever-narrower buckets, and the
+    last class absorbs the near-empty tail (including count-0 rows).  A
+    pure function of the plan's final (truncation-folded) counts, computed
+    at Update time — Dispatch never touches it."""
+    live = (jnp.arange(kv_row_cnt.shape[-1], dtype=jnp.int32)
+            < q_cnt[..., None])                                # (B, H, Cq)
+    ths = np.asarray([-(-cap_kv // (1 << (i + 1)))
+                      for i in range(OCC_BINS - 1)], np.int32)
+    cls = jnp.sum(kv_row_cnt[..., None] <= ths, axis=-1)       # 0..OCC_BINS-1
+    onehot = (cls[..., None] == jnp.arange(OCC_BINS, dtype=cls.dtype)) \
+        & live[..., None]
+    return jnp.sum(onehot, axis=(1, 2)).astype(jnp.int32)      # (B, OCC_BINS)
 
 
 def bucket_geometry(cap_q: int, cap_kv: int, heads: int,
@@ -213,6 +260,58 @@ def bucket_layout(q_ids, q_cnt, q_slots, kv_row_ids, kv_row_cnt,
     return bkt, kv_row_cnt
 
 
+def gmo_layout(row_ids, row_cnt, head_ids, head_cnt, row_score_r, geometry,
+               t_cmp: int):
+    """Sort the ``Cr`` compact row slots into live-head-count buckets.
+
+    The GEMM-O analogue of :func:`bucket_layout`: ``geometry`` comes from
+    ``bucket_geometry(Cr, H, 1, kv_buckets)`` (layout rows = compact row
+    slots, reduction axis = live heads).  ``row_score_r`` is the (B, Cr)
+    row-mass score gathered at ``row_ids`` — among equal head counts the
+    higher-mass row lands in the wider slot, mirroring the attention sort.
+
+    Returns ``(gmo, head_cnt', head_mask')`` where the ``gmo_*`` dict
+    feeds :class:`DispatchPlan` and the primed lists carry any
+    bucket-induced head clamp folded BACK in: ``head_cnt'`` is the clamp
+    scattered to slot order and ``head_mask'`` is rebuilt from the clamped
+    CSR prefixes, so the uniform kernel (which iterates ``hh <
+    head_cnt``) and the XLA masked einsum consume the SAME truncated head
+    lists as the bucketed kernel — bit-identical, no carve-outs.  Runs at
+    Update time only (it sorts)."""
+    b_, cr = row_ids.shape
+    h_ = head_ids.shape[-1]
+    slot = jnp.arange(cr, dtype=jnp.int32)
+    live = slot[None, :] < row_cnt[:, None]                        # (B, Cr)
+    cnt = jnp.where(live, head_cnt, 0)
+    pid = jnp.broadcast_to(slot, (b_, cr))
+    *_, order = jax.lax.sort(
+        ((~live).astype(jnp.int32), -cnt,
+         -row_score_r.astype(jnp.float32), pid), num_keys=4)
+    g = lambda a: jnp.take_along_axis(a, order, axis=-1)
+    s_live = g(live.astype(jnp.int32)) > 0                         # (B, R)
+    w_pos = np.concatenate([np.full(r, w, np.int32) for r, w in geometry])
+    gmo_head_cnt = jnp.minimum(g(cnt), w_pos)
+    new_cnt = jnp.put_along_axis(jnp.zeros_like(cnt), order, gmo_head_cnt,
+                                 axis=-1, inplace=False)
+    # Rebuild head_mask from the clamped CSR prefixes (the ids are exactly
+    # the ascending True positions, so an unclamped rebuild is the
+    # identity) — XLA's masked einsum then matches the clamp too.
+    keep = jnp.arange(h_, dtype=jnp.int32) < new_cnt[..., None]    # (B,Cr,H)
+    sid = jnp.where(keep, head_ids, h_)
+    new_mask = jnp.put_along_axis(
+        jnp.zeros((b_, cr, h_ + 1), jnp.bool_), sid,
+        jnp.ones_like(sid, jnp.bool_), axis=-1, inplace=False)[..., :h_]
+    srow_np, jof_np, _, _ = bucket_slot_layout(geometry)
+    sorted_heads = jnp.take_along_axis(head_ids, order[..., None], axis=-2)
+    gmo = dict(
+        gmo_rows=jnp.where(s_live, g(row_ids), t_cmp),
+        gmo_src=jnp.where(s_live, g(row_ids), 0),
+        gmo_head_ids=sorted_heads[:, srow_np, jof_np],             # (B, S)
+        gmo_head_cnt=gmo_head_cnt,
+    )
+    return gmo, new_cnt, new_mask
+
+
 class DispatchPlan(NamedTuple):
     """Precomputed index plan for Dispatch steps (a pytree of int32/bool)."""
 
@@ -233,6 +332,10 @@ class DispatchPlan(NamedTuple):
     head_mask: jax.Array   # (B, Cr, H) bool gathered (row, head) mask
     m_ch: jax.Array        # (B, T, H) bool compressed compute mask
     row_score: jax.Array   # (B, T) f32 column-mass row ranking (truncation)
+    # --- Update-time KV-occupancy histogram (always emitted) ---
+    # (B, OCC_BINS) int32 live rows per halving width class; the
+    # autotuner's calibration signal (see kernels/tuning.py).
+    occ_hist: Optional[jax.Array] = None
     # --- occupancy-bucketed CSR layout (None unless cfg.kv_buckets > 1) ---
     # Layout rows fold the head axis: R = H·Cq (head, q-slot) pairs sorted
     # by (live, kv count, row_score), widest bucket first; see
@@ -243,6 +346,14 @@ class DispatchPlan(NamedTuple):
     bkt_q_slots: Optional[jax.Array] = None  # (B, R) read q block, compact
     bkt_kv_ids: Optional[jax.Array] = None   # (B, S) per-slot kv-block id
     bkt_kv_cnt: Optional[jax.Array] = None   # (B, R) bucket-truncated count
+    # --- GEMM-O head-count buckets (None unless cfg.kv_buckets > 1) ---
+    # Layout rows are the Cr compact row slots sorted by live-head count
+    # into bucket_geometry(Cr, H, 1, kv_buckets); S = Σ rows·width grid
+    # slots.  See :func:`gmo_layout`.
+    gmo_rows: Optional[jax.Array] = None      # (B, Cr) write row id (dead→T)
+    gmo_src: Optional[jax.Array] = None       # (B, Cr) read row id (dead→0)
+    gmo_head_ids: Optional[jax.Array] = None  # (B, S) per-slot head id
+    gmo_head_cnt: Optional[jax.Array] = None  # (B, Cr) clamped live-head cnt
     # --- plan-sharded mesh partition (None unless cfg.mesh_sp > 1 with
     # mesh_axis == "seq"; see distributed/plan_shard.py).  Axis P indexes
     # the destination shard of the (data, seq) mesh; Cqs/Cks/pc are the
@@ -275,9 +386,12 @@ class DispatchPlan(NamedTuple):
         return self._replace(
             q_ids=w(self.q_ids), q_slots=w(self.q_slots), kv_ids=w(self.kv_ids),
             kv_row_ids=w(self.kv_row_ids), row_ids=w(self.row_ids),
+            head_ids=w(self.head_ids),
             bkt_head=w(self.bkt_head), bkt_q_ids=w(self.bkt_q_ids),
             bkt_q_src=w(self.bkt_q_src), bkt_q_slots=w(self.bkt_q_slots),
             bkt_kv_ids=w(self.bkt_kv_ids),
+            gmo_rows=w(self.gmo_rows), gmo_src=w(self.gmo_src),
+            gmo_head_ids=w(self.gmo_head_ids),
             shd_q_ids=w(self.shd_q_ids), shd_q_src=w(self.shd_q_src),
             shd_q_slots=w(self.shd_q_slots), shd_kv_ids=w(self.shd_kv_ids),
             shd_kv_row_ids=w(self.shd_kv_row_ids),
@@ -410,22 +524,45 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
     heads = m_ch.shape[-1]
     head_ids, head_cnt = active_indices(head_mask, heads)
 
+    # GEMM-O head-count buckets (ISSUE 8 tentpole): sort the Cr compact
+    # row slots by live-head count into halving-depth buckets so the
+    # output projection's grid covers live head-work, not Cr·Hc worst
+    # case.  Any bucket head clamp is folded back into head_cnt/head_mask
+    # (shared truncation — uniform kernel and XLA path stay bit-identical
+    # to the bucketed kernel).
+    gmo = {}
+    if getattr(spec, "kv_buckets", 1) > 1:
+        geometry_o = bucket_geometry(cap_rows, heads, 1, spec.kv_buckets)
+        score_rows = jnp.take_along_axis(row_score, row_ids, axis=-1)
+        gmo, head_cnt, head_mask = gmo_layout(
+            row_ids, row_cnt, head_ids, head_cnt, score_rows, geometry_o,
+            t_cmp)
+
+    # Occupancy histogram — computed from the FINAL (truncation-folded)
+    # counts so plan_from_state rebuilds it bit-exactly.
+    occ_hist = occupancy_histogram(kv_row_cnt, q_cnt, spec.cap_kv)
+
     # Plan-memory compaction: every block-id buffer fits in 15 bits at any
     # realistic scale (33K tokens / 64-token blocks = 516 blocks); store
     # int16, widen()ed to int32 on use.  ``q_ids``/``q_slots``/``kv_ids``
-    # join ``kv_row_ids``/``row_ids`` (ISSUE 6 satellite) — together the
-    # O(H·Cq·Ck) index footprint of the plan.
-    if compact_ids and max(t_cmp, t_q + 1, t_kv) < 2 ** 15:
+    # join ``kv_row_ids``/``row_ids`` (ISSUE 6 satellite); ``head_ids``
+    # and the ``gmo_*`` ids join in ISSUE 8 (head ids < H and gmo row ids
+    # ≤ t_cmp both clear the same 15-bit gate).
+    if compact_ids and max(t_cmp, t_q + 1, t_kv, heads) < 2 ** 15:
         narrow = lambda a: a.astype(jnp.int16)
         kv_row_ids = narrow(kv_row_ids)
         row_ids = narrow(row_ids)
         q_ids = narrow(q_ids)
         q_slots = narrow(q_slots)
         kv_ids = narrow(kv_ids)
+        head_ids = narrow(head_ids)
         if bkt:
             for key in ("bkt_head", "bkt_q_ids", "bkt_q_src", "bkt_q_slots",
                         "bkt_kv_ids"):
                 bkt[key] = narrow(bkt[key])
+        if gmo:
+            for key in ("gmo_rows", "gmo_src", "gmo_head_ids"):
+                gmo[key] = narrow(gmo[key])
         # shd_gather_idx indexes the KV exchange buffer, which can hold up
         # to buf_blocks > t_kv entries — gate its compaction separately.
         if shd and geom.buf_blocks < 2 ** 15:
@@ -439,8 +576,8 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
         kv_row_ids=kv_row_ids, kv_row_cnt=kv_row_cnt,
         row_ids=row_ids, row_cnt=row_cnt,
         head_ids=head_ids, head_cnt=head_cnt, head_mask=head_mask,
-        m_ch=m_ch, row_score=row_score,
-        **bkt, **shd,
+        m_ch=m_ch, row_score=row_score, occ_hist=occ_hist,
+        **bkt, **gmo, **shd,
     )
 
 

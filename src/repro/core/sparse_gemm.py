@@ -133,6 +133,12 @@ def gemm_o_from_plan(
     o_heads: (..., N, H, dh); w: (H, dh, d_out); ``ids``/``cnt`` are the
     live-row list and ``head_mask`` (..., cap, H) the per-live-row live-head
     mask — both straight from a :class:`~repro.core.plan.DispatchPlan`.
+
+    Under ``kv_buckets > 1`` the plan's ``head_mask`` already carries the
+    bucket-induced head clamp (folded back at Update time by
+    ``plan.gmo_layout``), so this path consumes the same truncated head
+    lists as the bucketed Pallas kernel — the ISSUE-8 no-carve-outs
+    bit-consistency invariant needs no bucket awareness here.
     """
     n, h, dh = o_heads.shape[-3], o_heads.shape[-2], o_heads.shape[-1]
     t = n // block

@@ -16,6 +16,20 @@ Batching is part of the KERNEL GRID: pass ``x`` as ``(B, N, K)`` with
 one ``pallas_call`` covers the whole batch (no Python per-sample relaunch;
 the scalar-prefetched ids are flattened ``(B·Cr,)`` and indexed by
 ``b·Cr + c``).  The unbatched ``(N, K)`` / ``(Cr,)`` signature still works.
+
+Occupancy guard (``row_cnt``, ISSUE 8): GEMM-Q has no per-row reduction
+occupancy to bucket — its reduction axis is the DENSE model dim ``K``, and
+its spatial sparsity is already the compact ``Cr`` capacity (the paper's
+1:1 density:speedup line).  What remains is the GPU kernel's ``S_c``
+early-exit analogue: capacity-padding slots (``c ≥ row_cnt``) duplicate
+the last live row id, and an unguarded kernel pays full MXU work to
+compute a duplicate that every consumer masks off.  With ``row_cnt`` the
+kernel skips the MXU on padded slots (the input re-DMA of the duplicated
+block is elided by Mosaic) and stores deterministic ZEROS there — the
+compact tail is defined output, not duplicated garbage.  The GEMM-Q grid
+shares the attention kernel's Update-time sort: ``active_indices``
+already orders live rows first, which IS the degenerate one-bucket
+layout over the dense-``K`` reduction, so no second sort exists anywhere.
 """
 
 from __future__ import annotations
@@ -33,18 +47,24 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 __all__ = ["gemm_q_sparse_kernel"]
 
 
-def _kernel(row_ids_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
-    ki = pl.program_id(3)
+def _kernel(row_ids_ref, row_cnt_ref, x_ref, w_ref, o_ref, acc_ref, *,
+            n_k: int):
+    bi, c, ki = pl.program_id(0), pl.program_id(1), pl.program_id(3)
 
     @pl.when(ki == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot(
-        x_ref[0].astype(jnp.float32),
-        w_ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
+    # Padding slots (c >= row_cnt) skip the MXU entirely — their
+    # accumulator stays zero, so the compact tail stores deterministic
+    # zeros instead of a duplicate of the last live block.
+    @pl.when(c < row_cnt_ref[bi])
+    def _accum():
+        acc_ref[...] += jax.lax.dot(
+            x_ref[0].astype(jnp.float32),
+            w_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
 
     @pl.when(ki == n_k - 1)
     def _done():
@@ -60,10 +80,13 @@ def gemm_q_sparse_kernel(
     block_k: int = 512,
     block_f: int = 512,
     interpret: bool = False,
+    row_cnt: Optional[jax.Array] = None,   # (B,) or () live-slot counts
 ) -> jax.Array:
     squeeze = x.ndim == 2
     if squeeze:
         x, row_ids = x[None], row_ids[None]
+        if row_cnt is not None:
+            row_cnt = jnp.asarray(row_cnt).reshape(1)
     b, n, kdim = x.shape
     f = w.shape[1]
     assert n % block_rows == 0
@@ -74,20 +97,26 @@ def gemm_q_sparse_kernel(
     cr = row_ids.shape[-1]
     n_k = kdim // block_k
     grid = (b, cr, f // block_f, n_k)
+    if row_cnt is None:
+        # No occupancy info: treat every slot as live (legacy duplicated-
+        # tail behavior would differ — with the guard always on, padded
+        # slots compute the duplicate like before the guard existed; all
+        # callers in-tree pass the real counts).
+        row_cnt = jnp.full((b,), cr, jnp.int32)
 
     out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, block_rows, block_k),
-                             lambda bi, c, fi, ki, ids: (bi, ids[bi * cr + c], ki)),
+                             lambda bi, c, fi, ki, ids, cnt: (bi, ids[bi * cr + c], ki)),
                 pl.BlockSpec((block_k, block_f),
-                             lambda bi, c, fi, ki, ids: (ki, fi)),
+                             lambda bi, c, fi, ki, ids, cnt: (ki, fi)),
             ],
             out_specs=pl.BlockSpec((1, block_rows, block_f),
-                                   lambda bi, c, fi, ki, ids: (bi, c, fi)),
+                                   lambda bi, c, fi, ki, ids, cnt: (bi, c, fi)),
             scratch_shapes=[pltpu.VMEM((block_rows, block_f), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((b, cr * block_rows, f), x.dtype),
@@ -96,5 +125,5 @@ def gemm_q_sparse_kernel(
                                  "arbitrary"),
         ),
         interpret=interpret,
-    )(row_ids.reshape(-1), x, w)
+    )(row_ids.reshape(-1), row_cnt.reshape(-1).astype(jnp.int32), x, w)
     return out[0] if squeeze else out

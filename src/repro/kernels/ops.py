@@ -4,6 +4,11 @@ These translate the engine's logical masks into the scalar-prefetch index
 lists the kernels consume, pick interpret mode automatically off-TPU, and
 guard the degenerate all-cached case (paper A.1.1 ``S_q`` degradation) where
 the kernels would have no live work.
+
+Tile shapes for the sparse GEMMs come from the calibration table in
+:mod:`repro.kernels.tuning` (``kernel_tiles``), keyed per kernel kind and
+reduction-width class — ``benchmarks/autotune.py`` populates it on real
+TPUs; the checked-in default reproduces the hand-picked 512s.
 """
 
 from __future__ import annotations
@@ -19,9 +24,11 @@ from repro.kernels.flashomni_attention import (
     flashomni_attention_csr,
     flashomni_attention_symbols,
 )
-from repro.kernels.gemm_o import gemm_o_sparse_kernel
+from repro.kernels.gemm_o import (gemm_o_sparse_bucketed_kernel,
+                                  gemm_o_sparse_kernel)
 from repro.kernels.gemm_q import gemm_q_sparse_kernel
 from repro.kernels.taylor_reuse import taylor_reuse_kernel
+from repro.kernels.tuning import kernel_tiles
 
 __all__ = [
     "on_tpu",
@@ -140,8 +147,11 @@ def gemm_q(
     t = row_mask.shape[-1]
     cap = t if cap is None else cap
     row_ids, row_cnt = active_indices(row_mask, cap)
+    tiles = kernel_tiles("gemm_q", x.shape[-1])
     y = gemm_q_sparse_kernel(x, w, row_ids, block_rows=block_rows,
-                             interpret=interpret)
+                             block_k=tiles.get("block_k", 512),
+                             block_f=tiles.get("block_f", 512),
+                             row_cnt=row_cnt, interpret=interpret)
     if not compact:
         base = jnp.zeros((x.shape[0], w.shape[-1]), x.dtype)
         y = scatter_rows(y, row_ids, row_cnt, base, block_rows)
@@ -149,7 +159,7 @@ def gemm_q(
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "cap_rows", "cap_heads",
-                                             "interpret"))
+                                             "interpret", "hc_buckets"))
 def gemm_o(
     o_heads: jax.Array,      # (H, N, dh)
     w: jax.Array,            # (H, dh, F)
@@ -160,7 +170,13 @@ def gemm_o(
     cap_rows: Optional[int] = None,
     cap_heads: Optional[int] = None,
     interpret: Optional[bool] = None,
+    hc_buckets: int = 1,
 ) -> jax.Array:
+    """GEMM-O wrapper.  ``hc_buckets > 1`` routes to the occupancy-bucketed
+    two-level grid over live-head counts (the GEMM-O analogue of the
+    attention entry's ``kv_buckets``).  NB: buckets may TRUNCATE a row's
+    head list to its slot width — callers compare against a reference fed
+    the same truncated counts (see ``tests/test_bucketed_gemm.py``)."""
     interpret = (not on_tpu()) if interpret is None else interpret
     t, h = m_ch.shape
     cap_rows = t if cap_rows is None else cap_rows
@@ -172,8 +188,25 @@ def gemm_o(
     # Padding slots duplicate the last live row; empty their head lists so
     # the bias-aliased kernel skips them (see _kernel's _done guard).
     head_cnt = jnp.where(jnp.arange(cap_rows) < row_cnt, head_cnt, 0)
+    tiles = kernel_tiles("gemm_o", h)
+    block_f = tiles.get("block_f", 512)
+    if hc_buckets > 1:
+        from repro.core.plan import bucket_geometry, gmo_layout
+        geometry = bucket_geometry(cap_rows, cap_heads, 1, hc_buckets)
+        # Live-head mass proxy for the sort's tie-break ranking (the plan
+        # build uses the strategy's row_score here).
+        score = jnp.sum(rows, axis=-1).astype(jnp.float32)
+        gmo, _, _ = gmo_layout(row_ids[None], row_cnt.reshape(1),
+                               head_ids[None], head_cnt[None], score[None],
+                               geometry, t)
+        out = gemm_o_sparse_bucketed_kernel(
+            o_heads, w, bias, gmo["gmo_rows"][0], gmo["gmo_src"][0],
+            gmo["gmo_head_ids"][0], gmo["gmo_head_cnt"][0], geometry,
+            block_rows=block_rows, block_f=block_f, interpret=interpret)
+        return jnp.where(row_cnt > 0, out, bias)
     out = gemm_o_sparse_kernel(o_heads, w, bias, row_ids, head_ids, head_cnt,
-                               block_rows=block_rows, interpret=interpret)
+                               block_rows=block_rows, block_f=block_f,
+                               interpret=interpret)
     return jnp.where(row_cnt > 0, out, bias)
 
 

@@ -60,10 +60,14 @@ def gemm_q_ref(
     block: int,
 ) -> jax.Array:
     """GEMM-Q oracle: compact (Cr*block, F) projection of the gathered live
-    row blocks.  Padding slots repeat the last live block's values."""
+    row blocks.  Padding slots are ZEROS — the kernel's occupancy guard
+    skips their MXU work and stores a deterministic empty tail (ISSUE 8),
+    so the compact layout's dead capacity is defined output."""
     xb = x.reshape(-1, block, x.shape[-1])
     xg = jnp.take(xb, row_ids, axis=0)
     y = jnp.einsum("cbk,kf->cbf", xg.astype(jnp.float32), w.astype(jnp.float32))
+    live = jnp.arange(row_ids.shape[0]) < row_cnt
+    y = jnp.where(live[:, None, None], y, 0.0)
     return y.reshape(-1, w.shape[-1]).astype(x.dtype)
 
 

@@ -1,0 +1,218 @@
+"""Plan-calibrated kernel tuning — calibration table + bucket cost model.
+
+ISSUE 8 closes the loop between the Update-time occupancy histogram the
+plan now carries (``DispatchPlan.occ_hist``, see
+:func:`repro.core.plan.occupancy_histogram`) and two static decisions the
+engine used to hard-code:
+
+  * **Tile shapes** — ``block_k``/``block_f`` for the sparse GEMM kernels
+    were fixed at 512.  :func:`kernel_tiles` looks them up per kernel kind
+    and per reduction-width class in a JSON calibration table written by
+    ``benchmarks/autotune.py`` (a real timing sweep on TPU; schema-only
+    defaults elsewhere).
+  * **Bucket count** — ``EngineConfig.kv_buckets`` was a static 1-or-3.
+    With ``kv_buckets = 0`` (the "auto" sentinel) the engine calls
+    :func:`select_kv_buckets` at schedule-resolution time: the calibrated
+    per-strategy occupancy histogram feeds a cost model that picks from
+    the static candidate set :data:`CANDIDATE_BUCKETS`.  The selection is
+    a pure function of ``(strategy, table)`` — NO runtime plan data — so
+    one configuration still lowers to exactly one executable and the
+    ≤4-executable serving budget is untouched; Dispatch jaxprs stay
+    sort-free because the choice happens before any trace.
+
+Cost model: a bucketed grid has ``B/(2^B − 1)`` of the uniform slot count
+(static, from :func:`repro.core.plan.bucket_geometry`), but rows whose
+occupancy class is wider than the bucket capacity left for them get
+CLAMPED — a fidelity cost, not a speed cost.  :func:`bucket_clamp_frac`
+estimates the clamped-row fraction from the histogram (demand vs capacity
+per width level, the same greedy order as the Update-time sort);
+:func:`select_kv_buckets` takes the deepest candidate whose predicted
+clamp fraction stays under ``bucket_model.max_clamp_frac``.  An
+uncalibrated strategy falls back to 1 bucket (uniform grid) — never a
+surprise clamp.
+
+Table schema (version 1, see ``default_calibration.json``)::
+
+    {
+      "version": 1,
+      "interpret_safe": true,          # written without a TPU timing sweep
+      "tiles": {
+        "gemm_q":    {"default": {"block_k": 512, "block_f": 512},
+                      "<width>": {...}},       # per reduction-width class
+        "gemm_o":    {"default": {"block_f": 512}, ...},
+        "attention": {"default": {}}   # block_q/block_kv are mask-locked;
+      },                               # reserved for future sweeps
+      "bucket_model": {"max_clamp_frac": 0.02},
+      "strategies": {
+        "<strategy name>": {"occ_hist": [..OCC_BINS fractions..],
+                            "rows": <live rows measured>}
+      }
+    }
+
+The checked-in default table is conservative: tiles reproduce the
+hand-picked 512s and the built-in strategies' histograms were measured
+with interpret-mode kernels on CPU (occupancy is a plan property, not a
+timing), so CPU CI and fresh clones never depend on having run a sweep.
+``benchmarks/autotune.py --check`` validates the schema in CI.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+from pathlib import Path
+from typing import Optional
+
+__all__ = [
+    "CANDIDATE_BUCKETS",
+    "DEFAULT_TABLE_PATH",
+    "load_table",
+    "validate_table",
+    "kernel_tiles",
+    "bucket_slot_frac",
+    "bucket_clamp_frac",
+    "select_kv_buckets",
+]
+
+#: Static bucket-count candidates — the executable budget math in
+#: core/schedule.py assumes the choice set is small and fixed.
+CANDIDATE_BUCKETS = (1, 2, 3)
+
+KINDS = ("gemm_q", "gemm_o", "attention")
+
+DEFAULT_TABLE_PATH = Path(__file__).with_name("default_calibration.json")
+
+_FALLBACK_TABLE = {
+    "version": 1,
+    "interpret_safe": True,
+    "tiles": {
+        "gemm_q": {"default": {"block_k": 512, "block_f": 512}},
+        "gemm_o": {"default": {"block_f": 512}},
+        "attention": {"default": {}},
+    },
+    "bucket_model": {"max_clamp_frac": 0.02},
+    "strategies": {},
+}
+
+
+@functools.lru_cache(maxsize=8)
+def load_table(path: Optional[str] = None) -> dict:
+    """Load (and memoize) a calibration table; schema-validated.
+
+    ``path=None`` loads the checked-in default.  A missing or invalid
+    file degrades to the built-in fallback (current kernel defaults, no
+    strategy calibration → :func:`select_kv_buckets` returns 1) — tuning
+    is an optimization, never a correctness dependency."""
+    p = Path(path) if path is not None else DEFAULT_TABLE_PATH
+    try:
+        table = json.loads(p.read_text())
+        validate_table(table)
+    except (OSError, ValueError):
+        return dict(_FALLBACK_TABLE)
+    return table
+
+
+def validate_table(table: dict) -> None:
+    """Raise ``ValueError`` on any schema violation (see module docstring)."""
+    if not isinstance(table, dict):
+        raise ValueError("calibration table must be a JSON object")
+    if table.get("version") != 1:
+        raise ValueError(f"unsupported table version {table.get('version')!r}")
+    tiles = table.get("tiles")
+    if not isinstance(tiles, dict):
+        raise ValueError("missing 'tiles' section")
+    for kind in KINDS:
+        entry = tiles.get(kind)
+        if not isinstance(entry, dict) or "default" not in entry:
+            raise ValueError(f"tiles[{kind!r}] needs a 'default' entry")
+        for wkey, t in entry.items():
+            if wkey != "default" and not wkey.isdigit():
+                raise ValueError(f"tiles[{kind!r}] key {wkey!r} not a width")
+            if not isinstance(t, dict):
+                raise ValueError(f"tiles[{kind!r}][{wkey!r}] not an object")
+            for name, v in t.items():
+                if not (isinstance(v, int) and v > 0 and (v & (v - 1)) == 0):
+                    raise ValueError(
+                        f"tiles[{kind!r}][{wkey!r}][{name!r}] = {v!r} "
+                        f"is not a positive power of two")
+    model = table.get("bucket_model", {})
+    mcf = model.get("max_clamp_frac", 0.02)
+    if not (isinstance(mcf, (int, float)) and 0.0 <= mcf <= 1.0):
+        raise ValueError(f"bucket_model.max_clamp_frac = {mcf!r} not in [0,1]")
+    for name, ent in table.get("strategies", {}).items():
+        hist = ent.get("occ_hist") if isinstance(ent, dict) else None
+        if (not isinstance(hist, list) or not hist
+                or any(not isinstance(x, (int, float)) or x < 0 for x in hist)):
+            raise ValueError(
+                f"strategies[{name!r}].occ_hist must be non-negative numbers")
+
+
+def kernel_tiles(kind: str, width: Optional[int] = None,
+                 table: Optional[dict] = None) -> dict:
+    """Tile shapes for ``kind`` at reduction-width class ``width``.
+
+    Exact width-class match wins, else the kind's ``default`` entry.  The
+    returned dict holds static ints (``block_k``/``block_f``) merged over
+    the default — callers keep their own hard defaults for keys the table
+    omits."""
+    table = load_table() if table is None else table
+    entry = table["tiles"].get(kind, {})
+    tiles = dict(entry.get("default", {}))
+    if width is not None:
+        tiles.update(entry.get(str(int(width)), {}))
+    return tiles
+
+
+def bucket_slot_frac(n_buckets: int) -> float:
+    """Grid slots of a ``B``-bucket halving layout as a fraction of the
+    uniform grid: ``B / (2^B − 1)`` (1.0, ≈0.67, ≈0.43 for B = 1, 2, 3)."""
+    return n_buckets / float((1 << n_buckets) - 1)
+
+
+def bucket_clamp_frac(hist, n_buckets: int) -> float:
+    """Predicted clamped-row fraction of a ``B``-bucket layout.
+
+    ``hist`` is the occupancy histogram over halving width classes
+    (counts or fractions; class ``i`` = fits width ``⌈cap/2^{i+1}⌉``, so
+    class 0 rows need a full-width slot).  The Update-time sort is greedy
+    widest-demand-first, so rows of class ``≤ b`` overflow into clamping
+    slots exactly when their cumulative demand exceeds the cumulative row
+    capacity of buckets ``0..b`` (``2^b/(2^B − 1)`` rows each)."""
+    total = float(sum(hist))
+    if total <= 0.0 or n_buckets <= 1:
+        return 0.0
+    frac = [float(h) / total for h in hist]
+    denom = float((1 << n_buckets) - 1)
+    clamp = demand = cap = 0.0
+    for b in range(n_buckets - 1):
+        demand += frac[b] if b < len(frac) else 0.0
+        cap += (1 << b) / denom
+        clamp = max(clamp, demand - cap)
+    return max(0.0, clamp)
+
+
+def select_kv_buckets(strategy: str, table: Optional[dict] = None,
+                      candidates=CANDIDATE_BUCKETS) -> int:
+    """Pick the bucket count for a strategy from its calibrated histogram.
+
+    Called at schedule-resolution time by
+    :meth:`repro.core.engine.EngineConfig.resolved_kv_buckets` when
+    ``kv_buckets == 0``.  Deepest candidate whose predicted clamp fraction
+    stays under ``bucket_model.max_clamp_frac`` wins (deeper = fewer grid
+    slots); an uncalibrated strategy returns 1 (uniform grid, no surprise
+    truncation).  Pure in ``(strategy, table)`` — same config, same
+    executable."""
+    table = load_table() if table is None else table
+    ent = table.get("strategies", {}).get(str(strategy))
+    if not ent:
+        return 1
+    hist = ent.get("occ_hist", [])
+    max_clamp = table.get("bucket_model", {}).get("max_clamp_frac", 0.02)
+    best = 1
+    for b in sorted(candidates):
+        if b == 1:
+            continue
+        if bucket_clamp_frac(hist, b) <= max_clamp \
+                and bucket_slot_frac(b) < bucket_slot_frac(best):
+            best = b
+    return int(best)

@@ -124,14 +124,19 @@ def engine_state_specs(cfg: ArchConfig, ecfg: EngineConfig) -> LayerState:
         head_mask=(None, "dp", None, None),
         m_ch=(None, "dp", None, None),
         row_score=(None, "dp", None),
+        occ_hist=(None, "dp", None),
     )
-    if ecfg.kv_buckets > 1:
+    if ecfg.resolved_kv_buckets() > 1:
         # Optional bucketed-layout fields become pytree leaves only when
         # the config emits them — the spec tree must match leaf-for-leaf.
+        # NB: resolved_kv_buckets, not kv_buckets — the 0 = auto sentinel
+        # must resolve to the same depth the plan build sees via caps().
         plan = plan._replace(
             bkt_head=(None, "dp", None), bkt_q_ids=(None, "dp", None),
             bkt_q_src=(None, "dp", None), bkt_q_slots=(None, "dp", None),
-            bkt_kv_ids=(None, "dp", None), bkt_kv_cnt=(None, "dp", None))
+            bkt_kv_ids=(None, "dp", None), bkt_kv_cnt=(None, "dp", None),
+            gmo_rows=(None, "dp", None), gmo_src=(None, "dp", None),
+            gmo_head_ids=(None, "dp", None), gmo_head_cnt=(None, "dp", None))
     if ecfg.mesh_sp > 1 and ecfg.mesh_axis == "seq":
         # Plan-sharded mesh partition (distributed/plan_shard.py): batch-
         # sharded like every other plan field; the destination-shard axis
