@@ -25,14 +25,25 @@
 #                          src/repro/kernels/default_calibration.json;
 #                          `make autotune-check` validates the table the
 #                          way CI does
+#   make analyze           engine invariant analyzer (src/repro/analysis):
+#                          jaxpr passes (dispatch purity, collective budget,
+#                          dtype promotion, executable budget), the
+#                          DispatchPlan structural validator over every
+#                          strategy × backend × kv_buckets × mesh combo,
+#                          and the repo-rule AST lint; exits non-zero on
+#                          any finding (the CLI forces an 8-device host
+#                          platform so mesh combos always run)
 
 PY ?= python
 
 .PHONY: test smoke bench bench-strategies bench-schedule bench-serving \
-        bench-attention bench-gemm autotune autotune-check
+        bench-attention bench-gemm autotune autotune-check analyze
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+analyze:
+	PYTHONPATH=src $(PY) -m repro.analysis
 
 smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --smoke --json bench-smoke.json

@@ -69,10 +69,12 @@ def run(csv: list, smoke: bool = False) -> None:
         t_update = time_fn(upd, x, state, iters=iters) * 1e6
 
         # Deterministic witness of the removed work (immune to wall-clock
-        # noise on shared hosts): index-decode ops in each dispatch jaxpr.
+        # noise on shared hosts): index-decode ops in each dispatch jaxpr,
+        # counted by the analyzer's primitive-level walker (recurses into
+        # pjit/scan sub-jaxprs — jaxpr-text grep misses those).
         def _index_ops(fn):
-            txt = str(jax.make_jaxpr(fn)(x, state))
-            return txt.count(" sort") + txt.count("top_k")
+            from repro.analysis.jaxpr_walk import index_decode_eqns
+            return len(index_decode_eqns(jax.make_jaxpr(fn)(x, state)))
 
         ops_reuse = _index_ops(disp_reuse)
         ops_rebuild = _index_ops(disp_rebuild)

@@ -1,0 +1,162 @@
+"""Engine invariant analyzer (ISSUE 9 tentpole).
+
+Three pass families behind one :class:`AnalysisPass` protocol and one
+entry point, :func:`run_analysis` (CLI: ``python -m repro.analysis`` /
+``make analyze``):
+
+1. **Jaxpr passes** (:mod:`repro.analysis.passes`) — trace real engine
+   entry points abstractly and walk the equation graphs with
+   :mod:`repro.analysis.jaxpr_walk`: ``dispatch-purity``,
+   ``collective-budget``, ``promotion-check``, ``executable-budget``.
+2. **Plan validator** (:mod:`repro.analysis.plan_check`) — structural
+   checks over any concrete :class:`~repro.core.plan.DispatchPlan`;
+   also the live opt-in hook behind ``EngineConfig.validate_plans`` /
+   ``REPRO_VALIDATE_PLANS=1``.
+3. **Source lint** (:mod:`repro.analysis.source_lint`) — repo-rule AST
+   checks over ``src/`` (plan-field coverage, unbounded caches,
+   ``id()``-keyed caches, jit-under-trace).
+
+Adding a pass
+-------------
+Write a class with a ``name`` string and a ``run(ctx) -> list[Finding]``
+method (``ctx.note(msg)`` records non-failing diagnostics, e.g. a
+skipped mesh combo on a 1-device host), then append it to
+:data:`ALL_PASSES`.  Passes must trace abstractly (``jax.eval_shape`` /
+``jax.make_jaxpr`` on ``ShapeDtypeStruct`` operands) — ``run_analysis``
+is a CI gate and must not burn compile time or FLOPs.
+
+Wiring a new DispatchPlan field
+-------------------------------
+A new field must be threaded through FOUR places, and the analyzer
+enforces each one:
+
+* produced in ``build_dispatch_plan`` (or a layout helper it splices
+  in) — ``plan-rebuild-coverage`` lint;
+* if it is an id list (suffix ``_ids``/``_slots``/``_src``/``_rows``/
+  ``_idx``), widened in ``DispatchPlan.widen()`` — the
+  ``plan-widen-coverage`` lint statically, and the plan validator's
+  no-int16-after-widen check dynamically;
+* given a sharding entry in ``models/dit.engine_state_specs`` —
+  ``plan-spec-coverage`` lint;
+* registered with its trailing (core) rank in
+  ``plan_check._CORE_RANK`` so the structural validator can fold away
+  stacked lane/layer axes — :func:`plan_check.check_plan` raises on an
+  unknown-rank field the first time a stacked plan is validated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Protocol
+
+__all__ = ["Finding", "AnalysisContext", "AnalysisPass", "ALL_PASSES",
+           "run_analysis"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant violation. ``where`` names the traced entry point or
+    source location; ``rule`` is the stable machine-readable rule id."""
+
+    pass_name: str
+    rule: str
+    where: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.pass_name}/{self.rule}] {self.where}: {self.message}"
+
+
+@dataclasses.dataclass
+class AnalysisContext:
+    """Shared pass inputs: the source root and a non-failing note sink."""
+
+    src_root: str
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def note(self, msg: str) -> None:
+        self.notes.append(msg)
+
+
+class AnalysisPass(Protocol):
+    name: str
+
+    def run(self, ctx: AnalysisContext) -> List[Finding]: ...
+
+
+class SourceLint:
+    """Adapter exposing :mod:`source_lint` through the pass protocol."""
+
+    name = "source-lint"
+
+    def run(self, ctx: AnalysisContext) -> List[Finding]:
+        from repro.analysis.source_lint import lint_sources
+        return [Finding(self.name, rule, f"{path}:{line}", msg)
+                for path, line, rule, msg in lint_sources(ctx.src_root)]
+
+
+class PlanValidator:
+    """Run :func:`plan_check.check_plan` over real engine plans for every
+    registered strategy × backend × kv_buckets × mesh combo."""
+
+    name = "plan-validator"
+
+    def run(self, ctx: AnalysisContext) -> List[Finding]:
+        import jax
+
+        from repro.analysis.passes import _params, _engine_cfg, sweep_configs, \
+            _B, _H, _N, _DM, _DH
+        from repro.analysis.plan_check import check_plan
+        from repro.core.engine import init_layer_state, update_layer
+        findings = []
+        x = jax.random.normal(jax.random.PRNGKey(3), (_B, _N, _DM)) * 0.3
+        p = _params()
+        for label, cfg, skip in sweep_configs():
+            if skip is not None:
+                ctx.note(f"{self.name}: skipped {label} ({skip})")
+                continue
+            if cfg.backend == "pallas":
+                # The plan is backend-independent (built before dispatch);
+                # validating it once per strategy/bucket/mesh combo is the
+                # full matrix — skip the duplicate pallas build.
+                continue
+            state = init_layer_state(_B, _H, _N, _DM, _DH, cfg)
+            _, st = update_layer(p, x, state, cfg, n_text=32, heads=_H,
+                                 step_idx=2, num_steps=8)
+            for msg in check_plan(st.plan, cfg, _N):
+                findings.append(Finding(self.name, "plan-invariant",
+                                        f"update_layer[{label}]", msg))
+        return findings
+
+
+def _jaxpr_passes():
+    from repro.analysis.passes import JAXPR_PASSES
+    return [cls() for cls in JAXPR_PASSES]
+
+
+def ALL_PASSES() -> list:
+    return _jaxpr_passes() + [PlanValidator(), SourceLint()]
+
+
+def run_analysis(passes: Optional[list] = None,
+                 src_root: Optional[str] = None,
+                 verbose: bool = True) -> List[Finding]:
+    """Run ``passes`` (default: all) and return every finding."""
+    import os
+    if src_root is None:
+        src_root = os.path.join(os.path.dirname(__file__), "..", "..")
+        src_root = os.path.normpath(src_root)
+    ctx = AnalysisContext(src_root=src_root)
+    findings: List[Finding] = []
+    for p in (ALL_PASSES() if passes is None else passes):
+        got = p.run(ctx)
+        findings.extend(got)
+        if verbose:
+            print(f"  pass {p.name}: "
+                  f"{'OK' if not got else f'{len(got)} finding(s)'}")
+    if verbose:
+        for n in ctx.notes:
+            print(f"  note: {n}")
+        for f in findings:
+            print(f"  {f}")
+    return findings

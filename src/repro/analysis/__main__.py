@@ -1,0 +1,122 @@
+"""CLI for the engine invariant analyzer: ``python -m repro.analysis``.
+
+Exit code 0 = no findings; 1 = at least one finding (the CI gate).
+
+``--fixture NAME`` runs the owning pass against a deliberately broken
+input instead of the repo — the acceptance harness for the analyzer
+itself (each fixture MUST produce findings, i.e. exit non-zero):
+
+* ``injected-sort``   — a dispatch-shaped fn with a smuggled ``lax.sort``
+* ``bad-plan``        — a real plan hand-mutated to violate fold-back
+                        (counts past widths, out-of-range ids)
+* ``uncovered-field`` — a plan leaf that ``widen()`` does not cover
+                        (survives as int16)
+* ``id-cache``        — a module caching by ``id(obj)`` into an
+                        unbounded module-level dict
+"""
+
+# Mesh passes need multiple devices; force an 8-device host platform
+# BEFORE jax is imported anywhere (harmless on real multi-device hosts:
+# setdefault never overrides an explicit setting).
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+
+
+def _fixture_findings(name: str):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import Finding
+    if name == "injected-sort":
+        from repro.analysis.jaxpr_walk import index_decode_eqns
+
+        def dispatch_like(x, ids):
+            # Pretends to consume a plan but re-derives the order.
+            order = jax.lax.sort(ids)
+            return jnp.take(x, order, axis=0)
+
+        jx = jax.make_jaxpr(dispatch_like)(
+            jnp.ones((8, 4)), jnp.arange(8, dtype=jnp.int32))
+        return [Finding("dispatch-purity", "no-index-decode-in-dispatch",
+                        "fixture[injected-sort]",
+                        f"{eqn.primitive.name} in dispatch jaxpr")
+                for _, eqn in index_decode_eqns(jx)]
+    if name in ("bad-plan", "uncovered-field"):
+        from repro.analysis.passes import (_B, _DH, _DM, _H, _N, _engine_cfg,
+                                           _params)
+        from repro.analysis.plan_check import check_plan
+        from repro.core.engine import init_layer_state, update_layer
+        cfg = _engine_cfg(kv_buckets=3)
+        x = jax.random.normal(jax.random.PRNGKey(0), (_B, _N, _DM)) * 0.3
+        st0 = init_layer_state(_B, _H, _N, _DM, _DH, cfg)
+        _, st = update_layer(_params(), x, st0, cfg, n_text=32, heads=_H,
+                             step_idx=2, num_steps=8)
+        plan = st.plan
+        if name == "bad-plan":
+            plan = plan._replace(
+                # counts past the bucket widths AND ids out of range
+                bkt_kv_cnt=plan.bkt_kv_cnt + 7,
+                kv_row_ids=jnp.full_like(plan.kv_row_ids, 2 ** 14))
+        else:
+            # a field widen() does not know about stays int16
+            plan = plan._replace(q_cnt=plan.q_cnt.astype(jnp.int16))
+        return [Finding("plan-validator", "plan-invariant",
+                        f"fixture[{name}]", msg)
+                for msg in check_plan(plan, cfg, _N)]
+    if name == "id-cache":
+        from repro.analysis.source_lint import lint_source
+        src = (
+            "_PLAN_CACHE = {}\n"
+            "def lookup(spec):\n"
+            "    key = id(spec)\n"
+            "    if key not in _PLAN_CACHE:\n"
+            "        _PLAN_CACHE[key] = build(spec)\n"
+            "    return _PLAN_CACHE[key]\n")
+        return [Finding("source-lint", rule, f"fixture[id-cache]:{line}", msg)
+                for _, line, rule, msg in lint_source(src)]
+    raise SystemExit(f"unknown fixture {name!r}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="FlashOmni engine invariant analyzer")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated pass names (default: all)")
+    ap.add_argument("--fixture", default=None,
+                    help="run against an adversarial fixture instead of "
+                         "the repo (expected to FAIL)")
+    ap.add_argument("--src", default=None, help="source root to lint")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.fixture:
+        findings = _fixture_findings(args.fixture)
+        for f in findings:
+            print(f"  {f}")
+        print(f"fixture {args.fixture}: {len(findings)} finding(s)")
+        return 1 if findings else 0
+
+    from repro.analysis import ALL_PASSES, run_analysis
+    passes = ALL_PASSES()
+    if args.passes:
+        want = {p.strip() for p in args.passes.split(",")}
+        known = {p.name for p in passes}
+        bad = want - known
+        if bad:
+            raise SystemExit(f"unknown pass(es) {sorted(bad)}; "
+                             f"known: {sorted(known)}")
+        passes = [p for p in passes if p.name in want]
+    findings = run_analysis(passes=passes, src_root=args.src,
+                            verbose=not args.quiet)
+    print(f"invariant analysis: {len(findings)} finding(s) across "
+          f"{len(passes)} pass(es)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

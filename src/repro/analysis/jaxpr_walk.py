@@ -1,0 +1,123 @@
+"""Primitive-level jaxpr inspection (the analyzer's shared walker).
+
+Every jaxpr-facing invariant in this repo used to be asserted by
+substring-grepping ``str(jax.make_jaxpr(...))`` — fragile against
+primitive renames, pretty-printer changes, and (worst) silently vacuous
+when the primitive hides inside a ``pjit``/``scan``/``switch`` call whose
+body the printer elides.  This module walks the equation graph itself,
+recursing into EVERY sub-jaxpr an equation carries in its params
+(``scan``'s ``jaxpr``, ``cond``/``switch`` ``branches``, ``pjit``'s
+``jaxpr``, ``shard_map``, ``custom_jvp_call``'s ``call_jaxpr``, ... —
+discovery is structural, not a primitive-name allowlist, so new
+higher-order primitives are covered automatically).
+
+All entry points accept a ``ClosedJaxpr`` (what ``jax.make_jaxpr``
+returns), a raw ``Jaxpr``, or anything with a ``.jaxpr`` attribute.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Iterator, Sequence
+
+__all__ = [
+    "as_jaxpr", "iter_eqns", "primitive_counts", "find_primitives",
+    "eqn_count", "INDEX_DECODE_PRIMS", "COLLECTIVE_PRIMS",
+    "index_decode_eqns", "collective_counts",
+]
+
+# Primitives that constitute index-decode work (mask -> plan extraction):
+# any of these inside a Dispatch jaxpr means the engine is rebuilding the
+# plan instead of consuming it.  ``argsort`` lowers to ``sort`` and
+# ``jax.lax.approx_max_k`` to ``approx_top_k``, so the three names cover
+# the whole family; ``unpack_bits`` has no named primitive of its own —
+# its signature (``shift_right_logical`` on uint8 operands) is matched
+# structurally by :func:`index_decode_eqns`.
+INDEX_DECODE_PRIMS = frozenset({"sort", "top_k", "approx_top_k"})
+
+# Cross-device collectives the CollectiveBudget pass accounts for.  The
+# mesh dispatch contract (distributed/plan_shard.py): seq mode spends
+# exactly one all_to_all per K and per V and nothing else; head mode
+# spends none at all.
+COLLECTIVE_PRIMS = frozenset({
+    "all_to_all", "all_gather", "psum", "psum_scatter", "reduce_scatter",
+    "ppermute", "pmin", "pmax", "pgather",
+})
+
+
+def as_jaxpr(obj):
+    """Unwrap ``ClosedJaxpr``/``make_jaxpr`` results down to a ``Jaxpr``."""
+    while hasattr(obj, "jaxpr"):
+        obj = obj.jaxpr
+    return obj
+
+
+def _sub_jaxprs(params: dict):
+    """Yield every Jaxpr held (possibly in a list/tuple) in eqn params."""
+    for val in params.values():
+        items = val if isinstance(val, (list, tuple)) else (val,)
+        for item in items:
+            if hasattr(item, "eqns") or hasattr(item, "jaxpr"):
+                yield as_jaxpr(item)
+
+
+def iter_eqns(jaxpr, *, path: tuple = ()) -> Iterator[tuple]:
+    """Depth-first ``(path, eqn)`` over the jaxpr and all sub-jaxprs.
+
+    ``path`` is the tuple of enclosing higher-order primitive names, e.g.
+    ``("scan", "pjit")`` for an equation inside a jitted scan body.
+    """
+    jaxpr = as_jaxpr(jaxpr)
+    for eqn in jaxpr.eqns:
+        yield path, eqn
+        inner = path + (eqn.primitive.name,)
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub, path=inner)
+
+
+def primitive_counts(jaxpr) -> Counter:
+    """Recursive primitive-name histogram."""
+    return Counter(eqn.primitive.name for _, eqn in iter_eqns(jaxpr))
+
+
+def find_primitives(jaxpr, names: Sequence[str]) -> list:
+    """All ``(path, eqn)`` whose primitive name is in ``names``."""
+    names = frozenset(names)
+    return [(p, e) for p, e in iter_eqns(jaxpr)
+            if e.primitive.name in names]
+
+
+def eqn_count(jaxpr, *, recursive: bool = False) -> int:
+    """Equation count; top-level only by default (the HLO-size proxy used
+    by the depth-independence tests — a scan body counts once however
+    many layers it covers), or the full recursive count."""
+    if recursive:
+        return sum(1 for _ in iter_eqns(jaxpr))
+    return len(as_jaxpr(jaxpr).eqns)
+
+
+def _is_uint8_unpack(eqn) -> bool:
+    """Structural signature of ``symbols.unpack_bits``: a bit-shift whose
+    operand is the uint8 symbol buffer."""
+    if eqn.primitive.name not in ("shift_right_logical", "and"):
+        return False
+    return any(getattr(getattr(v, "aval", None), "dtype", None) is not None
+               and str(v.aval.dtype) == "uint8" for v in eqn.invars)
+
+
+def index_decode_eqns(jaxpr) -> list:
+    """All ``(path, eqn)`` doing index-decode work: sort/top-k family plus
+    the uint8 symbol-unpack signature (``shift_right_logical`` on the
+    packed symbol buffer)."""
+    hits = []
+    for path, eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name in INDEX_DECODE_PRIMS or _is_uint8_unpack(eqn):
+            hits.append((path, eqn))
+    return hits
+
+
+def collective_counts(jaxpr) -> Counter:
+    """Histogram restricted to :data:`COLLECTIVE_PRIMS`."""
+    counts = primitive_counts(jaxpr)
+    return Counter({k: v for k, v in counts.items()
+                    if k in COLLECTIVE_PRIMS})

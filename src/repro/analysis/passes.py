@@ -1,0 +1,332 @@
+"""The jaxpr-level analysis passes (pass family (a) of the analyzer).
+
+Four passes, each tracing REAL engine entry points (never copies of
+them) and walking the resulting jaxprs with
+:mod:`repro.analysis.jaxpr_walk`:
+
+* :class:`DispatchPurity` — every registered strategy × backend ×
+  ``kv_buckets ∈ {1, 3}`` × {single-device, mesh}: the ``dispatch_layer``
+  jaxpr contains no index-decode work (sort / top-k family, uint8 symbol
+  unpack).  The matching ``update_layer`` jaxpr is the positive control:
+  it MUST contain the decode primitives, or the walker went vacuous.
+* :class:`CollectiveBudget` — ``MeshBackend`` seq-mode dispatch spends
+  exactly one ``all_to_all`` per K and per V (two total) and no other
+  collective; head-mode dispatch spends none at all.
+* :class:`PromotionCheck` — the serving lane-tick bodies preserve every
+  input dtype (bf16 latents stay bf16 — the PR-4 regression class where
+  a weak f32 scalar promoted the latents and forced a recompile every
+  tick).
+* :class:`ExecutableBudget` — a serving configuration lowers to ≤ 4
+  distinct executables per lane shape (3 mode-group bodies + the
+  lane-scan fallback), and every body traces with the schedule tables
+  ABSTRACT — proof the tables are traced operands, so schedule content
+  can never mint a new executable.
+
+Tracing is abstract end to end (``jax.eval_shape`` feeds
+``jax.make_jaxpr``): the sweep costs compile-less traces, no FLOPs.
+Mesh combos need ≥ 2 devices; in-process runs on one device record a
+skip note instead (the ``python -m repro.analysis`` CLI forces an
+8-device host platform before importing jax, so ``make analyze`` always
+covers them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_walk import (collective_counts, index_decode_eqns,
+                                       primitive_counts)
+
+__all__ = ["DispatchPurity", "CollectiveBudget", "PromotionCheck",
+           "ExecutableBudget", "JAXPR_PASSES"]
+
+
+# Small, fast-to-trace engine geometry shared by the jaxpr sweeps.
+_B, _H, _N, _DM, _DH = 1, 2, 128, 32, 16
+
+
+def _mask_cfg():
+    from repro.core.masks import MaskConfig
+    return MaskConfig(tau_q=0.5, tau_kv=0.15, interval=4, order=1,
+                      degrade=0.0, block_q=16, block_kv=16, pool=32,
+                      warmup_steps=1)
+
+
+def _engine_cfg(**kw):
+    from repro.core.engine import EngineConfig
+    return EngineConfig(mask=_mask_cfg(), cache_dtype=jnp.float32,
+                        cap_q_frac=0.75, cap_kv_frac=0.9, **kw)
+
+
+def _params(key=0):
+    from repro.core.engine import AttnParams
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    f = _H * _DH
+    return AttnParams(
+        wq=jax.random.normal(ks[0], (_DM, f)) * 0.05,
+        wk=jax.random.normal(ks[1], (_DM, f)) * 0.05,
+        wv=jax.random.normal(ks[2], (_DM, f)) * 0.05,
+        wo=jax.random.normal(ks[3], (f, _DM)) * 0.05,
+        q_scale=jnp.ones(_DH), k_scale=jnp.ones(_DH))
+
+
+def mesh_capacity() -> int:
+    """Devices available for mesh combos (mesh_sp=2 needs two)."""
+    return len(jax.devices())
+
+
+def sweep_configs(kv_buckets=(1, 3), meshes=(False, True)):
+    """Yield ``(label, cfg, skipped)`` over the full purity sweep grid."""
+    from repro.core.strategy import available_strategies
+    for strat, backend, kvb, mesh in itertools.product(
+            available_strategies(), ("xla", "pallas"), kv_buckets, meshes):
+        label = (f"{strat}/{backend}/kv_buckets={kvb}/"
+                 f"{'mesh' if mesh else 'single'}")
+        kw = dict(strategy=strat, backend=backend, kv_buckets=kvb)
+        if backend == "pallas":
+            kw["interpret"] = True
+        if mesh:
+            if mesh_capacity() < 2:
+                yield label, None, "needs >= 2 devices"
+                continue
+            kw.update(mesh_dp=1, mesh_sp=2)
+        yield label, _engine_cfg(**kw), None
+
+
+def _trace_pair(cfg):
+    """(update_jaxpr, dispatch_jaxpr) for ``cfg`` — abstract, no FLOPs."""
+    from repro.core.engine import (dispatch_layer, init_layer_state,
+                                   update_layer)
+    p = _params()
+    x = jax.ShapeDtypeStruct((_B, _N, _DM), jnp.float32)
+    state = init_layer_state(_B, _H, _N, _DM, _DH, cfg)
+    upd = jax.make_jaxpr(
+        lambda xx, ss: update_layer(p, xx, ss, cfg, n_text=32, heads=_H,
+                                    step_idx=2, num_steps=8))(x, state)
+    _, st_sh = jax.eval_shape(
+        lambda xx, ss: update_layer(p, xx, ss, cfg, n_text=32, heads=_H,
+                                    step_idx=2, num_steps=8), x, state)
+    disp = jax.make_jaxpr(
+        lambda xx, ss: dispatch_layer(p, xx, ss, cfg, n_text=32,
+                                      heads=_H))(x, st_sh)
+    return upd, disp
+
+
+class DispatchPurity:
+    """No index-decode primitive in any Dispatch jaxpr (ISSUE 1/6/7/8)."""
+
+    name = "dispatch-purity"
+
+    def run(self, ctx) -> List:
+        from repro.analysis import Finding
+        findings = []
+        for label, cfg, skip in sweep_configs():
+            if skip is not None:
+                ctx.note(f"{self.name}: skipped {label} ({skip})")
+                continue
+            upd, disp = _trace_pair(cfg)
+            for path, eqn in index_decode_eqns(disp):
+                findings.append(Finding(
+                    self.name, "no-index-decode-in-dispatch",
+                    f"dispatch_layer[{label}]",
+                    f"{eqn.primitive.name} at {'/'.join(path) or '<top>'} — "
+                    f"Dispatch is rebuilding plan indices"))
+            if not index_decode_eqns(upd):
+                findings.append(Finding(
+                    self.name, "walker-vacuous",
+                    f"update_layer[{label}]",
+                    "positive control failed: the Update jaxpr shows no "
+                    "sort/top-k — the walker is not seeing the real "
+                    "engine trace"))
+        return findings
+
+
+class CollectiveBudget:
+    """Mesh dispatch: one all_to_all per K and V (seq), zero in head mode."""
+
+    name = "collective-budget"
+
+    def run(self, ctx) -> List:
+        from repro.analysis import Finding
+        findings = []
+        if mesh_capacity() < 2:
+            ctx.note(f"{self.name}: skipped (needs >= 2 devices; "
+                     "run via `make analyze` / python -m repro.analysis)")
+            return findings
+        for mode, want_a2a in (("seq", 2), ("head", 0)):
+            cfg = _engine_cfg(backend="xla", mesh_dp=1, mesh_sp=2,
+                              mesh_axis=mode)
+            _, disp = _trace_pair(cfg)
+            cc = collective_counts(disp)
+            a2a = cc.pop("all_to_all", 0)
+            if a2a != want_a2a:
+                findings.append(Finding(
+                    self.name, "all-to-all-budget",
+                    f"dispatch_layer[mesh_axis={mode}]",
+                    f"expected exactly {want_a2a} all_to_all (one per K "
+                    f"and V), found {a2a}"))
+            if cc:
+                findings.append(Finding(
+                    self.name, "no-extra-collectives",
+                    f"dispatch_layer[mesh_axis={mode}]",
+                    f"unexpected collectives {dict(cc)} — mesh dispatch "
+                    f"must ship only the plan-live KV blocks"))
+        return findings
+
+
+# --- serving-tick passes ----------------------------------------------------
+
+def _serving_setup():
+    """Shared tiny serving configuration for the tick passes."""
+    from repro.configs.registry import get_smoke
+    from repro.core.engine import resolve_schedule
+    cfg = get_smoke("flux-mmdit")
+    ecfg = _engine_cfg(kv_buckets=1)
+    from repro.diffusion.pipeline import SamplerConfig
+    scfg = SamplerConfig(num_steps=8, dtype=jnp.float32)
+    strategies = resolve_schedule(ecfg, 8, cfg.n_layers).strategies
+    return cfg, ecfg, scfg, strategies
+
+
+def _tick_avals(cfg, ecfg, scfg, lanes=2, nv=64, latent_dtype=jnp.bfloat16):
+    """Abstract tick operands for a ``lanes``-wide microbatch."""
+    from repro.core.engine import stack_lane_states
+    from repro.models import dit
+    s_max = scfg.num_steps
+    b, pd, nt, dm = 1, cfg.patch_dim, cfg.n_text_tokens, cfg.d_model
+    n_tokens = nv + nt
+    sds = jax.ShapeDtypeStruct
+    states = jax.eval_shape(
+        lambda: stack_lane_states(
+            dit.init_engine_states(cfg, ecfg, b, n_tokens), lanes))
+    return dict(
+        params=jax.eval_shape(lambda: dit.init_params(
+            cfg, jax.random.PRNGKey(0))),
+        patch_embed=sds((pd, dm), jnp.float32),
+        x=sds((lanes, b, nv, pd), latent_dtype),
+        states=states,
+        text_emb=sds((lanes, b, nt, dm), jnp.float32),
+        step=sds((lanes,), jnp.int32),
+        mode_tab=sds((lanes, s_max), jnp.int32),
+        id_tab=sds((lanes, s_max, cfg.n_layers), jnp.int32),
+        id_rows=sds((lanes, cfg.n_layers), jnp.int32),
+        dt=sds((lanes,), jnp.float32),
+        nsteps=sds((lanes,), jnp.int32),
+        active=sds((lanes,), jnp.bool_),
+        reset=sds((lanes,), jnp.bool_),
+    )
+
+
+def trace_serving_ticks(latent_dtype=jnp.bfloat16):
+    """Abstractly trace every serving tick body.
+
+    Returns ``(tick_outputs, errors)`` where ``tick_outputs`` maps body
+    name (``scan`` + the three mode groups) to ``(in_avals, out_avals)``.
+    Bodies that fail to trace land in ``errors`` instead — schedule
+    tables are abstract here, so a failure means schedule CONTENT leaked
+    into trace-time control flow (an executable-budget violation).
+    """
+    from repro.diffusion.pipeline import (make_grouped_lane_tick,
+                                          make_lane_tick)
+    cfg, ecfg, scfg, strategies = _serving_setup()
+    av = _tick_avals(cfg, ecfg, scfg, latent_dtype=latent_dtype)
+    outs, errors = {}, {}
+    tick = make_lane_tick(cfg, ecfg, scfg, strategies)
+    scan_args = (av["params"], av["patch_embed"], av["x"], av["states"],
+                 av["text_emb"], av["step"], av["mode_tab"], av["id_tab"],
+                 av["dt"], av["nsteps"], av["active"], av["reset"])
+    try:
+        outs["scan"] = (av, jax.eval_shape(tick, *scan_args))
+    except Exception as e:                        # noqa: BLE001 — reported
+        errors["scan"] = repr(e)
+    grouped = make_grouped_lane_tick(cfg, ecfg, scfg, strategies)
+    grp_args = (av["params"], av["patch_embed"], av["x"], av["states"],
+                av["text_emb"], av["step"], av["id_rows"], av["dt"],
+                av["nsteps"], av["active"], av["reset"])
+    for mode, body in grouped.items():
+        try:
+            outs[mode] = (av, jax.eval_shape(body, *grp_args))
+        except Exception as e:                    # noqa: BLE001 — reported
+            errors[mode] = repr(e)
+    n_bodies = 1 + len(grouped)
+    return outs, errors, n_bodies
+
+
+class PromotionCheck:
+    """Serving tick bodies preserve latent/state dtypes (PR-4 class)."""
+
+    name = "promotion-check"
+
+    def run(self, ctx) -> List:
+        from repro.analysis import Finding
+        findings = []
+        outs, errors, _ = trace_serving_ticks(latent_dtype=jnp.bfloat16)
+        for body, err in errors.items():
+            findings.append(Finding(
+                self.name, "tick-trace-failed", f"lane tick[{body}]", err))
+        for body, (av, out) in outs.items():
+            x2, st2 = out[0], out[1]
+            if x2.dtype != av["x"].dtype:
+                findings.append(Finding(
+                    self.name, "latent-promotion", f"lane tick[{body}]",
+                    f"latents promoted {av['x'].dtype} -> {x2.dtype}: the "
+                    f"next tick's operands change dtype and recompile"))
+            in_leaves = jax.tree.leaves(av["states"])
+            out_leaves = jax.tree.leaves(st2)
+            for i, (a, b) in enumerate(zip(in_leaves, out_leaves)):
+                if a.dtype != b.dtype:
+                    findings.append(Finding(
+                        self.name, "state-promotion", f"lane tick[{body}]",
+                        f"engine-state leaf {i} promoted {a.dtype} -> "
+                        f"{b.dtype}"))
+        return findings
+
+
+class ExecutableBudget:
+    """Serving lowers to ≤ 4 executables, schedule content stays traced."""
+
+    name = "executable-budget"
+    LIMIT = 4
+
+    def run(self, ctx) -> List:
+        from repro.analysis import Finding
+        findings = []
+        outs, errors, n_bodies = trace_serving_ticks(
+            latent_dtype=jnp.float32)
+        if n_bodies > self.LIMIT:
+            findings.append(Finding(
+                self.name, "budget-exceeded", "serving ticks",
+                f"{n_bodies} distinct jitted tick bodies per lane shape "
+                f"(budget {self.LIMIT})"))
+        for body, err in errors.items():
+            findings.append(Finding(
+                self.name, "schedule-content-leak", f"lane tick[{body}]",
+                f"body does not trace with ABSTRACT schedule tables — "
+                f"schedule content reached trace-time control flow and "
+                f"would mint per-schedule executables: {err}"))
+        # The scan fallback must keep its lane loop rolled: one lax.scan
+        # over lanes, not a per-lane unroll (budget is per lane SHAPE).
+        from repro.diffusion.pipeline import make_lane_tick
+        cfg, ecfg, scfg, strategies = _serving_setup()
+        av = _tick_avals(cfg, ecfg, scfg, latent_dtype=jnp.float32)
+        tick = make_lane_tick(cfg, ecfg, scfg, strategies)
+        jx = jax.make_jaxpr(lambda *a: tick(*a))(
+            av["params"], av["patch_embed"], av["x"], av["states"],
+            av["text_emb"], av["step"], av["mode_tab"], av["id_tab"],
+            av["dt"], av["nsteps"], av["active"], av["reset"])
+        counts = primitive_counts(jx)
+        if counts.get("scan", 0) < 1:
+            findings.append(Finding(
+                self.name, "lane-scan-unrolled", "lane tick[scan]",
+                "the lane-serial fallback contains no lax.scan — lanes "
+                "unrolled into the jaxpr scale compile time with width"))
+        return findings
+
+
+JAXPR_PASSES = (DispatchPurity, CollectiveBudget, PromotionCheck,
+                ExecutableBudget)

@@ -1,0 +1,305 @@
+"""Repo-rule AST lint (pass family (c) of the analyzer).
+
+Walks the ``src/`` Python ASTs for repo-specific rules that generic
+linters cannot know:
+
+* ``plan-widen-coverage`` — every :class:`DispatchPlan` *id* field (by
+  the repo's naming convention: suffix ``_ids`` / ``_slots`` / ``_src``
+  / ``_rows`` / ``_idx``, plus ``bkt_head``) must appear as a keyword in
+  ``widen()``'s ``_replace`` call.  Count/mask/score fields
+  (``*_cnt`` / ``*_mask`` / ``*_live`` / ``*_score`` / ``*_hist`` /
+  ``m_ch``) are int32/bool/f32 by construction and exempt.
+* ``plan-spec-coverage`` — every DispatchPlan field must appear as a
+  keyword in ``models/dit.engine_state_specs`` (a plan field without a
+  sharding spec silently falls back to replication and ships whole
+  buffers to every shard).
+* ``plan-rebuild-coverage`` — every field must be produced somewhere on
+  the plan build path (``build_dispatch_plan`` and the layout helpers it
+  splices in: ``bucket_layout`` / ``gmo_layout`` / ``partition_plan``),
+  which is also exactly what ``plan_from_state``'s rebuild replays.
+* ``module-dict-cache`` — a module-level ``NAME = {}``/``dict()`` whose
+  name contains ``CACHE`` or ``MEMO`` is an unbounded cache; it must be
+  a :class:`repro.core.lru.LruCache`.  (Registries — append-only,
+  explicit registration — are out of scope by naming convention.)
+* ``id-keyed-cache`` — the PR-5 bug class: a cache keyed by ``id(obj)``
+  aliases freed addresses and defeats value-dedup.  Flagged when a
+  statement both calls the ``id`` builtin and touches a
+  ``CACHE``/``MEMO``-named store.
+* ``jit-in-traced-body`` — ``jax.jit``/``jax.pmap`` inside a function
+  passed to ``lax.scan``/``lax.switch``/``lax.cond``/``shard_map``:
+  jit under a trace is at best a no-op retrace and at worst an
+  executable-budget leak.
+
+Entry point: :func:`lint_sources` (or :func:`lint_source` for one
+in-memory module — what the adversarial fixture tests use).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+__all__ = ["lint_sources", "lint_source", "LintHit",
+           "ID_FIELD_SUFFIXES", "plan_fields"]
+
+# DispatchPlan id-field naming convention (see DispatchPlan docstring).
+ID_FIELD_SUFFIXES = ("_ids", "_slots", "_src", "_rows", "_idx")
+ID_FIELD_EXTRAS = frozenset({"bkt_head"})
+
+LintHit = Tuple[str, int, str, str]     # (path, lineno, rule, message)
+
+_TRACED_HOPS = frozenset({"scan", "switch", "cond", "while_loop",
+                          "shard_map", "fori_loop", "associated_scan"})
+
+
+def _call_name(node: ast.AST) -> Optional[str]:
+    """Trailing name of a call target: ``jax.lax.scan`` -> ``scan``."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _dotted(node: ast.AST) -> str:
+    if isinstance(node, ast.Attribute):
+        return _dotted(node.value) + "." + node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _is_cache_name(name: str) -> bool:
+    up = name.upper()
+    return "CACHE" in up or "MEMO" in up
+
+
+def is_id_field(name: str) -> bool:
+    return name.endswith(ID_FIELD_SUFFIXES) or name in ID_FIELD_EXTRAS
+
+
+# ---------------------------------------------------------------------------
+# DispatchPlan structural rules (plan.py / dit.py / plan_shard.py)
+# ---------------------------------------------------------------------------
+
+def _find_class(tree: ast.Module, name: str) -> Optional[ast.ClassDef]:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def plan_fields(plan_tree: ast.Module) -> List[str]:
+    """DispatchPlan field names, in declaration order, from the AST."""
+    cls = _find_class(plan_tree, "DispatchPlan")
+    if cls is None:
+        return []
+    return [stmt.target.id for stmt in cls.body
+            if isinstance(stmt, ast.AnnAssign)
+            and isinstance(stmt.target, ast.Name)]
+
+
+def _method(cls: ast.ClassDef, name: str) -> Optional[ast.FunctionDef]:
+    for stmt in cls.body:
+        if isinstance(stmt, ast.FunctionDef) and stmt.name == name:
+            return stmt
+    return None
+
+
+def _call_keywords(scope: ast.AST, callee_names) -> set:
+    """All keyword names of calls to any of ``callee_names`` in scope."""
+    out = set()
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Call) \
+                and _call_name(node.func) in callee_names:
+            out.update(kw.arg for kw in node.keywords if kw.arg)
+    return out
+
+
+def _dict_keys_in(scope: ast.AST) -> set:
+    """String keys visible in dict literals / dict() calls / subscript
+    stores within ``scope`` — how the layout helpers emit their fields."""
+    out = set()
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Dict):
+            out.update(k.value for k in node.keys
+                       if isinstance(k, ast.Constant)
+                       and isinstance(k.value, str))
+        elif isinstance(node, ast.Call) and _call_name(node.func) == "dict":
+            out.update(kw.arg for kw in node.keywords if kw.arg)
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript) \
+                        and isinstance(t.slice, ast.Constant) \
+                        and isinstance(t.slice.value, str):
+                    out.add(t.slice.value)
+    return out
+
+
+def _lint_plan_coverage(src_root: Path) -> List[LintHit]:
+    hits: List[LintHit] = []
+    plan_path = src_root / "repro" / "core" / "plan.py"
+    dit_path = src_root / "repro" / "models" / "dit.py"
+    shard_path = src_root / "repro" / "distributed" / "plan_shard.py"
+    plan_tree = ast.parse(plan_path.read_text())
+    fields = plan_fields(plan_tree)
+    if not fields:
+        return [(str(plan_path), 1, "plan-widen-coverage",
+                 "DispatchPlan class not found")]
+    cls = _find_class(plan_tree, "DispatchPlan")
+
+    # widen() coverage of the id-convention fields
+    widen = _method(cls, "widen")
+    covered = _call_keywords(widen, {"_replace"}) if widen else set()
+    for f in fields:
+        if is_id_field(f) and f not in covered:
+            hits.append((str(plan_path), cls.lineno, "plan-widen-coverage",
+                         f"id field {f!r} missing from widen()'s _replace "
+                         f"— it would reach kernels as int16"))
+
+    # engine_state_specs coverage (every field needs a sharding spec)
+    dit_tree = ast.parse(dit_path.read_text())
+    specs_fn = None
+    for node in ast.walk(dit_tree):
+        if isinstance(node, ast.FunctionDef) \
+                and node.name == "engine_state_specs":
+            specs_fn = node
+            break
+    if specs_fn is None:
+        hits.append((str(dit_path), 1, "plan-spec-coverage",
+                     "engine_state_specs not found"))
+    else:
+        spec_kw = _call_keywords(specs_fn, {"DispatchPlan", "_replace"})
+        for f in fields:
+            if f not in spec_kw:
+                hits.append((str(dit_path), specs_fn.lineno,
+                             "plan-spec-coverage",
+                             f"DispatchPlan field {f!r} has no entry in "
+                             f"engine_state_specs — it would silently "
+                             f"replicate across the mesh"))
+
+    # build-path coverage (build_dispatch_plan + layout helper emissions,
+    # the exact path plan_from_state's rebuild replays)
+    build_kw = _call_keywords(plan_tree, {"DispatchPlan"})
+    build_kw |= _dict_keys_in(plan_tree)
+    build_kw |= _dict_keys_in(ast.parse(shard_path.read_text()))
+    for f in fields:
+        if f not in build_kw:
+            hits.append((str(plan_path), cls.lineno, "plan-rebuild-coverage",
+                         f"DispatchPlan field {f!r} is never produced on "
+                         f"the build/rebuild path"))
+    return hits
+
+
+# ---------------------------------------------------------------------------
+# Generic repo rules (whole src/ tree)
+# ---------------------------------------------------------------------------
+
+def _lint_module(path: str, tree: ast.Module) -> List[LintHit]:
+    hits: List[LintHit] = []
+
+    # module-dict-cache: module-level CACHE/MEMO dict literals
+    for node in tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        unbounded = isinstance(node.value, (ast.Dict, ast.DictComp)) or (
+            isinstance(node.value, ast.Call)
+            and _call_name(node.value.func) == "dict")
+        if not unbounded:
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name) and _is_cache_name(t.id):
+                hits.append((path, node.lineno, "module-dict-cache",
+                             f"{t.id} is an unbounded module-level dict — "
+                             f"use repro.core.lru.LruCache"))
+
+    # id-keyed-cache: a SIMPLE statement touching a CACHE/MEMO-named
+    # store while keying (directly or through a local assigned from
+    # ``id(...)``) by object identity.  Compound statements are skipped —
+    # a whole function mentioning both independently is not a finding —
+    # and taint is per enclosing scope, so a transient local dict keyed
+    # by ``id`` over pinned objects (schedule.strategy_table's
+    # ``by_spec``) stays legal as long as no cache is involved.
+    _simple = (ast.Assign, ast.AugAssign, ast.AnnAssign, ast.Expr,
+               ast.Return, ast.Assert, ast.Raise, ast.Delete)
+
+    def _calls_id(node: ast.AST) -> bool:
+        return any(isinstance(n, ast.Call)
+                   and isinstance(n.func, ast.Name) and n.func.id == "id"
+                   for n in ast.walk(node))
+
+    seen = set()
+    scopes = [tree] + [n for n in ast.walk(tree)
+                       if isinstance(n, ast.FunctionDef)]
+    for scope in scopes:
+        tainted = {t.id for n in ast.walk(scope)
+                   if isinstance(n, ast.Assign) and _calls_id(n.value)
+                   for t in n.targets if isinstance(t, ast.Name)}
+        for node in ast.walk(scope):
+            if not isinstance(node, _simple) or node.lineno in seen:
+                continue
+            touches_cache = any(
+                (isinstance(n, ast.Name) and _is_cache_name(n.id))
+                or (isinstance(n, ast.Attribute) and _is_cache_name(n.attr))
+                for n in ast.walk(node))
+            if not touches_cache:
+                continue
+            if _calls_id(node) or any(
+                    isinstance(n, ast.Name) and n.id in tainted
+                    for n in ast.walk(node)):
+                seen.add(node.lineno)
+                hits.append((path, node.lineno, "id-keyed-cache",
+                             "cache access keyed by id(obj) — addresses "
+                             "recycle after gc; key by VALUE "
+                             "(strategy_key / frozen config)"))
+
+    # jit-in-traced-body: jax.jit inside a fn passed to a traced
+    # higher-order primitive
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        local_fns = {n.name: n for n in ast.walk(fn)
+                     if isinstance(n, ast.FunctionDef)}
+        for call in ast.walk(fn):
+            if not (isinstance(call, ast.Call)
+                    and _call_name(call.func) in _TRACED_HOPS):
+                continue
+            passed = []
+            for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in local_fns:
+                    passed.append(local_fns[arg.id])
+                elif isinstance(arg, (ast.List, ast.Tuple)):
+                    passed.extend(local_fns[e.id] for e in arg.elts
+                                  if isinstance(e, ast.Name)
+                                  and e.id in local_fns)
+            for body_fn in passed:
+                for n in ast.walk(body_fn):
+                    if isinstance(n, ast.Call) and isinstance(
+                            n.func, ast.Attribute) \
+                            and n.func.attr in ("jit", "pmap") \
+                            and _dotted(n.func).startswith("jax"):
+                        hits.append((
+                            path, n.lineno, "jit-in-traced-body",
+                            f"jax.{n.func.attr} inside "
+                            f"{body_fn.name!r}, which is traced by "
+                            f"{_call_name(call.func)} — jit under a "
+                            f"trace re-traces per call"))
+    return hits
+
+
+def lint_source(source: str, path: str = "<memory>") -> List[LintHit]:
+    """Lint one in-memory module (generic rules only)."""
+    return _lint_module(path, ast.parse(source))
+
+
+def lint_sources(src_root) -> List[LintHit]:
+    """Lint the whole ``src/`` tree: plan coverage + generic rules."""
+    src_root = Path(src_root)
+    hits = _lint_plan_coverage(src_root)
+    for path in sorted(src_root.rglob("*.py")):
+        tree = ast.parse(path.read_text())
+        hits.extend(_lint_module(str(path), tree))
+    return hits

@@ -142,6 +142,11 @@ class EngineConfig:
     mesh_pair_slack: float = 1.5      # per-(src,dst) shipped-block capacity
                                       # slack over cap_kv/P (≥ 1 keeps the
                                       # per-shard union clamp a no-op)
+    validate_plans: bool = False      # debug: run the structural plan
+                                      # validator (analysis/plan_check.py)
+                                      # on host after every plan build;
+                                      # REPRO_VALIDATE_PLANS=1 turns it on
+                                      # globally without touching configs
 
     # Capacity bookkeeping.  The single source of truth is the COMPRESSED
     # granularity capacity (symbols live there); block-granularity caps are

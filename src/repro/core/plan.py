@@ -570,7 +570,7 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
                         "shd_kv_row_ids", "shd_gather_idx", "shd_send_ids"):
                 shd[key] = narrow(shd[key])
 
-    return DispatchPlan(
+    plan = DispatchPlan(
         q_ids=q_ids, q_cnt=q_cnt, q_slots=q_slots,
         kv_ids=kv_ids, kv_cnt=kv_cnt, pair_live=pair_live,
         kv_row_ids=kv_row_ids, kv_row_cnt=kv_row_cnt,
@@ -579,6 +579,16 @@ def build_dispatch_plan(m_c: jax.Array, m_s: jax.Array, cfg, n_tokens: int,
         m_ch=m_ch, row_score=row_score, occ_hist=occ_hist,
         **bkt, **gmo, **shd,
     )
+    # Opt-in debug hook (EngineConfig.validate_plans / REPRO_VALIDATE_
+    # PLANS=1): structurally validate the freshly built plan on host.
+    # cfg/n_tokens are statics, so the callback closes over them; the
+    # checker tolerates any stacked lane/layer axes vmap may add.
+    from repro.analysis.plan_check import validation_enabled
+    if validation_enabled(cfg):
+        from repro.analysis.plan_check import hook_validate
+        jax.debug.callback(
+            lambda p: hook_validate(p, cfg, n_tokens), plan)
+    return plan
 
 
 def empty_plan_like(batch: int, heads: int, n_tokens: int, cfg) -> DispatchPlan:

@@ -1,0 +1,339 @@
+"""Engine invariant analyzer tests (ISSUE 9).
+
+Two sides of the acceptance criterion:
+
+* adversarial fixtures every pass MUST flag — an injected ``lax.sort``
+  in a dispatch-shaped fn, a hand-mutated plan violating fold-back
+  (counts past widths, out-of-range ids), a plan leaf ``widen()`` does
+  not cover, an ``id()``-keyed module cache, jit under a traced body;
+* green runs on the REAL engine: Dispatch purity for every registered
+  strategy × backend, the structural plan validator over real plans
+  (uniform + bucketed + mesh-partitioned), the serving-tick promotion
+  and executable-budget passes, and the source lint over ``src/``.
+
+Mesh-device-bound combos (CollectiveBudget, mesh DispatchPurity) run in
+the forced-8-device CI step via ``python -m repro.analysis``; here they
+skip gracefully on one device.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platforms", "cpu")
+
+from repro.analysis import AnalysisContext
+from repro.analysis.jaxpr_walk import (eqn_count, index_decode_eqns,
+                                       primitive_counts)
+from repro.analysis.passes import (_B, _DH, _DM, _H, _N, ExecutableBudget,
+                                   PromotionCheck, _engine_cfg, _params,
+                                   _trace_pair)
+from repro.analysis.plan_check import (PlanInvariantError, check_plan,
+                                       validate_plan)
+from repro.analysis.source_lint import lint_source, lint_sources
+from repro.core.engine import init_layer_state, update_layer
+from repro.core.strategy import available_strategies
+
+
+def _ctx():
+    return AnalysisContext(src_root="src")
+
+
+@pytest.fixture(scope="module")
+def real_plan():
+    """One concrete bucketed plan off the real Update path."""
+    cfg = _engine_cfg(kv_buckets=3)
+    x = jax.random.normal(jax.random.PRNGKey(0), (_B, _N, _DM)) * 0.3
+    st0 = init_layer_state(_B, _H, _N, _DM, _DH, cfg)
+    _, st = update_layer(_params(), x, st0, cfg, n_text=32, heads=_H,
+                         step_idx=2, num_steps=8)
+    return cfg, st.plan
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walker
+# ---------------------------------------------------------------------------
+
+def test_walker_recurses_into_nested_sub_jaxprs():
+    """A sort hidden under jit-inside-scan is invisible to jaxpr-TEXT
+    grep at the top level but must be found by the walker."""
+    @jax.jit
+    def hidden(x):
+        def body(c, row):
+            return c, jax.lax.sort(row)
+        _, ys = jax.lax.scan(body, 0, x)
+        return ys
+
+    jx = jax.make_jaxpr(hidden)(jnp.ones((4, 8)))
+    hits = index_decode_eqns(jx)
+    assert len(hits) == 1
+    path, eqn = hits[0]
+    assert eqn.primitive.name == "sort"
+    assert "scan" in path            # found inside the scan body
+    counts = primitive_counts(jx)
+    assert counts["sort"] == 1 and counts["scan"] == 1
+
+
+def test_walker_flags_uint8_unpack_signature():
+    """unpack_bits has no named primitive — the walker recognizes its
+    uint8 bit-shift signature instead."""
+    from repro.core.symbols import unpack_bits
+    jx = jax.make_jaxpr(lambda s: unpack_bits(s, 16))(
+        jnp.zeros((2, 2), jnp.uint8))
+    assert index_decode_eqns(jx), "uint8 unpack signature not detected"
+
+
+def test_eqn_count_modes():
+    def f(x):
+        def body(c, v):
+            return c + v, v * 2
+        return jax.lax.scan(body, 0.0, x)
+
+    jx = jax.make_jaxpr(f)(jnp.ones(8))
+    assert eqn_count(jx) == 1                      # the scan itself
+    assert eqn_count(jx, recursive=True) > 1       # plus its body
+
+
+# ---------------------------------------------------------------------------
+# adversarial fixtures (each MUST be flagged)
+# ---------------------------------------------------------------------------
+
+def test_injected_sort_in_dispatch_fn_is_flagged():
+    def dispatch_like(x, ids):
+        return jnp.take(x, jax.lax.sort(ids), axis=0)
+
+    jx = jax.make_jaxpr(dispatch_like)(jnp.ones((8, 4)),
+                                       jnp.arange(8, dtype=jnp.int32))
+    assert {e.primitive.name for _, e in index_decode_eqns(jx)} == {"sort"}
+
+
+def test_foldback_violating_plan_is_flagged(real_plan):
+    cfg, plan = real_plan
+    mutated = plan._replace(
+        bkt_kv_cnt=plan.bkt_kv_cnt + 7,                # counts > widths
+        kv_row_ids=jnp.full_like(plan.kv_row_ids, 2 ** 14))  # ids OOR
+    bad = check_plan(mutated, cfg, _N)
+    assert any("outside [0" in m for m in bad)
+    assert any("fold-back" in m for m in bad)
+    with pytest.raises(PlanInvariantError):
+        validate_plan(mutated, cfg, _N)
+
+
+def test_widen_uncovered_field_is_flagged(real_plan):
+    cfg, plan = real_plan
+    bad = check_plan(plan._replace(q_cnt=plan.q_cnt.astype(jnp.int16)),
+                     cfg, _N)
+    assert any("stayed int16" in m for m in bad)
+
+
+def test_occ_hist_mismatch_is_flagged(real_plan):
+    cfg, plan = real_plan
+    bad = check_plan(
+        plan._replace(occ_hist=plan.occ_hist.at[..., 0].add(1)), cfg, _N)
+    assert any("occ_hist" in m for m in bad)
+
+
+def test_id_keyed_cache_is_flagged():
+    src = ("_PLAN_CACHE = {}\n"
+           "def lookup(spec):\n"
+           "    key = id(spec)\n"
+           "    if key not in _PLAN_CACHE:\n"
+           "        _PLAN_CACHE[key] = spec\n"
+           "    return _PLAN_CACHE[key]\n")
+    rules = {r for _, _, r, _ in lint_source(src)}
+    assert "id-keyed-cache" in rules
+    assert "module-dict-cache" in rules   # unbounded dict cache too
+
+
+def test_transient_local_id_dict_is_not_flagged():
+    """schedule.strategy_table's pattern: id() keys into a TRANSIENT
+    local dict over pinned objects is legal — no cache involved."""
+    src = ("def table(specs):\n"
+           "    by_spec = {}\n"
+           "    for s in specs:\n"
+           "        by_spec[id(s)] = resolve(s)\n"
+           "    return by_spec\n")
+    assert lint_source(src) == []
+
+
+def test_jit_in_traced_body_is_flagged():
+    src = ("import jax\n"
+           "def outer(xs):\n"
+           "    def body(c, x):\n"
+           "        f = jax.jit(lambda v: v * 2)\n"
+           "        return c, f(x)\n"
+           "    return jax.lax.scan(body, 0, xs)\n")
+    assert {r for _, _, r, _ in lint_source(src)} == {"jit-in-traced-body"}
+
+
+# ---------------------------------------------------------------------------
+# green runs on the real engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("strategy", available_strategies())
+def test_dispatch_purity_per_strategy_backend(strategy, backend):
+    """Every registered strategy × backend: Dispatch jaxpr decode-free,
+    Update jaxpr the positive control (kv_buckets=3 exercises the
+    bucketed layouts on both backends)."""
+    cfg = _engine_cfg(strategy=strategy, backend=backend, kv_buckets=3,
+                      **(dict(interpret=True) if backend == "pallas"
+                         else {}))
+    upd, disp = _trace_pair(cfg)
+    hits = index_decode_eqns(disp)
+    assert not hits, (
+        f"{strategy}/{backend}: dispatch rebuilds indices: "
+        + ", ".join(e.primitive.name for _, e in hits))
+    assert index_decode_eqns(upd), \
+        f"{strategy}/{backend}: vacuous walker — no decode in Update"
+
+
+@pytest.mark.parametrize("strategy", available_strategies())
+def test_plan_validator_green_per_strategy(strategy):
+    """Real plans (bucketed, plus the mesh partition for the default
+    strategy) satisfy every structural invariant."""
+    cfg = _engine_cfg(strategy=strategy, kv_buckets=3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (_B, _N, _DM)) * 0.3
+    st0 = init_layer_state(_B, _H, _N, _DM, _DH, cfg)
+    _, st = update_layer(_params(), x, st0, cfg, n_text=32, heads=_H,
+                         step_idx=2, num_steps=8)
+    assert check_plan(st.plan, cfg, _N) == []
+
+
+def test_plan_validator_green_on_mesh_partition():
+    """The shd_* partition checks run on ONE device (partition_plan is
+    pure jnp at Update time)."""
+    cfg = _engine_cfg(kv_buckets=1, mesh_dp=1, mesh_sp=2)
+    x = jax.random.normal(jax.random.PRNGKey(2), (_B, _N, _DM)) * 0.3
+    st0 = init_layer_state(_B, _H, _N, _DM, _DH, cfg)
+    _, st = update_layer(_params(), x, st0, cfg, n_text=32, heads=_H,
+                         step_idx=2, num_steps=8)
+    assert st.plan.shd_q_ids is not None
+    assert check_plan(st.plan, cfg, _N) == []
+
+
+def test_plan_validator_tolerates_stacked_axes(real_plan):
+    """Layer/lane stacking adds leading axes; the checker folds them."""
+    cfg, plan = real_plan
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (2, *a.shape)), plan)
+    assert check_plan(stacked, cfg, _N) == []
+
+
+def test_promotion_and_budget_passes_green():
+    ctx = _ctx()
+    assert PromotionCheck().run(ctx) == []
+    assert ExecutableBudget().run(ctx) == []
+
+
+def test_source_lint_green_on_repo():
+    assert lint_sources("src") == []
+
+
+def test_sweep_configs_covers_full_matrix():
+    """The analyzer's sweep enumerates every registered strategy ×
+    backend × kv_buckets ∈ {1,3} × {single, mesh} combo (mesh combos
+    carry a skip note on hosts without 2 devices rather than vanishing
+    silently)."""
+    from repro.analysis.passes import sweep_configs
+    combos = list(sweep_configs())
+    strategies = set(available_strategies())
+    assert len(combos) == len(strategies) * 2 * 2 * 2
+    live = [(label, cfg) for label, cfg, skip in combos if skip is None]
+    assert {c.strategy for _, c in live} == strategies
+    assert {c.backend for _, c in live} == {"xla", "pallas"}
+    assert {c.kv_buckets for _, c in live} == {1, 3}
+    # skipped combos (mesh on a small host) must say so, never vanish
+    for label, cfg, skip in combos:
+        if skip is not None:
+            assert cfg is None and "mesh" in label and "devices" in skip
+    # the single-device half of the grid always runs
+    assert len(live) >= len(strategies) * 2 * 2
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: PR 7/8 field coverage regression (widen + specs + rebuild)
+# ---------------------------------------------------------------------------
+
+def test_pr78_fields_covered_by_widen_and_specs():
+    """Every gmo_*/shd_*/occ_hist field from PRs 7–8 is wired through
+    widen() (id fields), engine_state_specs, and the build path — the
+    static lint finds zero coverage gaps, and the live widen() of a real
+    plan leaves no int16 leaf."""
+    import ast
+    from pathlib import Path
+
+    from repro.analysis.source_lint import is_id_field, plan_fields
+    tree = ast.parse(Path("src/repro/core/plan.py").read_text())
+    fields = plan_fields(tree)
+    pr78 = [f for f in fields
+            if f.startswith(("gmo_", "shd_")) or f == "occ_hist"]
+    assert len(pr78) >= 16          # 4 gmo + 11 shd + occ_hist
+    hits = [h for h in lint_sources("src") if h[2].startswith("plan-")]
+    assert hits == []
+    # and the id-field convention actually captures the PR 7/8 id lists
+    assert {f for f in pr78 if is_id_field(f)} >= {
+        "gmo_rows", "gmo_src", "gmo_head_ids", "shd_q_ids", "shd_q_src",
+        "shd_q_slots", "shd_kv_ids", "shd_kv_row_ids", "shd_gather_idx",
+        "shd_send_ids"}
+
+
+def test_widen_roundtrip_complete_on_real_plans(real_plan):
+    cfg, plan = real_plan
+    wide = plan.widen()
+    for name, leaf in zip(wide._fields, wide):
+        if leaf is not None and hasattr(leaf, "dtype"):
+            assert leaf.dtype != jnp.int16, f"{name} stayed int16"
+    # idempotent
+    again = wide.widen()
+    for a, b in zip(jax.tree.leaves(wide), jax.tree.leaves(again)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# live validation hook
+# ---------------------------------------------------------------------------
+
+def test_validate_plans_hook_fires_and_passes(monkeypatch):
+    """EngineConfig.validate_plans=True routes every plan build through
+    the host-side checker (and real plans pass it)."""
+    from repro.analysis import plan_check
+    calls = []
+    real = plan_check.hook_validate
+    monkeypatch.setattr(plan_check, "hook_validate",
+                        lambda p, cfg, n: calls.append(1) or real(p, cfg, n))
+    cfg = dataclasses.replace(_engine_cfg(kv_buckets=3),
+                              validate_plans=True)
+    x = jax.random.normal(jax.random.PRNGKey(5), (_B, _N, _DM)) * 0.3
+    st0 = init_layer_state(_B, _H, _N, _DM, _DH, cfg)
+    _, st = update_layer(_params(), x, st0, cfg, n_text=32, heads=_H,
+                         step_idx=2, num_steps=8)
+    jax.block_until_ready(st.plan.q_cnt)
+    assert calls, "validate_plans=True did not reach the host checker"
+
+
+def test_validate_plans_env_gate(monkeypatch):
+    from repro.analysis.plan_check import validation_enabled
+    cfg = _engine_cfg()
+    monkeypatch.delenv("REPRO_VALIDATE_PLANS", raising=False)
+    assert not validation_enabled(cfg)
+    monkeypatch.setenv("REPRO_VALIDATE_PLANS", "1")
+    assert validation_enabled(cfg)
+    monkeypatch.setenv("REPRO_VALIDATE_PLANS", "0")
+    assert not validation_enabled(cfg)
+    assert validation_enabled(dataclasses.replace(cfg,
+                                                  validate_plans=True))
+
+
+def test_collective_budget_green_or_noted_skip():
+    """Zero findings either way: on a single-device host the pass
+    records a skip note instead of silently vanishing; with >= 2
+    devices (CI's forced-8-device step) it verifies the a2a budget."""
+    from repro.analysis.passes import CollectiveBudget, mesh_capacity
+    ctx = _ctx()
+    assert CollectiveBudget().run(ctx) == []
+    if mesh_capacity() < 2:
+        assert ctx.notes, "1-device skip must leave a note"

@@ -263,21 +263,28 @@ def test_update_refreshes_plan():
 def test_dispatch_jaxpr_has_no_index_decode(backend):
     """Acceptance criterion: a Dispatch step given a DispatchPlan performs
     no ``unpack_bits``/``clamp_mask_topk``/``active_indices`` work — its
-    jaxpr contains no sort/top-k primitives (they all live in Update)."""
+    jaxpr contains no sort/top-k/uint8-unpack equations ANYWHERE,
+    including inside pjit/scan sub-jaxprs (the analyzer's primitive-level
+    walker, not the old jaxpr-text grep)."""
+    from repro.analysis.jaxpr_walk import index_decode_eqns
     kw = dict(interpret=True) if backend == "pallas" else {}
     cfg, p, x, state, H = _engine_setup("bias", backend, tau_kv=0.15,
                                         capq=0.75, capkv=0.9, batch=1)
     cfg = dataclasses.replace(cfg, **kw)
     _, st = update_layer(p, x, state, cfg, n_text=64, heads=H)
 
-    disp = str(jax.make_jaxpr(
+    disp = jax.make_jaxpr(
         lambda xx, ss: dispatch_layer(p, xx, ss, cfg, n_text=64, heads=H)
-    )(x, st))
-    for prim in (" sort", "top_k"):
-        assert prim not in disp, f"dispatch jaxpr rebuilds indices ({prim})"
+    )(x, st)
+    hits = index_decode_eqns(disp)
+    assert not hits, (
+        "dispatch jaxpr rebuilds indices: "
+        + ", ".join(f"{e.primitive.name} at {'/'.join(pth) or '<top>'}"
+                    for pth, e in hits))
 
     # Control: the Update step is where the index decode now lives.
-    upd = str(jax.make_jaxpr(
+    upd = jax.make_jaxpr(
         lambda xx, ss: update_layer(p, xx, ss, cfg, n_text=64, heads=H)
-    )(x, st))
-    assert " sort" in upd and "top_k" in upd
+    )(x, st)
+    upd_prims = {e.primitive.name for _, e in index_decode_eqns(upd)}
+    assert "sort" in upd_prims and "top_k" in upd_prims
