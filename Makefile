@@ -27,12 +27,18 @@
 #                          way CI does
 #   make analyze           engine invariant analyzer (src/repro/analysis):
 #                          jaxpr passes (dispatch purity, collective budget,
-#                          dtype promotion, executable budget), the
-#                          DispatchPlan structural validator over every
-#                          strategy × backend × kv_buckets × mesh combo,
-#                          and the repo-rule AST lint; exits non-zero on
-#                          any finding (the CLI forces an 8-device host
-#                          platform so mesh combos always run)
+#                          dtype promotion, executable budget), the four
+#                          static cost certifiers (dispatch cost affine in
+#                          T_kv + slot-proportional, a2a bytes == the
+#                          pair_cap formula, Update amortization, peak-byte
+#                          budgets — all on analysis/cost_model, abstract
+#                          traces only, zero FLOPs, well under the 2-minute
+#                          CI budget), the DispatchPlan structural validator
+#                          over every strategy × backend × kv_buckets × mesh
+#                          combo, and the repo-rule AST lint; exits non-zero
+#                          on any finding (the CLI forces an 8-device host
+#                          platform so mesh combos always run); filter with
+#                          `python -m repro.analysis --passes 'cost-*'`
 
 PY ?= python
 

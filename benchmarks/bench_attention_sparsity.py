@@ -36,7 +36,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import flops_of, time_fn
+from benchmarks.common import (check_flops_agreement, flops_of,
+                               static_flops_of, time_fn)
 from benchmarks.roofline import HBM_BW, PEAK_FLOPS
 from repro.core.attention import (SparseAttentionSpec, attention_plan_indices,
                                   dense_attention, sparse_attention_from_plan,
@@ -128,6 +129,11 @@ def run(csv: list, *, n=2048, d=64, bh=4, block=64, smoke=False):
     dense = jax.jit(lambda q, k, v: dense_attention(q, k, v))
     t_dense = time_fn(dense, q, k, v)
     f_dense = flops_of(lambda q, k, v: dense_attention(q, k, v), q, k, v)
+    # Independent second opinion on the roofline numerator (ISSUE 10):
+    # the static cost model must agree with XLA's cost_analysis.
+    sf_dense = check_flops_agreement(
+        "fig6_attention_dense_baseline", f_dense,
+        static_flops_of(lambda q, k, v: dense_attention(q, k, v), q, k, v))
 
     for mode in ["FC", "BSS", "both"]:
         for s_target in ([0.5] if smoke else [0.2, 0.5, 0.8]):
@@ -158,6 +164,12 @@ def run(csv: list, *, n=2048, d=64, bh=4, block=64, smoke=False):
                              kv_ids, kv_cnt, pair_live)
             f_sparse = flops_of(lambda q, k, v, mc, ms, orr: sparse_attention_xla(
                 q, k, v, mc, ms, orr, spec), q, k, v, m_c, m_s, o_reuse)
+            sf_sparse = check_flops_agreement(
+                f"fig6_attention_{mode}_s{s_target}", f_sparse,
+                static_flops_of(
+                    lambda q, k, v, mc, ms, orr: sparse_attention_xla(
+                        q, k, v, mc, ms, orr, spec),
+                    q, k, v, m_c, m_s, o_reuse))
             # realized sparsity = fraction of (i, j) tile pairs skipped
             pairs_live = float((m_s & m_c[..., None]).sum()) / (bh * t * t)
             s_real = 1.0 - pairs_live
@@ -186,6 +198,7 @@ def run(csv: list, *, n=2048, d=64, bh=4, block=64, smoke=False):
                             f" grid_slots_uniform={slots_uniform}"
                             f" grid_slots_bucketed={slots_bucketed}"
                             f" frac_peak={f_sparse / t_sparse / PEAK_FLOPS:.2e}"
+                            f" static_flops={sf_sparse:.6g}"
                             f" theory={1 / (1 - s_real):.2f}"),
             })
             csv.append({
@@ -200,5 +213,6 @@ def run(csv: list, *, n=2048, d=64, bh=4, block=64, smoke=False):
     csv.append({"name": "fig6_attention_dense_baseline",
                 "us_per_call": t_dense * 1e6,
                 "derived": (f"flops={f_dense:.3g}"
+                            f" static_flops={sf_dense:.6g}"
                             f" frac_peak={f_dense / t_dense / PEAK_FLOPS:.2e}")})
     _bucketed_bimodal(csv)

@@ -31,7 +31,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import flops_of, time_fn
+from benchmarks.common import (check_flops_agreement, flops_of,
+                               static_flops_of, time_fn)
 from benchmarks.roofline import HBM_BW, PEAK_FLOPS
 from repro.core.plan import bucket_geometry, bucket_grid_slots
 from repro.core.sparse_gemm import (gemm_o_from_plan, gemm_o_sparse,
@@ -122,9 +123,14 @@ def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128, smoke=False):
     for s in [0.25, 0.5, 0.75]:
         keep = max(1, round(t * (1 - s)))
         mask = jnp.zeros((1, t), bool).at[:, :keep].set(True)
-        fn = jax.jit(lambda x, w, m: gemm_q_sparse(x, w, m, block=block, cap=keep))
+        gq = lambda x, w, m: gemm_q_sparse(x, w, m, block=block, cap=keep)
+        fn = jax.jit(gq)
         t_s = time_fn(fn, x, w, mask)
         s_real = 1 - keep / t
+        # Static-vs-XLA cross-check on the roofline row (ISSUE 10).
+        sf = check_flops_agreement(
+            f"fig6_gemm_q_s{s}", flops_of(gq, x, w, mask),
+            static_flops_of(gq, x, w, mask))
         # Live-work roofline: the kernel grid launches exactly ``keep``
         # row-block slots (row_cnt guard skips padding on the MXU).
         f_live = 2.0 * keep * block * d * f
@@ -135,6 +141,7 @@ def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128, smoke=False):
                                 f" grid_slots={keep}"
                                 f" frac_peak={f_live / t_s / PEAK_FLOPS:.2e}"
                                 f" frac_hbm={b_live / t_s / HBM_BW:.2e}"
+                                f" static_flops={sf:.6g}"
                                 f" theory={1 / max(1 - s_real, 1e-9):.2f}")})
         # Plan-level row: live-row indices precomputed once (Update time).
         ids, cnt = jax.jit(lambda m: active_indices(m, keep))(mask)
@@ -167,10 +174,14 @@ def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128, smoke=False):
     for s in [0.25, 0.5, 0.75]:
         keep_rows = max(1, round(t * (1 - s)))
         m_ch = jnp.zeros((1, t, h), bool).at[:, :keep_rows, :].set(True)
-        fn = jax.jit(lambda o, w, m, b: gemm_o_sparse(o, w, m, b, block=block,
-                                                      cap=keep_rows))
+        go = lambda o, w, m, b: gemm_o_sparse(o, w, m, b, block=block,
+                                              cap=keep_rows)
+        fn = jax.jit(go)
         t_s = time_fn(fn, oh, wh, m_ch, bias)
         s_real = 1 - keep_rows / t
+        sf = check_flops_agreement(
+            f"fig6_gemm_o_s{s}", flops_of(go, oh, wh, m_ch, bias),
+            static_flops_of(go, oh, wh, m_ch, bias))
         # Grid-slot accounting (ISSUE 8): uniform GEMM-O pays Cr·Hc
         # reduction slots; the bucketed layout's static total at B = 3.
         slots_uniform = keep_rows * h
@@ -185,6 +196,7 @@ def run(csv: list, *, n=4096, d=1024, f=1024, h=8, block=128, smoke=False):
                                 f" grid_slots_bucketed={slots_bucketed}"
                                 f" frac_peak={f_live / t_s / PEAK_FLOPS:.2e}"
                                 f" frac_hbm={b_live / t_s / HBM_BW:.2e}"
+                                f" static_flops={sf:.6g}"
                                 f" theory={1 / max(1 - s_real, 1e-9):.2f}")})
         # Plan-level row: row/head lists precomputed once (Update time).
         ids, cnt = jax.jit(lambda m: active_indices(

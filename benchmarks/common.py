@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["time_fn", "psnr", "flops_of", "GEMM_O_THEORY"]
+__all__ = ["time_fn", "psnr", "flops_of", "static_flops_of",
+           "check_flops_agreement", "GEMM_O_THEORY"]
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
@@ -41,6 +42,40 @@ def flops_of(fn, *args) -> float:
     if isinstance(c, (list, tuple)):   # older jax: one dict per device
         c = c[0] if c else {}
     return float(c.get("flops", 0.0))
+
+
+def static_flops_of(fn, *args) -> float:
+    """FLOPs of ``fn`` from the STATIC cost model — no compilation.
+
+    Counts the traced jaxpr with
+    :func:`repro.analysis.cost_model.cost_of_jaxpr` (the interpreter the
+    invariant analyzer certifies), giving an XLA-independent second
+    opinion on :func:`flops_of` for the roofline rows.
+    """
+    from repro.analysis.cost_model import cost_of_jaxpr
+    return float(cost_of_jaxpr(jax.make_jaxpr(fn)(*args)).flops)
+
+
+def check_flops_agreement(name: str, measured: float, static: float,
+                          rtol: float = 0.15) -> float:
+    """Assert the XLA ``cost_analysis()`` FLOPs and the static model agree.
+
+    Returns the static count so callers can record it in a derived row.
+    XLA occasionally folds a handful of scalar ops the model counts (and
+    vice versa for fused masking), so the tolerance is loose-ish; a real
+    drift — a missing primitive handler or an op XLA started billing —
+    lands far outside 15%.
+    """
+    if measured <= 0 or static <= 0:
+        raise AssertionError(
+            f"{name}: non-positive flops (measured={measured}, "
+            f"static={static}) — one of the counters went vacuous")
+    rel = abs(measured - static) / measured
+    if rel > rtol:
+        raise AssertionError(
+            f"{name}: static cost model ({static:.3e}) disagrees with "
+            f"XLA cost_analysis ({measured:.3e}) by {rel:.1%} (> {rtol:.0%})")
+    return static
 
 
 def GEMM_O_THEORY(n_interval: int, s: float) -> float:

@@ -13,6 +13,17 @@ it from the Actions run page) and a guard step fails the build if a
 ``bench-*.json`` ever lands in the tree — keep local copies out of
 commits (``.gitignore`` covers the default names).
 
+``--compare OLD.json NEW.json`` starts the persistent perf trajectory:
+it diffs two ``--json`` artifacts row by row, prints a per-row delta
+report (wall-clock deltas are informational — CI runners are noisy) and
+exits non-zero if a GATED derived key regresses: ``grid_slots*`` may
+never increase, ``grid_slot_cut`` never decrease, and
+``bit_identical_to_uniform`` never flip 1 → 0.  A gated row that
+disappears from the new run also fails (a silently vanished row would
+make the gate vacuous).  CI downloads the previous run's
+``bench-smoke`` artifact and compares (first run passes trivially —
+there is nothing to compare against yet).
+
 Not a suite here (it writes a tracked table, not CSV rows):
 ``benchmarks/autotune.py --measure`` calibrates the kernel-tuning
 table (``src/repro/kernels/default_calibration.json`` — per-strategy
@@ -61,6 +72,83 @@ SMOKE_SUITES = ("issue1 dispatch-plan amortization",
                 "fig6/fig11 sparse GEMMs",
                 "fig6/fig10 attention")
 
+# Derived keys gated by ``--compare``: deterministic structural metrics
+# (machine-independent, unlike wall-clock).  "max" keys may not increase
+# vs the old run, "min" keys may not decrease, beyond the rel tolerance.
+COMPARE_GATES = {
+    "grid_slots": ("max", 0.0),
+    "grid_slots_uniform": ("max", 0.0),
+    "grid_slots_bucketed": ("max", 0.0),
+    "grid_slot_cut": ("min", 0.02),
+    "bit_identical_to_uniform": ("min", 0.0),
+}
+
+
+def _parse_derived(derived: str) -> dict:
+    """'a=1 b=2.5e3 c=foo' -> {'a': 1.0, 'b': 2500.0, 'c': 'foo'}."""
+    out: dict = {}
+    for part in derived.split():
+        key, sep, val = part.partition("=")
+        if not sep:
+            continue
+        try:
+            out[key] = float(val)
+        except ValueError:
+            out[key] = val
+    return out
+
+
+def compare_runs(old_doc: dict, new_doc: dict) -> tuple[list, list]:
+    """Row-by-row diff of two ``--json`` documents.
+
+    Returns ``(report_lines, regressions)`` — regressions are the gated
+    failures (see :data:`COMPARE_GATES`); wall-clock deltas are reported
+    but never gate.
+    """
+    old_rows = {r["name"]: r for r in old_doc.get("rows", [])}
+    new_rows = {r["name"]: r for r in new_doc.get("rows", [])}
+    report, regressions = [], []
+    for name, old in old_rows.items():
+        old_d = _parse_derived(old.get("derived", ""))
+        gated = sorted(k for k in old_d if k in COMPARE_GATES)
+        new = new_rows.get(name)
+        if new is None:
+            line = f"{name}: MISSING from new run"
+            report.append(line)
+            if gated:
+                regressions.append(f"{line} (gated keys {gated})")
+            continue
+        new_d = _parse_derived(new.get("derived", ""))
+        dt = new["us_per_call"] - old["us_per_call"]
+        rel = dt / old["us_per_call"] if old["us_per_call"] else 0.0
+        deltas = [f"us {old['us_per_call']:.1f} -> "
+                  f"{new['us_per_call']:.1f} ({rel:+.1%})"]
+        for key in gated:
+            direction, tol = COMPARE_GATES[key]
+            o, n = old_d[key], new_d.get(key)
+            if n is None:
+                regressions.append(f"{name}: gated key {key} vanished")
+                deltas.append(f"{key} {o:g} -> MISSING")
+                continue
+            bad = (n > o * (1 + tol) if direction == "max"
+                   else n < o * (1 - tol))
+            deltas.append(f"{key} {o:g} -> {n:g}"
+                          + (" REGRESSED" if bad else ""))
+            if bad:
+                regressions.append(
+                    f"{name}: {key} {o:g} -> {n:g} "
+                    f"({'increase' if direction == 'max' else 'decrease'} "
+                    f"beyond {tol:.0%})")
+        for key in sorted(set(old_d) & set(new_d) - set(gated)):
+            o, n = old_d[key], new_d[key]
+            if isinstance(o, float) and isinstance(n, float) and o \
+                    and abs(n - o) / abs(o) > 0.25:
+                deltas.append(f"{key} {o:g} -> {n:g}")
+        report.append(f"{name}: " + "; ".join(deltas))
+    for name in sorted(set(new_rows) - set(old_rows)):
+        report.append(f"{name}: NEW row")
+    return report, regressions
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -70,7 +158,30 @@ def main(argv=None) -> None:
                     help="substring filter on suite labels")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + suite timings as JSON")
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"),
+                    default=None,
+                    help="diff two --json artifacts; exit 1 if a gated "
+                         "derived key regressed")
     args = ap.parse_args(argv)
+
+    if args.compare:
+        old_path, new_path = args.compare
+        with open(old_path) as f:
+            old_doc = json.load(f)
+        with open(new_path) as f:
+            new_doc = json.load(f)
+        report, regressions = compare_runs(old_doc, new_doc)
+        for line in report:
+            print(f"  {line}")
+        if regressions:
+            print(f"\nbench compare: {len(regressions)} gated "
+                  f"regression(s):", file=sys.stderr)
+            for r in regressions:
+                print(f"  {r}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"bench compare OK: {len(report)} row(s), no gated "
+              f"regressions")
+        return
 
     suites = _suites()
     if args.smoke:

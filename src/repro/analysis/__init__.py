@@ -1,6 +1,6 @@
-"""Engine invariant analyzer (ISSUE 9 tentpole).
+"""Engine invariant analyzer (ISSUE 9 tentpole + ISSUE 10 cost passes).
 
-Three pass families behind one :class:`AnalysisPass` protocol and one
+Four pass families behind one :class:`AnalysisPass` protocol and one
 entry point, :func:`run_analysis` (CLI: ``python -m repro.analysis`` /
 ``make analyze``):
 
@@ -8,11 +8,22 @@ entry point, :func:`run_analysis` (CLI: ``python -m repro.analysis`` /
    entry points abstractly and walk the equation graphs with
    :mod:`repro.analysis.jaxpr_walk`: ``dispatch-purity``,
    ``collective-budget``, ``promotion-check``, ``executable-budget``.
-2. **Plan validator** (:mod:`repro.analysis.plan_check`) — structural
+2. **Cost passes** (:mod:`repro.analysis.cost_passes`, on top of the
+   symbolic interpreter in :mod:`repro.analysis.cost_model`) — certify
+   the engine's COST model statically: ``cost-dispatch-scaling``
+   (dispatch FLOPs/bytes affine in ``T_kv`` at fixed plan capacity and
+   proportional to live plan slots, per backend × kv_buckets × mesh
+   group, bit-identical across strategies), ``cost-collective-bytes``
+   (mesh seq-mode a2a payload ≡ the ``pair_cap`` formula, never
+   ``O(T_kv)``), ``cost-update-amortization`` (Update ≤ κ× one dense
+   step, interval-amortized engine ≤ θ× dense), and
+   ``cost-memory-footprint`` (peak live bytes per executable within the
+   declared budget table; lane-tick peak affine in lane count).
+3. **Plan validator** (:mod:`repro.analysis.plan_check`) — structural
    checks over any concrete :class:`~repro.core.plan.DispatchPlan`;
    also the live opt-in hook behind ``EngineConfig.validate_plans`` /
    ``REPRO_VALIDATE_PLANS=1``.
-3. **Source lint** (:mod:`repro.analysis.source_lint`) — repo-rule AST
+4. **Source lint** (:mod:`repro.analysis.source_lint`) — repo-rule AST
    checks over ``src/`` (plan-field coverage, unbounded caches,
    ``id()``-keyed caches, jit-under-trace).
 
@@ -24,6 +35,57 @@ skipped mesh combo on a 1-device host), then append it to
 :data:`ALL_PASSES`.  Passes must trace abstractly (``jax.eval_shape`` /
 ``jax.make_jaxpr`` on ``ShapeDtypeStruct`` operands) — ``run_analysis``
 is a CI gate and must not burn compile time or FLOPs.
+
+The static cost model
+---------------------
+:func:`repro.analysis.cost_model.cost_of_jaxpr` folds a per-primitive
+cost table over a jaxpr and returns a
+:class:`~repro.analysis.cost_model.CostEstimate` (FLOPs, HBM bytes,
+collective payload/wire bytes by kind); ``peak_bytes_of`` estimates the
+peak live-buffer footprint via a last-use liveness scan.  The primitive
+table, in brief:
+
+===========================  ================================================
+primitive family             cost rule
+===========================  ================================================
+``dot_general``              FLOPs = 2 · out_elems · K (lhs contracting
+                             dims); bytes = operands + result
+``conv_general_dilated``     FLOPs = 2 · out_elems · (window · C_in);
+                             bytes = operands + result
+``gather`` / ``*_take``      FLOPs = out_elems; bytes = 2·result + indices
+                             (NOT the operand — a plan gather must never
+                             bill the full KV it indexes into)
+``scatter*``                 FLOPs = updates; bytes = 2·updates + indices
+``dynamic_(update_)slice``   bytes = slice in + out (never the operand)
+``sort``                     FLOPs = n·log2(n) per sorted lane
+``reduce_*`` / elementwise   FLOPs = in/out elems; bytes = in + out
+layout/dtype moves           0 FLOPs, in + out bytes (``reshape``,
+                             ``transpose``, ``convert_element_type``, …)
+``all_to_all``               payload = result bytes; wire = payload·(P−1)/P
+``all_gather``               payload = result bytes (= shard · axis_size);
+                             wire = payload·(P−1)/P
+``psum`` (all-reduce)        payload = result; wire = 2·payload·(P−1)/P
+``reduce_scatter``           payload = result·P; wire = payload·(P−1)
+``scan``                     body cost × trip count (``length``)
+``while``                    body × 1 trip, marks the estimate ``inexact``
+``cond`` / ``switch``        per-resource max over branches
+``shard_map`` / ``pjit``     recurse; mesh axis sizes join the env
+``pallas_call``              kernel body cost × grid size
+===========================  ================================================
+
+Adding a primitive cost
+-----------------------
+When a new primitive shows up in an engine trace the interpreter falls
+back to ``out_elems`` FLOPs + full I/O bytes and keeps going — sound but
+crude.  To model it properly call
+``repro.analysis.cost_model.register_primitive_cost(name, handler)``
+where ``handler(eqn, env) -> CostEstimate`` reads shapes from
+``eqn.invars[i].aval`` / ``eqn.outvars[i].aval`` and mesh axis sizes
+from ``env.axis_sizes``; pure layout moves belong in
+``cost_model.LAYOUT_PRIMS`` instead.  Add a shape-parameterized unit
+test next to ``tests/test_analysis.py::test_cost_model_*`` and, if the
+primitive can carry ``T_kv``-sized work, an adversarial fixture so the
+dispatch-scaling pass provably catches misuse.
 
 Wiring a new DispatchPlan field
 -------------------------------
@@ -134,8 +196,16 @@ def _jaxpr_passes():
     return [cls() for cls in JAXPR_PASSES]
 
 
+def _cost_passes():
+    from repro.analysis.cost_passes import COST_PASSES
+    return [cls() for cls in COST_PASSES]
+
+
 def ALL_PASSES() -> list:
-    return _jaxpr_passes() + [PlanValidator(), SourceLint()]
+    # Jaxpr passes run first so their traces warm the (cfg, n) memo the
+    # cost passes re-walk.
+    return _jaxpr_passes() + _cost_passes() + [PlanValidator(),
+                                               SourceLint()]
 
 
 def run_analysis(passes: Optional[list] = None,

@@ -13,6 +13,20 @@ itself (each fixture MUST produce findings, i.e. exit non-zero):
                         (survives as int16)
 * ``id-cache``        — a module caching by ``id(obj)`` into an
                         unbounded module-level dict
+
+Cost-pass fixtures (ISSUE 10):
+
+* ``dense-einsum-dispatch``   — a dispatch body hiding a dense
+                                ``T_kv``-wide einsum (cost super-linear
+                                in T_kv at fixed plan capacity)
+* ``mesh-allgather``          — a mesh body smuggling an ``all_gather``
+                                of the FULL KV instead of the pair_cap
+                                all-to-all
+* ``rebuild-every-dispatch``  — an engine paying Update's plan build on
+                                every dispatch step (amortization ≥ 1×
+                                dense)
+* ``memory-hog``              — an executable whose peak live buffers
+                                blow the declared byte budget
 """
 
 # Mesh passes need multiple devices; force an 8-device host platform
@@ -67,6 +81,86 @@ def _fixture_findings(name: str):
         return [Finding("plan-validator", "plan-invariant",
                         f"fixture[{name}]", msg)
                 for msg in check_plan(plan, cfg, _N)]
+    if name == "dense-einsum-dispatch":
+        from repro.analysis.cost_model import cost_of_jaxpr
+        from repro.analysis.cost_passes import (KAPPA_TOKEN,
+                                                KAPPA_TOKEN_BYTES,
+                                                _token_reference_slope,
+                                                token_scaling_findings)
+        cap = 32                       # fixed live plan slots
+
+        def dispatch_like(x, k):
+            # legit plan-capacity work: gather `cap` rows…
+            live = jnp.take(x, jnp.arange(cap), axis=0)
+            # …plus a smuggled dense T_kv × T_kv score matrix.
+            scores = jnp.einsum("nd,md->nm", x, k)
+            return live.sum() + scores.sum()
+
+        ns = (128, 256, 384)
+        costs = [cost_of_jaxpr(jax.make_jaxpr(dispatch_like)(
+            jax.ShapeDtypeStruct((n, 16), jnp.float32),
+            jax.ShapeDtypeStruct((n, 16), jnp.float32))) for n in ns]
+        ref_f, ref_b = _token_reference_slope()
+        return token_scaling_findings(
+            "cost-dispatch-scaling", "fixture[dense-einsum-dispatch]",
+            costs, ns, budget_flops=KAPPA_TOKEN * ref_f,
+            budget_bytes=KAPPA_TOKEN_BYTES * ref_b)
+    if name == "mesh-allgather":
+        import numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh
+        from jax.sharding import PartitionSpec as P
+
+        from repro.analysis.cost_model import cost_of_jaxpr
+        from repro.analysis.cost_passes import (_matched,
+                                                collective_findings,
+                                                expected_a2a_payload)
+        from repro.analysis.passes import _B, _DH, _H, _engine_cfg
+        if len(jax.devices()) < 2:
+            raise SystemExit("mesh-allgather fixture needs >= 2 devices")
+        n = 256
+        cfg = _matched(_engine_cfg(backend="xla", mesh_dp=1, mesh_sp=2),
+                       2, 2, n)
+        mesh = Mesh(np.array(jax.devices()[:2]), ("sp",))
+
+        def body(k, v):
+            # ships the FULL KV instead of the plan-live pair_cap blocks
+            return (jax.lax.all_gather(k, "sp", axis=0, tiled=True),
+                    jax.lax.all_gather(v, "sp", axis=0, tiled=True))
+
+        kv = jax.ShapeDtypeStruct((_B * _H * n, _DH), jnp.float32)
+        jx = jax.make_jaxpr(shard_map(body, mesh=mesh,
+                                      in_specs=(P("sp"), P("sp")),
+                                      out_specs=(P(), P()),
+                                      check_rep=False))(kv, kv)
+        dense_payload = 2.0 * (_B * _H * n * _DH) * 4
+        return collective_findings(
+            "cost-collective-bytes", "fixture[mesh-allgather]",
+            cost_of_jaxpr(jx), expected_a2a_payload(cfg, n), dense_payload)
+    if name == "rebuild-every-dispatch":
+        from repro.analysis.cost_passes import (_dense_reference_cost,
+                                                _matched, _update_cost,
+                                                amortization_findings)
+        from repro.analysis.passes import _N, _engine_cfg
+        cfg = _matched(_engine_cfg(backend="xla", kv_buckets=1), 2, 2, _N)
+        u = _update_cost(cfg, _N)
+        # dispatch cost := update cost — the plan is rebuilt every step
+        return amortization_findings(
+            "cost-update-amortization", "fixture[rebuild-every-dispatch]",
+            u, u, _dense_reference_cost(_N), cfg.mask.interval)
+    if name == "memory-hog":
+        from repro.analysis.cost_model import peak_bytes_of
+        from repro.analysis.cost_passes import (PEAK_BUDGETS,
+                                                footprint_findings)
+
+        def hog(x):
+            big = jnp.zeros((512, 512), jnp.float32)   # 1 MB scratch
+            return (x[:, None] * big).sum() + x.sum()
+
+        jx = jax.make_jaxpr(hog)(jax.ShapeDtypeStruct((512,), jnp.float32))
+        return footprint_findings(
+            "cost-memory-footprint", "fixture[memory-hog]",
+            peak_bytes_of(jx), PEAK_BUDGETS["dispatch_layer"])
     if name == "id-cache":
         from repro.analysis.source_lint import lint_source
         src = (
@@ -86,7 +180,8 @@ def main(argv=None) -> int:
         prog="python -m repro.analysis",
         description="FlashOmni engine invariant analyzer")
     ap.add_argument("--passes", default=None,
-                    help="comma-separated pass names (default: all)")
+                    help="comma-separated pass names or fnmatch globs, "
+                         "e.g. 'cost-*' (default: all)")
     ap.add_argument("--fixture", default=None,
                     help="run against an adversarial fixture instead of "
                          "the repo (expected to FAIL)")
@@ -104,13 +199,16 @@ def main(argv=None) -> int:
     from repro.analysis import ALL_PASSES, run_analysis
     passes = ALL_PASSES()
     if args.passes:
-        want = {p.strip() for p in args.passes.split(",")}
+        import fnmatch
+        pats = [p.strip() for p in args.passes.split(",") if p.strip()]
         known = {p.name for p in passes}
-        bad = want - known
+        bad = [pat for pat in pats
+               if not any(fnmatch.fnmatch(n, pat) for n in known)]
         if bad:
-            raise SystemExit(f"unknown pass(es) {sorted(bad)}; "
+            raise SystemExit(f"pattern(s) {sorted(bad)} match no pass; "
                              f"known: {sorted(known)}")
-        passes = [p for p in passes if p.name in want]
+        passes = [p for p in passes
+                  if any(fnmatch.fnmatch(p.name, pat) for pat in pats)]
     findings = run_analysis(passes=passes, src_root=args.src,
                             verbose=not args.quiet)
     print(f"invariant analysis: {len(findings)} finding(s) across "

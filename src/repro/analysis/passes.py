@@ -41,9 +41,10 @@ import jax.numpy as jnp
 
 from repro.analysis.jaxpr_walk import (collective_counts, index_decode_eqns,
                                        primitive_counts)
+from repro.core.lru import LruCache
 
 __all__ = ["DispatchPurity", "CollectiveBudget", "PromotionCheck",
-           "ExecutableBudget", "JAXPR_PASSES"]
+           "ExecutableBudget", "JAXPR_PASSES", "trace_pair"]
 
 
 # Small, fast-to-trace engine geometry shared by the jaxpr sweeps.
@@ -98,23 +99,47 @@ def sweep_configs(kv_buckets=(1, 3), meshes=(False, True)):
         yield label, _engine_cfg(**kw), None
 
 
-def _trace_pair(cfg):
-    """(update_jaxpr, dispatch_jaxpr) for ``cfg`` — abstract, no FLOPs."""
+# Engine traces are pure functions of (cfg, n) at the fixed analyzer
+# geometry, and both pass families sweep the same grid — memoize so the
+# cost passes re-walk the jaxprs the purity passes already traced.
+_TRACE_CACHE = LruCache(maxsize=256)
+
+
+def trace_pair(cfg, n: int = _N, dispatch_only: bool = False):
+    """(update_jaxpr, dispatch_jaxpr) for ``cfg`` — abstract, no FLOPs.
+
+    Memoized per ``(cfg, n)`` (EngineConfig is a frozen dataclass).  With
+    ``dispatch_only=True`` the Update jaxpr may be ``None`` — the n-sweep
+    cost scans only need the Dispatch side and skip the larger trace.
+    """
     from repro.core.engine import (dispatch_layer, init_layer_state,
                                    update_layer)
+    upd = _TRACE_CACHE.get(("upd", cfg, n))
+    disp = _TRACE_CACHE.get(("disp", cfg, n))
+    if disp is not None and (upd is not None or dispatch_only):
+        return upd, disp
     p = _params()
-    x = jax.ShapeDtypeStruct((_B, _N, _DM), jnp.float32)
-    state = init_layer_state(_B, _H, _N, _DM, _DH, cfg)
-    upd = jax.make_jaxpr(
-        lambda xx, ss: update_layer(p, xx, ss, cfg, n_text=32, heads=_H,
-                                    step_idx=2, num_steps=8))(x, state)
-    _, st_sh = jax.eval_shape(
-        lambda xx, ss: update_layer(p, xx, ss, cfg, n_text=32, heads=_H,
-                                    step_idx=2, num_steps=8), x, state)
-    disp = jax.make_jaxpr(
-        lambda xx, ss: dispatch_layer(p, xx, ss, cfg, n_text=32,
-                                      heads=_H))(x, st_sh)
+    x = jax.ShapeDtypeStruct((_B, n, _DM), jnp.float32)
+    state = init_layer_state(_B, _H, n, _DM, _DH, cfg)
+
+    def upd_fn(xx, ss):
+        return update_layer(p, xx, ss, cfg, n_text=32, heads=_H,
+                            step_idx=2, num_steps=8)
+
+    if upd is None and not dispatch_only:
+        upd = _TRACE_CACHE.put(("upd", cfg, n), jax.make_jaxpr(upd_fn)(
+            x, state))
+    if disp is None:
+        _, st_sh = jax.eval_shape(upd_fn, x, state)
+        disp = _TRACE_CACHE.put(("disp", cfg, n), jax.make_jaxpr(
+            lambda xx, ss: dispatch_layer(p, xx, ss, cfg, n_text=32,
+                                          heads=_H))(x, st_sh))
     return upd, disp
+
+
+def _trace_pair(cfg):
+    """Back-compat alias at the default geometry (tests import this)."""
+    return trace_pair(cfg)
 
 
 class DispatchPurity:

@@ -79,15 +79,25 @@ def collective_bytes(hlo_text: str) -> dict:
 def sharded_dispatch_report(out_dir: Path, *, mesh_sp: int = 8,
                             density: float = 0.25,
                             pair_slack: float = 1.5) -> dict:
-    """Lower the plan-sharded dispatch and account its collective bytes.
+    """Account the plan-sharded dispatch's collective bytes statically.
 
-    Builds a small engine cell at ``cap_kv_frac = density``, lowers the
-    mesh-sharded attention (``distributed/plan_shard.mesh_attention``) and
-    a dense baseline that all-gathers the full K/V over the same mesh, and
-    reads both collective byte totals out of the compiled HLO via
-    :func:`collective_bytes`.  The plan-aware exchange ships only
-    ``mesh_sp · pair_cap`` blocks per shard (vs ``T_kv`` for the dense
-    all-gather), so at 25% density and default slack the ratio lands at
+    Builds a small engine cell at ``cap_kv_frac = density`` and traces the
+    mesh-sharded attention (``distributed/plan_shard.mesh_attention``) plus
+    a dense baseline that all-gathers the full K/V over the same mesh.  The
+    byte totals come from the STATIC cost model
+    (:func:`repro.analysis.cost_model.cost_of_jaxpr` over the jaxprs — the
+    same interpreter the ``cost-collective-bytes`` analyzer pass certifies
+    against the ``pair_cap`` formula), so the numbers are exact by
+    construction and independent of HLO lowering details.  The compiled
+    HLO is still parsed via :func:`collective_bytes`, but only as a
+    CROSS-CHECK recorded in the report: ``--sharded-gate`` asserts the HLO
+    parse sees nonzero all-to-all bytes agreeing with the static payload,
+    so a stale op regex (the PR-7 whack-a-mole) or a lowering that stops
+    matching the model both fail loudly instead of gating vacuously.
+
+    The plan-aware exchange ships only ``mesh_sp · pair_cap`` blocks per
+    shard (vs ``T_kv`` for the dense all-gather), so at 25% density and
+    default slack the ratio lands at
     ``⌈slack · cap_kv / P⌉ · P / T_kv ≈ 0.375`` — the ``--sharded-gate``
     CI flag asserts it stays below 0.5.
     """
@@ -124,12 +134,18 @@ def sharded_dispatch_report(out_dir: Path, *, mesh_sp: int = 8,
     v = E._project_heads(x, params.wv, heads)
     o_reuse = jnp.zeros((b, heads, n, dh), q.dtype)
 
+    from repro.analysis.cost_model import cost_of_jaxpr
+
     backend = get_backend(cfg)                       # MeshBackend(xla)
-    sharded = jax.jit(lambda q_, k_, v_, o_: backend.attention(
-        q_, k_, v_, o_, plan, spec))
-    coll = collective_bytes(sharded.lower(q, k, v, o_reuse).compile().as_text())
-    plan_bytes = sum(v_ for k_, v_ in coll.items()
-                     if "all-to-all" in k_ and not k_.endswith("_count"))
+
+    def attn(q_, k_, v_, o_):
+        return backend.attention(q_, k_, v_, o_, plan, spec)
+
+    # Source of truth: the static cost model over the traced jaxpr.
+    scost = cost_of_jaxpr(jax.make_jaxpr(attn)(q, k, v, o_reuse))
+    plan_bytes = scost.coll_payload.get("all_to_all", 0.0)
+    extra_kinds = {k_: v_ for k_, v_ in scost.coll_payload.items()
+                   if k_ != "all_to_all" and v_}
 
     mesh = make_engine_mesh(1, mesh_sp)
     from jax.experimental.shard_map import shard_map
@@ -144,18 +160,38 @@ def sharded_dispatch_report(out_dir: Path, *, mesh_sp: int = 8,
                     in_specs=(PS(None, None, "seq", None),) * 2,
                     out_specs=(PS(None, None, None, None),) * 2,
                     check_rep=False)
-    dcoll = collective_bytes(jax.jit(dfn).lower(k, v).compile().as_text())
-    dense_bytes = sum(v_ for k_, v_ in dcoll.items()
-                      if "all-gather" in k_ and not k_.endswith("_count"))
+    dcost = cost_of_jaxpr(jax.make_jaxpr(dfn)(k, v))
+    dense_bytes = dcost.coll_payload.get("all_gather", 0.0)
 
     t_q = m.n_blocks(n) * (m.pool // m.block_q)
     t_kv = m.n_blocks(n) * (m.pool // m.block_kv)
     geom = shard_geometry(spec, t_q, t_kv, mesh_sp, pair_slack)
+    # Closed-form expectation: one exchange per K and V of
+    # (b, heads, P·pair_cap·block_kv, dh) blocks.
+    formula_bytes = 2.0 * (b * heads * mesh_sp * geom.pair_cap
+                           * m.block_kv * dh) * q.dtype.itemsize
+
+    # Cross-check only: parse the compiled HLO with the legacy regex.
+    coll = collective_bytes(
+        jax.jit(attn).lower(q, k, v, o_reuse).compile().as_text())
+    hlo_plan = sum(v_ for k_, v_ in coll.items()
+                   if "all-to-all" in k_ and not k_.endswith("_count"))
+    dcoll = collective_bytes(jax.jit(dfn).lower(k, v).compile().as_text())
+    hlo_dense = sum(v_ for k_, v_ in dcoll.items()
+                    if "all-gather" in k_ and not k_.endswith("_count"))
+
     rec = {
         "mesh_sp": mesh_sp, "density": density, "pair_slack": pair_slack,
         "plan_collective_bytes": plan_bytes,
         "dense_collective_bytes": dense_bytes,
         "ratio": plan_bytes / dense_bytes if dense_bytes else float("inf"),
+        "formula_bytes": formula_bytes,
+        "static_extra_collectives": extra_kinds,
+        "hlo_plan_collective_bytes": hlo_plan,
+        "hlo_dense_collective_bytes": hlo_dense,
+        "hlo_crosscheck_rel_err": (abs(hlo_plan - plan_bytes)
+                                   / plan_bytes if plan_bytes else
+                                   float("inf")),
         "exchange_blocks_per_shard": exchange_blocks(geom),
         "dense_exchange_blocks": dense_exchange_blocks(t_kv),
         "sharded_hlo_collectives": coll,
@@ -268,12 +304,35 @@ def main():
     if args.sharded_gate:
         rec = sharded_dispatch_report(out_dir, mesh_sp=args.mesh_sp)
         if not rec["plan_collective_bytes"]:
-            raise SystemExit("[dryrun] sharded gate: 0 collective bytes read "
-                             "from the sharded HLO — op regex is stale")
+            raise SystemExit("[dryrun] sharded gate: static model sees 0 "
+                             "all_to_all bytes in the sharded dispatch — "
+                             "the exchange vanished from the trace")
+        if rec["plan_collective_bytes"] != rec["formula_bytes"]:
+            raise SystemExit(
+                f"[dryrun] sharded gate FAIL: static a2a payload "
+                f"{rec['plan_collective_bytes']:.0f}B != pair_cap formula "
+                f"{rec['formula_bytes']:.0f}B")
+        if rec["static_extra_collectives"]:
+            raise SystemExit(
+                f"[dryrun] sharded gate FAIL: unexpected collectives "
+                f"{rec['static_extra_collectives']} in the sharded dispatch")
         if rec["ratio"] >= 0.5:
             raise SystemExit(f"[dryrun] sharded gate FAIL: plan-aware "
                              f"exchange at {rec['ratio']:.3f}x dense (>= 0.5)")
-        print(f"[dryrun] sharded gate OK: {rec['ratio']:.3f}x dense")
+        # Cross-check: the legacy HLO-text parse must still see the same
+        # exchange, or the regex went stale / the lowering diverged.
+        if not rec["hlo_plan_collective_bytes"]:
+            raise SystemExit("[dryrun] sharded gate: 0 collective bytes read "
+                             "from the sharded HLO — op regex is stale")
+        if rec["hlo_crosscheck_rel_err"] > 0.25:
+            raise SystemExit(
+                f"[dryrun] sharded gate FAIL: HLO parse "
+                f"({rec['hlo_plan_collective_bytes']:.0f}B) disagrees with "
+                f"the static model ({rec['plan_collective_bytes']:.0f}B) by "
+                f"{rec['hlo_crosscheck_rel_err']:.1%} (> 25%)")
+        print(f"[dryrun] sharded gate OK: {rec['ratio']:.3f}x dense "
+              f"(static == pair_cap formula; HLO cross-check "
+              f"{rec['hlo_crosscheck_rel_err']:.1%})")
         return
 
     cells = []

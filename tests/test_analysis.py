@@ -337,3 +337,244 @@ def test_collective_budget_green_or_noted_skip():
     assert CollectiveBudget().run(ctx) == []
     if mesh_capacity() < 2:
         assert ctx.notes, "1-device skip must leave a note"
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: static cost model
+# ---------------------------------------------------------------------------
+
+from repro.analysis.cost_model import (CostEstimate, aval_bytes,  # noqa: E402
+                                       cost_of_jaxpr, peak_bytes_of)
+
+
+def test_cost_model_dot_general_exact():
+    m, k, n = 48, 96, 32
+    jx = jax.make_jaxpr(lambda a, b: a @ b)(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32))
+    c = cost_of_jaxpr(jx)
+    assert c.flops == 2.0 * m * n * k
+    assert c.hbm_bytes == 4.0 * (m * k + k * n + m * n)
+    assert not c.inexact and not c.coll_payload
+
+
+def test_cost_model_matches_xla_on_dense_gemm_and_attention():
+    """The headline cross-check: static count vs XLA cost_analysis."""
+    from repro.core.attention import dense_attention
+
+    def xla_flops(fn, *args):
+        c = jax.jit(fn).lower(*args).compile().cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0] if c else {}
+        return float(c.get("flops", 0.0))
+
+    gemm = lambda a, b: jnp.einsum("bnd,df->bnf", a, b)
+    a = jnp.ones((1, 128, 64))
+    b = jnp.ones((64, 32))
+    assert cost_of_jaxpr(jax.make_jaxpr(gemm)(a, b)).flops == \
+        xla_flops(gemm, a, b)
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 128, 16))
+    att = lambda q: dense_attention(q, q, q)
+    static = cost_of_jaxpr(jax.make_jaxpr(att)(q)).flops
+    measured = xla_flops(att, q)
+    assert abs(static - measured) / measured < 0.05
+
+
+def test_cost_model_scan_multiplies_by_trip_count():
+    def body_cost(xs):
+        def step(c, x):
+            return c + (x @ x), None
+        out, _ = jax.lax.scan(step, jnp.zeros((16, 16)), xs)
+        return out
+
+    c8 = cost_of_jaxpr(jax.make_jaxpr(body_cost)(jnp.ones((8, 16, 16))))
+    c16 = cost_of_jaxpr(jax.make_jaxpr(body_cost)(jnp.ones((16, 16, 16))))
+    # matmul flops dominate and scale exactly with the trip count
+    assert c16.flops == pytest.approx(2 * c8.flops, rel=1e-6)
+
+
+def test_cost_model_gather_bills_touched_bytes_not_operand():
+    """A plan-capacity gather over a big KV buffer must cost what it
+    moves — the whole point of the T_kv-independence certificate."""
+    big = jax.ShapeDtypeStruct((4096, 64), jnp.float32)   # 1 MB operand
+    ids = jnp.arange(4, dtype=jnp.int32)
+    c = cost_of_jaxpr(jax.make_jaxpr(
+        lambda x, i: jnp.take(x, i, axis=0))(big, ids))
+    assert c.hbm_bytes < 0.01 * aval_bytes(big)
+
+
+def test_cost_model_while_marks_inexact():
+    def f(x):
+        return jax.lax.while_loop(lambda v: v[0] < 10.0,
+                                  lambda v: v * 1.5, x)
+
+    assert cost_of_jaxpr(jax.make_jaxpr(f)(jnp.ones(4))).inexact
+
+
+def test_peak_bytes_sees_liveness_not_total_allocation():
+    """A chain of sequential temporaries peaks at a few buffers, far
+    below the sum of every intermediate."""
+    def chain(x):
+        for _ in range(16):
+            x = x + 1.0
+        return x
+
+    jx = jax.make_jaxpr(chain)(jnp.ones((256, 256)))
+    buf = 256 * 256 * 4
+    peak = peak_bytes_of(jx)
+    assert buf <= peak <= 4 * buf        # not 17 * buf
+
+
+def test_peak_bytes_counts_concurrently_live_buffers():
+    def wide(x):
+        a, b, c = x + 1.0, x * 2.0, x - 3.0
+        return a + b + c                 # all three live together
+
+    jx = jax.make_jaxpr(wide)(jnp.ones((128, 128)))
+    assert peak_bytes_of(jx) >= 3 * 128 * 128 * 4
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: cost passes — adversarial fixtures (each MUST be flagged)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.cost_passes import (COST_PASSES,  # noqa: E402
+                                        CollectiveBytesBudget,
+                                        DispatchCostScaling, MemoryFootprint,
+                                        PEAK_BUDGETS, UpdateAmortization,
+                                        _dense_reference_cost, _matched,
+                                        _token_reference_slope, _update_cost,
+                                        KAPPA_TOKEN, KAPPA_TOKEN_BYTES,
+                                        amortization_findings,
+                                        collective_findings,
+                                        footprint_findings,
+                                        token_scaling_findings)
+
+
+def test_dense_tkv_einsum_in_dispatch_is_flagged():
+    """A dispatch body with an O(T_kv^2) score matrix fails the
+    matched-capacity linearity certificate."""
+    def dispatch_like(x, k):
+        live = jnp.take(x, jnp.arange(32), axis=0)      # plan-capacity work
+        return live.sum() + jnp.einsum("nd,md->nm", x, k).sum()
+
+    ns = (128, 256, 384)
+    costs = [cost_of_jaxpr(jax.make_jaxpr(dispatch_like)(
+        jax.ShapeDtypeStruct((n, 16), jnp.float32),
+        jax.ShapeDtypeStruct((n, 16), jnp.float32))) for n in ns]
+    ref_f, ref_b = _token_reference_slope()
+    findings = token_scaling_findings(
+        "cost-dispatch-scaling", "fixture", costs, ns,
+        budget_flops=KAPPA_TOKEN * ref_f,
+        budget_bytes=KAPPA_TOKEN_BYTES * ref_b)
+    assert any(f.rule == "tkv-superlinear" for f in findings)
+
+
+def test_affine_dispatch_cost_passes_scaling_certificate():
+    """The positive control for the fixture above: plan-capacity-only
+    work (affine in n under the per-token budget) produces no findings."""
+    def clean(x):
+        live = jnp.take(x, jnp.arange(32), axis=0)
+        return live.sum() + x.sum()
+
+    ns = (128, 256, 384)
+    costs = [cost_of_jaxpr(jax.make_jaxpr(clean)(
+        jax.ShapeDtypeStruct((n, 16), jnp.float32))) for n in ns]
+    ref_f, ref_b = _token_reference_slope()
+    assert token_scaling_findings(
+        "cost-dispatch-scaling", "clean", costs, ns,
+        budget_flops=KAPPA_TOKEN * ref_f,
+        budget_bytes=KAPPA_TOKEN_BYTES * ref_b) == []
+
+
+def test_full_kv_allgather_is_flagged():
+    """A mesh dispatch shipping the whole KV (all_gather, no pair_cap
+    a2a) violates every line of the collective certificate — built from
+    a synthetic estimate so the test runs on one device."""
+    smuggled = CostEstimate(coll_payload={"all_gather": 65536.0},
+                            coll_count={"all_gather": 2})
+    findings = collective_findings("cost-collective-bytes", "fixture",
+                                   smuggled, expected_payload=24576.0,
+                                   dense_payload=65536.0)
+    rules = {f.rule for f in findings}
+    assert {"a2a-count", "pair-cap-formula",
+            "no-extra-collectives"} <= rules
+
+
+def test_rebuild_every_dispatch_is_flagged():
+    """dispatch cost := update cost models an engine that rebuilds the
+    plan every step — the amortization line must fail."""
+    cfg = _matched(_engine_cfg(backend="xla", kv_buckets=1), 2, 2, _N)
+    u = _update_cost(cfg, _N)
+    findings = amortization_findings(
+        "cost-update-amortization", "fixture", u, u,
+        _dense_reference_cost(_N), cfg.mask.interval)
+    assert any(f.rule == "interval-amortization" for f in findings)
+
+
+def test_memory_hog_is_flagged():
+    def hog(x):
+        big = jnp.zeros((512, 512), jnp.float32)
+        return (x[:, None] * big).sum() + x.sum()
+
+    jx = jax.make_jaxpr(hog)(jax.ShapeDtypeStruct((512,), jnp.float32))
+    assert footprint_findings("cost-memory-footprint", "fixture",
+                              peak_bytes_of(jx),
+                              PEAK_BUDGETS["dispatch_layer"])
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: cost passes — green sweep over the real engine
+# ---------------------------------------------------------------------------
+
+def test_cost_passes_green_on_real_engine():
+    """All four certificates hold on the repo (mesh combos carry a skip
+    note on one-device hosts; CI's forced-8-device `make analyze` covers
+    them)."""
+    ctx = _ctx()
+    for cls in COST_PASSES:
+        assert cls().run(ctx) == [], f"{cls.name} found regressions"
+
+
+def test_dispatch_groups_cover_backend_bucket_mesh_grid():
+    from repro.analysis.cost_passes import dispatch_groups
+    combos = list(dispatch_groups())
+    assert len(combos) == 2 * 2 * 2          # backend × kvb × mesh
+    live = [(label, cfg) for label, cfg, skip in combos if skip is None]
+    assert {c.backend for _, c in live} == {"xla", "pallas"}
+    assert {c.kv_buckets for _, c in live} == {1, 3}
+    for label, cfg, skip in combos:
+        if skip is not None:
+            assert cfg is None and "mesh" in label
+
+
+def test_cli_pass_filter_accepts_globs():
+    """`--passes cost-*` selects exactly the four cost passes; a pattern
+    matching nothing is an explicit error, not a silent no-op run."""
+    from repro.analysis import ALL_PASSES
+    import fnmatch
+    names = [p.name for p in ALL_PASSES()]
+    cost = [n for n in names if fnmatch.fnmatch(n, "cost-*")]
+    assert sorted(cost) == ["cost-collective-bytes",
+                            "cost-dispatch-scaling",
+                            "cost-memory-footprint",
+                            "cost-update-amortization"]
+    from repro.analysis.__main__ import main
+    with pytest.raises(SystemExit, match="match no pass"):
+        main(["--passes", "no-such-*", "-q"])
+
+
+def test_trace_pair_memoizes_per_cfg_and_n():
+    from repro.analysis.passes import _TRACE_CACHE, trace_pair
+    cfg = _engine_cfg(kv_buckets=1)
+    n = 160                               # off-grid: guaranteed cold key
+    before = _TRACE_CACHE.misses
+    upd1, disp1 = trace_pair(cfg, n=n)
+    upd2, disp2 = trace_pair(cfg, n=n)
+    assert upd1 is upd2 and disp1 is disp2
+    assert _TRACE_CACHE.hits > 0
+    # dispatch_only never poisons the full-pair entry
+    upd3, _ = trace_pair(cfg, n=n, dispatch_only=False)
+    assert upd3 is upd1
+    assert _TRACE_CACHE.misses > before   # first call did trace
